@@ -1,0 +1,108 @@
+"""Paper Figure 3 / Figure 4 / Table 22: memory of MeZO vs backprop-Adam FT
+vs inference, from COMPILED memory analysis (static, no allocation).
+
+Model: OPT-13B width at L=4 (per-layer memory is depth-independent), f32
+(the CPU backend float-normalizes bf16, which would distort byte counts —
+see EXPERIMENTS.md methodology note 3).
+
+Two MeZO variants are profiled:
+  * ``mezo_inplace``  — Algorithm 1's literal structure: five separately
+    donated calls (perturb / forward / perturb / forward / update); the peak
+    across phases is the paper's "same memory as inference" claim.
+  * ``mezo_fused``    — the single-jit fused step used for wall-clock speed:
+    XLA's liveness keeps ~2.2 parameter buffers (θ+εz and θ−εz overlap),
+    trading memory for scheduling freedom.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, note
+from repro.core import MeZO, MeZOConfig
+from repro.models import all_archs, bundle
+from repro.train.adam import Adam, AdamConfig
+
+SEQ = 400        # the paper profiles MultiRC, ~400 tokens/example
+BATCH = 2
+
+
+def _ma(compiled):
+    ma = compiled.memory_analysis()
+    return int(ma.argument_size_in_bytes) + int(ma.temp_size_in_bytes)
+
+
+def run():
+    base = all_archs()["opt-13b"].cfg
+    cfg = dataclasses.replace(base, n_layers=4, dtype="float32")
+    b = bundle(cfg)
+    psds = b.param_shapes()
+    specs = {"tokens": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32),
+             "loss_mask": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.float32)}
+    loss_fn = b.loss_fn()
+
+    # inference
+    peak_inf = _ma(jax.jit(loss_fn).lower(psds, specs).compile())
+
+    # MeZO, Algorithm-1 structure (the paper's per-tensor loop): each leaf's
+    # perturb/update is its OWN donated dispatch, so the device-resident set
+    # is params + one call's transients.  Peak = max(inference,
+    # params + worst per-leaf-call temps).
+    key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params_bytes = sum(int(jnp.prod(jnp.asarray(x.shape))) * x.dtype.itemsize
+                      for x in jax.tree_util.tree_leaves(psds))
+    leaves = jax.tree_util.tree_leaves(psds)
+    biggest = max(leaves, key=lambda x: x.size)
+
+    def leaf_perturb(x, k):
+        return x + 1e-3 * jax.random.normal(k, x.shape, x.dtype)
+
+    c = jax.jit(leaf_perturb, donate_argnums=(0,)) \
+        .lower(biggest, key_sds).compile()
+    ma = c.memory_analysis()
+    leaf_extra = int(ma.temp_size_in_bytes) + int(ma.output_size_in_bytes)
+    peak_inplace = max(peak_inf, params_bytes + leaf_extra)
+
+    # MeZO fused single-jit step
+    opt = MeZO(MeZOConfig(lr=1e-6, eps=1e-3))
+    ssds = jax.eval_shape(lambda: opt.init(0))
+    peak_fused = _ma(jax.jit(opt.step_fn(loss_fn), donate_argnums=(0,))
+                     .lower(psds, ssds, specs).compile())
+
+    # Adam FT
+    adam = Adam(AdamConfig(lr=1e-5))
+    asds = jax.eval_shape(adam.init, psds)
+    peak_ft = _ma(jax.jit(adam.step_fn(loss_fn), donate_argnums=(0,))
+                  .lower(psds, asds, specs).compile())
+
+    emit("memory/inference_bytes", 0.0, str(peak_inf))
+    emit("memory/mezo_inplace_bytes", 0.0, str(peak_inplace))
+    emit("memory/mezo_fused_bytes", 0.0, str(peak_fused))
+    emit("memory/ft_adam_bytes", 0.0, str(peak_ft))
+    emit("memory/mezo_inplace_over_inference", 0.0,
+         f"{peak_inplace/peak_inf:.2f}")
+    emit("memory/ft_over_inference", 0.0, f"{peak_ft/peak_inf:.2f}")
+    note(f"inference {peak_inf/1e9:.2f} GB | MeZO in-place "
+         f"{peak_inplace/1e9:.2f} GB ({peak_inplace/peak_inf:.2f}x) | "
+         f"MeZO fused {peak_fused/1e9:.2f} GB | FT-Adam {peak_ft/1e9:.2f} GB "
+         f"({peak_ft/peak_inf:.2f}x)")
+    note("the paper's 12x gap is this FT factor grown by long-seq/batch "
+         "activation stashes (B=2,S=400 keeps activations small here) and "
+         "f32 Adam moments on bf16 params (4x, not 2x, per weight byte)")
+
+    # ---- Figure 4 analytic: largest OPT per A100 budget ------------------- #
+    note("Fig.4 analytic (bf16 params, f32 Adam moments, + activations):")
+    for gb, name in ((80, "1xA100"), (160, "2xA100"), (320, "4xA100"),
+                     (640, "8xA100")):
+        mezo_max = gb / 2.2
+        ft_max = gb / 12.5
+        note(f"  {name}: FT-Adam <= {ft_max:.0f}B params; MeZO/inference <= "
+             f"{mezo_max:.0f}B params (paper 1xA100: 2.7B vs 30B)")
+    emit("memory/fig4_mezo_vs_ft_model_ratio", 0.0, f"{12.5/2.2:.1f}")
+
+
+if __name__ == "__main__":
+    run()

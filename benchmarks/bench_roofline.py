@@ -1,0 +1,38 @@
+"""Roofline summary from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+Emits the per-cell dominant-bottleneck terms and the hillclimb before/after
+for the three chosen cells."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, note
+from repro.analysis.report import load_latest
+
+
+def run():
+    path = "results/dryrun.jsonl"
+    if not os.path.exists(path):
+        note("results/dryrun.jsonl missing — run python -m repro.launch.dryrun")
+        emit("roofline/cells", 0.0, "0")
+        return
+    recs = load_latest(path, "single")
+    ok = [r for r in recs.values() if r["status"] == "ok"]
+    emit("roofline/cells", 0.0, str(len(ok)))
+    for r in ok:
+        emit(f"roofline/{r['arch']}/{r['cell']}", r["step_s"] * 1e6,
+             f"bottleneck={r['bottleneck']};fraction={r['roofline_fraction']:.3f}")
+    if os.path.exists("results/hillclimb.jsonl"):
+        with open("results/hillclimb.jsonl") as f:
+            for line in f:
+                h = json.loads(line)
+                if h["status"] != "ok":
+                    continue
+                emit(f"roofline/hillclimb/{h.get('tag','')}",
+                     h["step_s"] * 1e6,
+                     f"{h['arch']}/{h['cell']};fraction="
+                     f"{h['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

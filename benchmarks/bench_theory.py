@@ -1,0 +1,64 @@
+"""Paper Theorem 1 / Lemma 3: ZO-SGD convergence depends on the Hessian's
+local effective rank r, NOT the parameter dimension d.
+
+Setup: quadratics L(θ) = ½ θᵀ H θ with H having r eigenvalues of 1 and the
+rest ~0 — vary d at fixed r (rate should be ~constant) and vary r at fixed d
+(rate should degrade ∝ r).  This is the claim that explains why MeZO can
+fine-tune billion-parameter LMs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, note
+from repro.core import MeZO, MeZOConfig
+
+
+def steps_to_eps(d: int, r: int, seed: int = 0, eps_target: float = 0.1,
+                 lr: float = 0.02, max_steps: int = 8000) -> int:
+    key = jax.random.PRNGKey(seed)
+    diag = jnp.concatenate([jnp.ones((r,)), jnp.full((d - r,), 1e-4)])
+    theta0 = jax.random.normal(key, (d,)) * jnp.where(diag > 0.5, 1.0, 0.0)
+
+    def loss_fn(p, batch):
+        return 0.5 * jnp.sum(diag * p["w"] ** 2)
+
+    opt = MeZO(MeZOConfig(lr=lr, eps=1e-4))
+    params = {"w": theta0}
+    state = opt.init(seed)
+    step = jax.jit(opt.step_fn(loss_fn), donate_argnums=(0,))
+    l0 = float(loss_fn(params, None))
+    for s in range(max_steps):
+        params, state, m = step(params, state, None)
+        if s % 25 == 0 and float(loss_fn(params, None)) < eps_target * l0:
+            return s
+    return max_steps
+
+
+def run():
+    r = 8
+    by_d = {}
+    for d in (32, 128, 512):
+        t = int(np.median([steps_to_eps(d, r, seed=s) for s in range(3)]))
+        by_d[d] = t
+        emit(f"theory/steps_r{r}_d{d}", 0.0, str(t))
+    slowdown_d = by_d[512] / max(by_d[32], 1)
+    emit("theory/dim_slowdown_512_over_32", 0.0, f"{slowdown_d:.2f}")
+    note(f"fixed r={r}: steps {by_d} -> {slowdown_d:.2f}x for 16x more dims "
+         f"(classical bound predicts ~16x; Thm 1 predicts ~1x)")
+
+    d = 256
+    by_r = {}
+    for rr in (2, 8, 32):
+        t = int(np.median([steps_to_eps(d, rr, seed=s) for s in range(3)]))
+        by_r[rr] = t
+        emit(f"theory/steps_d{d}_r{rr}", 0.0, str(t))
+    slowdown_r = by_r[32] / max(by_r[2], 1)
+    emit("theory/rank_slowdown_32_over_2", 0.0, f"{slowdown_r:.2f}")
+    note(f"fixed d={d}: steps {by_r} -> {slowdown_r:.2f}x for 16x more rank "
+         f"(Thm 1 predicts ~16x)")
+
+
+if __name__ == "__main__":
+    run()

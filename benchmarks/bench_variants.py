@@ -1,0 +1,115 @@
+"""Paper Appendix reproductions beyond the core tables:
+
+* Tables 8/9/10 — variance/expectation-modified SPSA (D = parameter norms /
+  ZO gradient norms / normalized-gradient estimate) vs plain MeZO at equal
+  forward budget (paper: no consistent win — a negative result we confirm).
+* Table 19 — LP-MeZO: linear-probe the head with Adam first, then MeZO.
+* Table 1's ICL column — in-context learning with k demonstrations and no
+  updates, vs MeZO fine-tuning.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, note, tiny_lm
+from repro.core import MeZO, MeZOConfig
+from repro.core.mezo_variants import MeZOVariant, MeZOVariantConfig
+from repro.data.synthetic import PromptClassification
+from repro.models import bundle, transformer
+from repro.train.adam import Adam, AdamConfig
+
+STEPS = 700
+BATCH = 32
+
+
+def run():
+    cfg = tiny_lm(d_model=96, n_layers=3, vocab=256, ff=192)
+    task = PromptClassification(vocab=cfg.vocab_size, n_classes=2, seed=4)
+    b = bundle(cfg)
+    params0 = b.init(jax.random.PRNGKey(0))
+    loss_fn = b.loss_fn()
+
+    def logits_fn(p, batch):
+        return transformer.forward(cfg, p, tokens=batch["tokens"]).logits
+
+    def acc(p):
+        return task.eval_accuracy(cfg, logits_fn, p, jax.random.PRNGKey(7), 512)
+
+    def train(opt, state, steps=STEPS):
+        p = jax.tree_util.tree_map(jnp.copy, params0)
+        step = jax.jit(opt.step_fn(loss_fn), donate_argnums=(0,))
+        for s in range(steps):
+            p, state, _ = step(p, state, task.batch_for_step(s, BATCH))
+        return p
+
+    # plain MeZO reference
+    mezo = MeZO(MeZOConfig(lr=2e-4, eps=1e-3))
+    a_plain = acc(train(mezo, mezo.init(0)))
+    emit("variants/mezo_plain", 0.0, f"{a_plain:.3f}")
+
+    # Table 9: D = parameter norms
+    vcfg = MeZOVariantConfig(lr=2e-4, eps=1e-3, d_source="param_norm")
+    vopt = MeZOVariant(vcfg)
+    a_pn = acc(train(vopt, vopt.init(params0)))
+    emit("variants/d_param_norm", 0.0, f"{a_pn:.3f}")
+
+    # Table 8: D = ZO-estimated gradient norms (Proposition 1 probes)
+    vcfg = MeZOVariantConfig(lr=2e-4, eps=1e-3, d_source="grad_norm_zo")
+    vopt = MeZOVariant(vcfg)
+    a_gn = acc(train(vopt, vopt.init(params0, loss_fn,
+                                     task.batch_for_step(0, BATCH))))
+    emit("variants/d_grad_norm_zo", 0.0, f"{a_gn:.3f}")
+
+    # Table 10: expectation-modified (normalized-gradient estimate)
+    vcfg = MeZOVariantConfig(lr=2e-4, eps=1e-3, d_source="param_norm",
+                             modify_expectation=True)
+    vopt = MeZOVariant(vcfg)
+    a_em = acc(train(vopt, vopt.init(params0)))
+    emit("variants/expectation_modified", 0.0, f"{a_em:.3f}")
+    note(f"Tables 8/9/10 proxy: plain {a_plain:.3f} | D=param-norm {a_pn:.3f}"
+         f" | D=ZO-grad-norm {a_gn:.3f} | expectation-mod {a_em:.3f} "
+         f"(paper: no consistent win over plain)")
+
+    # --- Table 19: LP-MeZO ------------------------------------------------ #
+    # linear probe: Adam on the vocab head only, base frozen
+    head0 = {"head": params0["head"]}
+
+    def head_loss(hp, batch):
+        merged = dict(params0)
+        merged["head"] = hp["head"]
+        return loss_fn(merged, batch)
+
+    adam = Adam(AdamConfig(lr=5e-3, total_steps=40))
+    st = adam.init(head0)
+    hstep = jax.jit(adam.step_fn(head_loss))
+    hp = head0
+    for s in range(40):
+        hp, st, _ = hstep(hp, st, task.batch_for_step(s, BATCH))
+    lp_params = dict(params0)
+    lp_params["head"] = hp["head"]
+    a_lp = acc(lp_params)
+    emit("variants/linear_probe", 0.0, f"{a_lp:.3f}")
+
+    mezo2 = MeZO(MeZOConfig(lr=2e-4, eps=1e-3))
+    p = jax.tree_util.tree_map(jnp.copy, lp_params)
+    step = jax.jit(mezo2.step_fn(loss_fn), donate_argnums=(0,))
+    state = mezo2.init(0)
+    for s in range(STEPS):
+        p, state, _ = step(p, state, task.batch_for_step(s, BATCH))
+    a_lpmezo = acc(p)
+    emit("variants/lp_mezo", 0.0, f"{a_lpmezo:.3f}")
+    note(f"Table 19 proxy: LP {a_lp:.3f} -> LP-MeZO {a_lpmezo:.3f} "
+         f"(vs MeZO {a_plain:.3f})")
+
+    # --- Table 1 ICL column ------------------------------------------------ #
+    for k in (1, 4):
+        a_icl = task.eval_icl(cfg, logits_fn, params0, jax.random.PRNGKey(8),
+                              k_shots=k, n=256)
+        emit(f"variants/icl_{k}shot", 0.0, f"{a_icl:.3f}")
+    note("ICL on an untrained tiny LM hovers near chance — the paper's ICL "
+         "column presumes a pretrained LM; recorded for the comparison shape")
+
+
+if __name__ == "__main__":
+    run()

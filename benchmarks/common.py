@@ -1,0 +1,39 @@
+"""Shared benchmark utilities.  Every bench prints ``name,us_per_call,derived``
+CSV rows (the harness contract) plus human-readable detail to stderr."""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def note(msg: str) -> None:
+    print(f"    # {msg}", file=sys.stderr, flush=True)
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time (µs) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def tiny_lm(d_model=64, n_layers=2, vocab=256, heads=4, kv=2, ff=128):
+    """A small dense LM for CPU-scale quality benches."""
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="bench-lm", family="dense", n_layers=n_layers,
+                       d_model=d_model, n_heads=heads, n_kv_heads=kv,
+                       d_ff=ff, vocab_size=vocab, max_seq=128,
+                       dtype="float32")

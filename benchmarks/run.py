@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   Table 1 / 18 (quality)      -> bench_quality
+#   Figure 3 / 4, Table 22      -> bench_memory
+#   Table 23 (wall-clock)       -> bench_wallclock
+#   Table 11 / Table 6          -> bench_estimators
+#   Table 3 (non-differentiable)-> bench_nondiff
+#   §2.1 storage                -> bench_storage
+#   Theorem 1 / Lemma 3         -> bench_theory
+#   §Roofline (dry-run derived) -> bench_roofline
+#   Tables 8/9/10/19, ICL column -> bench_variants
+#
+# Usage: PYTHONPATH=src python -m benchmarks.run [--only quality,theory]
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("storage", "benchmarks.bench_storage"),
+    ("wallclock", "benchmarks.bench_wallclock"),
+    ("memory", "benchmarks.bench_memory"),
+    ("roofline", "benchmarks.bench_roofline"),
+    ("theory", "benchmarks.bench_theory"),
+    ("estimators", "benchmarks.bench_estimators"),
+    ("nondiff", "benchmarks.bench_nondiff"),
+    ("quality", "benchmarks.bench_quality"),
+    ("variants", "benchmarks.bench_variants"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (default: all)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"    # --- {name} ---", file=sys.stderr, flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"    # {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}/FAILED,0,error")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""MeZO × PEFT (paper §3 / App. E.5): fine-tune ONLY a LoRA or prefix tree
+with zeroth-order steps; the frozen base model is closed over.
+
+Also demonstrates the paper's App. F.3 observation: MeZO's convergence rate
+is roughly independent of the number of tuned parameters (full vs LoRA vs
+prefix), supporting the effective-rank theory.
+
+    PYTHONPATH=src python examples/mezo_peft.py
+"""
+import jax
+
+from repro.core import MeZO, MeZOConfig
+from repro.data.synthetic import PromptClassification
+from repro.models import bundle, peft
+from repro.models.config import ModelConfig
+from repro.tree_utils import tree_size
+
+STEPS = 500
+BATCH = 32
+
+
+def run_variant(name, loss_fn, tree0, lr, eps):
+    opt = MeZO(MeZOConfig(lr=lr, eps=eps))
+    state = opt.init(0)
+    step = jax.jit(opt.step_fn(loss_fn))
+    t = tree0
+    losses = []
+    for s in range(STEPS):
+        t, state, m = step(t, state, task.batch_for_step(s, BATCH))
+        if s % 50 == 0:
+            losses.append(float(m["loss"]))
+    print(f"{name:12s} params={tree_size(tree0):8d}  "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return t
+
+
+if __name__ == "__main__":
+    cfg = ModelConfig(name="peft-lm", family="dense", n_layers=3, d_model=96,
+                      n_heads=4, n_kv_heads=2, d_ff=192, vocab_size=256,
+                      max_seq=64, dtype="float32")
+    task = PromptClassification(vocab=cfg.vocab_size, n_classes=2, seed=0)
+    b = bundle(cfg)
+    base = b.init(jax.random.PRNGKey(0))
+
+    print("== MeZO full-parameter ==")
+    run_variant("full", b.loss_fn(), base, lr=2e-4, eps=1e-3)
+
+    print("== MeZO (LoRA r=8) ==")
+    lora0 = peft.init_lora(cfg, jax.random.PRNGKey(1))
+    run_variant("lora", peft.lora_loss_fn(cfg, base), lora0, lr=1e-3, eps=1e-3)
+
+    print("== MeZO (prefix m=5, real-activation init) ==")
+    pre0 = peft.init_prefix_from_tokens(cfg, base, jax.random.PRNGKey(2), m=5)
+    run_variant("prefix", peft.prefix_loss_fn(cfg, base), pre0, lr=5e-3,
+                eps=1e-1)
+    print("(paper App. F.3: similar convergence despite 100-1000x fewer params)")

@@ -1,0 +1,56 @@
+"""Batched serving demo: continuous batching over slot-recycled KV caches,
+driving a model whose "fine-tune" is a replayed MeZO seed-chain — the
+storage story end to end (train -> 0.3 KB artifact -> serve).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import jax
+
+from repro.core import MeZO, MeZOConfig, TrajectoryLedger, replay
+from repro.data.synthetic import PromptClassification
+from repro.models import bundle
+from repro.models.config import ModelConfig
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = ModelConfig(name="serve-lm", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      max_seq=128, dtype="float32")
+    b = bundle(cfg)
+    params0 = b.init(jax.random.PRNGKey(0))
+
+    # --- "fine-tune" briefly, record ONLY the scalar ledger ---------------- #
+    task = PromptClassification(vocab=cfg.vocab_size, seed=0)
+    opt = MeZO(MeZOConfig(lr=2e-4, eps=1e-3))
+    state = opt.init(0)
+    ledger = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    step = jax.jit(opt.step_fn(b.loss_fn()))
+    p = params0
+    for s in range(60):
+        p, state, m = step(p, state, task.batch_for_step(s, 16))
+        ledger.append(s, float(m["projected_grad"]), float(m["lr"]))
+    blob = ledger.to_bytes()
+    print(f"fine-tuned 60 steps; checkpoint artifact = {len(blob)} bytes")
+
+    # --- a 'serving node' reconstructs the tuned params from the blob ----- #
+    led2 = TrajectoryLedger.from_bytes(blob)
+    tuned = replay(params0, led2, opt.config)
+
+    engine = ServeEngine(cfg, tuned, slots=3, max_len=96)
+    prompts = [[10, 20, 30], [40, 50], [60, 70, 80, 90], [11, 12], [13]]
+    reqs = [Request(i, pr, max_new_tokens=8) for i, pr in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    steps = 0
+    while any(not r.done for r in reqs):
+        engine.step()
+        steps += 1
+    for r in reqs:
+        print(f"request {r.rid}: prompt {r.prompt_ids} -> {r.out_ids}")
+    print(f"served {len(reqs)} requests on 3 slots in {steps} decode steps "
+          f"(continuous batching)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end training driver: a ~100 M-parameter LM trained with MeZO for a
+few hundred steps through the full production stack — resumable step-indexed
+data pipeline, checkpoint manager, MeZO scalar ledger, crash recovery.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300          # full
+    PYTHONPATH=src python examples/train_100m.py --smoke              # tiny/CI
+
+Kill it mid-run and re-invoke: it resumes bitwise-exactly from the last full
+checkpoint + ledger tail (see tests/test_fault_tolerance.py for the proof).
+"""
+import argparse
+import os
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import MeZO, MeZOConfig, TrajectoryLedger
+from repro.data.pipeline import DataSpec, Pipeline
+from repro.models import bundle
+from repro.models.config import ModelConfig
+from repro.train.loop import HeartbeatMonitor, train
+from repro.tree_utils import tree_size
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + few steps (CI)")
+    ap.add_argument("--ckpt-dir", default="/tmp/mezo_100m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = ModelConfig(name="lm-smoke", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                          vocab_size=512, max_seq=128, dtype="float32")
+        args.steps = min(args.steps, 20)
+    else:
+        # ~100M params: 12L x d768 x ff3072, 16K vocab
+        cfg = ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                          d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                          vocab_size=16384, max_seq=1024, dtype="float32")
+
+    b = bundle(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    print(f"model {cfg.name}: {tree_size(params)/1e6:.1f} M params")
+
+    pipe = Pipeline(DataSpec("lm", batch=args.batch, seq=args.seq,
+                             vocab=cfg.vocab_size, seed=0))
+    opt = MeZO(MeZOConfig(lr=1e-5, eps=1e-3))
+    ckpt = CheckpointManager(args.ckpt_dir, interval=50, keep=2)
+    ledger = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+
+    result = train(b.loss_fn(), params, opt, pipe, total_steps=args.steps,
+                   ckpt=ckpt, ledger=ledger, monitor=HeartbeatMonitor(),
+                   log_every=20, verbose=True)
+    print(f"ran {result.steps_run} steps (resumed from {result.resumed_from})")
+    print(f"loss trajectory: {[f'{l:.3f}' for _, l in result.losses[:8]]} ...")
+    print(f"ledger: {len(ledger)} scalar entries = {ledger.nbytes()} bytes "
+          f"(the entire run, replayable)")
+    print(f"checkpoints in {args.ckpt_dir}: steps {ckpt.steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Architecture configs.  Importing this package registers every arch.
+
+Assigned pool (10 archs × their shape cells) + the paper's own models
+(OPT-13B/30B/66B, RoBERTa-large) used by the paper-claims benchmarks.
+"""
+from repro.configs import (granite_moe_3b_a800m, hymba_1_5b, mixtral_8x7b,
+                           nemotron_4_340b, opt_13b, opt_30b, opt_66b,
+                           phi_3_vision_4_2b, qwen2_0_5b, qwen2_7b,
+                           roberta_large, rwkv6_3b, whisper_large_v3, yi_6b)
+from repro.configs.shapes import ASSIGNED_ARCHS, PAPER_ARCHS
+
+__all__ = ["ASSIGNED_ARCHS", "PAPER_ARCHS"]

@@ -1,0 +1,18 @@
+"""OPT-66B (paper Table 2): 64L d_model=9216 72H d_ff=36864 vocab=50272."""
+from repro.models import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="opt-66b", family="dense",
+    n_layers=64, d_model=9216, n_heads=72, n_kv_heads=72, d_ff=36864,
+    vocab_size=50272, activation="relu", gated_ffn=False, norm="layernorm",
+    max_seq=2048, dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="opt-66b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab_size=256, activation="relu", gated_ffn=False, norm="layernorm",
+    max_seq=128, dtype="float32",
+)
+
+register("opt-66b", CONFIG, SMOKE, notes="paper's model (Table 2)")

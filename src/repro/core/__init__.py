@@ -1,0 +1,20 @@
+# The paper's primary contribution: MeZO — in-place zeroth-order optimization
+# with seed-replayed perturbations (NeurIPS 2023, Malladi et al.).
+from repro.core.mezo import MeZO, MeZOConfig, MeZOState, apply_projected_update
+from repro.core.mezo_adam import MeZOAdam, MeZOAdamConfig, MeZOAdamState
+from repro.core.perturb import (fused_restore_update, leaf_key,
+                                sample_leaf_z, sample_z_tree, step_key)
+from repro.core.perturb import perturb as perturb_params  # `perturb` is the submodule
+from repro.core.spsa import (SPSAResult, one_point_projected_grad,
+                             spsa_full_gradient_oracle, spsa_projected_grad,
+                             zo_grad_norm)
+from repro.core.trajectory import TrajectoryLedger, replay, storage_report
+
+__all__ = [
+    "MeZO", "MeZOConfig", "MeZOState", "MeZOAdam", "MeZOAdamConfig",
+    "MeZOAdamState", "apply_projected_update", "perturb_params",
+    "fused_restore_update", "sample_leaf_z", "sample_z_tree", "leaf_key",
+    "step_key", "SPSAResult", "spsa_projected_grad",
+    "spsa_full_gradient_oracle", "one_point_projected_grad", "zo_grad_norm",
+    "TrajectoryLedger", "replay", "storage_report",
+]

@@ -1,0 +1,80 @@
+"""Non-differentiable objectives for MeZO (paper §3.3, Table 3).
+
+ZO needs only function *values*, so the "loss" may be any scalar metric.
+These objectives are deliberately built from argmax / comparisons — they have
+zero gradient a.e. and backprop cannot optimize them; MeZO can.
+
+All functions return a MINIMIZATION objective (negated metric).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def negative_accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+                      mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """−accuracy of argmax predictions.  logits (..., C), labels (...)."""
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return -jnp.sum(correct * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return -jnp.mean(correct)
+
+
+def token_f1(pred_ids: jnp.ndarray, gold_ids: jnp.ndarray,
+             pad_id: int = 0) -> jnp.ndarray:
+    """Bag-of-tokens F1 between a predicted and a gold id sequence (the SQuAD
+    metric applied at the token level, vectorized / sort-free).
+
+    pred_ids, gold_ids: (B, T) int32 with pad_id padding.
+    """
+    def pair_f1(p, g):
+        pm = (p != pad_id)
+        gm = (g != pad_id)
+        # overlap = Σ_tokens min(count_pred, count_gold); computed via a
+        # pairwise-equality matrix with double-count correction.
+        eq = (p[:, None] == g[None, :]) & pm[:, None] & gm[None, :]
+        # Greedy matching bound: min(row sums, col sums) summed is an upper
+        # bound; exact multiset overlap = Σ_v min(c_p(v), c_g(v)).  Compute
+        # exactly with a vocabulary-free trick: for each pred position, count
+        # its matches among gold and among earlier equal preds.
+        p_eq_p = (p[:, None] == p[None, :]) & pm[:, None] & pm[None, :]
+        rank_p = jnp.sum(jnp.tril(p_eq_p, -1), axis=1)        # occurrence index
+        gold_count = jnp.sum(eq, axis=1)                      # count in gold
+        matched = (rank_p < gold_count) & pm
+        overlap = jnp.sum(matched.astype(jnp.float32))
+        n_p = jnp.sum(pm.astype(jnp.float32))
+        n_g = jnp.sum(gm.astype(jnp.float32))
+        prec = overlap / jnp.maximum(n_p, 1.0)
+        rec = overlap / jnp.maximum(n_g, 1.0)
+        return jnp.where(overlap > 0, 2 * prec * rec / jnp.maximum(prec + rec, 1e-9), 0.0)
+
+    return jnp.mean(jax.vmap(pair_f1)(pred_ids, gold_ids))
+
+
+def negative_f1(pred_ids: jnp.ndarray, gold_ids: jnp.ndarray,
+                pad_id: int = 0) -> jnp.ndarray:
+    return -token_f1(pred_ids, gold_ids, pad_id)
+
+
+def make_accuracy_objective(apply_fn: Callable, label_positions=None) -> Callable:
+    """Wrap a model ``apply_fn(params, batch) -> logits`` into a
+    −accuracy objective over ``batch['labels']``."""
+    def objective(params, batch):
+        logits = apply_fn(params, batch)
+        mask = batch.get("loss_mask") if isinstance(batch, dict) else None
+        return negative_accuracy(logits, batch["labels"], mask)
+    return objective
+
+
+def make_f1_objective(greedy_decode_fn: Callable, pad_id: int = 0) -> Callable:
+    """Wrap a greedy decoder ``(params, batch) -> pred_ids`` into −F1 against
+    ``batch['gold_ids']`` (paper's SQuAD-F1 setup, App. E.6)."""
+    def objective(params, batch):
+        pred = greedy_decode_fn(params, batch)
+        return negative_f1(pred, batch["gold_ids"], pad_id)
+    return objective

@@ -1,0 +1,40 @@
+"""Learning-rate / perturbation / sample-count schedules.
+
+The paper uses a constant lr for MeZO (App. E.3) and linear decay for FT; the
+n-SPSA sample schedules (constant / linear, App. A.2) are exposed for the
+Table-6 reproduction benchmark.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_at(name: str, base_lr: float, step, total_steps: int = 0,
+          warmup_steps: int = 0):
+    step = jnp.asarray(step, jnp.float32)
+    lr = jnp.float32(base_lr)
+    if name == "constant":
+        out = lr
+    elif name == "linear":
+        t = jnp.clip(step / jnp.maximum(total_steps, 1), 0.0, 1.0)
+        out = lr * (1.0 - t)
+    elif name == "cosine":
+        t = jnp.clip(step / jnp.maximum(total_steps, 1), 0.0, 1.0)
+        out = 0.5 * lr * (1.0 + jnp.cos(jnp.pi * t))
+    else:
+        raise ValueError(f"unknown lr schedule {name!r}")
+    if warmup_steps > 0:
+        warm = jnp.clip((step + 1.0) / warmup_steps, 0.0, 1.0)
+        out = out * warm
+    return out
+
+
+def n_spsa_at(name: str, base_n: int, step, total_steps: int = 0) -> int:
+    """Sample-count schedule for n-SPSA (paper App. A.2).  Python-level (the
+    step function is retraced when n changes — n changes are rare)."""
+    if name == "constant":
+        return base_n
+    if name == "linear":
+        frac = min(max(step / max(total_steps, 1), 0.0), 1.0)
+        return max(1, int(round(base_n * frac)))
+    raise ValueError(f"unknown n schedule {name!r}")

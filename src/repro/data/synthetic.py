@@ -1,0 +1,170 @@
+"""Synthetic task generators used by the paper-claims reproductions.
+
+Two kinds:
+
+1. ``lm_batch`` — stateless, step-indexed language-model batches (hash-driven
+   markov-ish token streams).  ``batch_for_step(step)`` is a pure function of
+   (seed, step), which is the fault-tolerance contract: restart at step k
+   regenerates bitwise-identical data with no iterator state to checkpoint.
+
+2. ``PromptClassification`` — a separable prompt-based classification task in
+   the style of the paper's RoBERTa experiments (App. E.2): each example is
+   `<pattern tokens> It was [label-word]`; training minimizes cross entropy
+   of the label-word token given a prompt template, evaluation measures label
+   accuracy.  Class signal is planted as token-distribution shifts so a small
+   LM can learn it in hundreds of steps on CPU — enabling MeZO-vs-FT quality
+   comparisons (Table 18 proxies) without pretrained checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# Stateless step-indexed LM stream
+# --------------------------------------------------------------------------- #
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> dict:
+    """Deterministic (seed, step) -> batch.  Tokens follow a hash-chained
+    sequence so there is learnable next-token structure."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    base = jax.random.randint(key, (batch, seq), 0, vocab, jnp.int32)
+    # plant structure: every other token is a function of its predecessor
+    shifted = (base * 1103515245 + 12345) % vocab
+    alt = jnp.arange(seq) % 2 == 1
+    tokens = jnp.where(alt[None, :], jnp.roll(shifted, 1, axis=1), base)
+    labels = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones((batch, seq), jnp.float32).at[:, -1].set(0.0)
+    return {"tokens": tokens, "labels": labels, "loss_mask": mask}
+
+
+# --------------------------------------------------------------------------- #
+# Prompt-based classification (paper App. A: MeZO NEEDS the prompt)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class PromptClassification:
+    """k-way classification rendered as an LM prompt.
+
+    Example layout (token ids), seq_len = body + 3:
+        [body tokens … class-dependent distribution …] [SEP] [label_word]
+    The loss mask covers ONLY the label-word position (prompt-based FT);
+    with ``prompt=False`` the label word is replaced by a bare class id token
+    with no template — the ablation showing MeZO fails without prompts.
+    """
+    vocab: int = 256
+    n_classes: int = 2
+    body_len: int = 29
+    seed: int = 0
+    prompt: bool = True
+
+    @property
+    def seq_len(self) -> int:
+        return self.body_len + 3
+
+    def label_word(self, cls) -> jnp.ndarray:
+        # well-separated "words" (e.g. 'great'/'terrible' analogues)
+        return 10 + 7 * jnp.asarray(cls)
+
+    def sample(self, key: jax.Array, n: int) -> dict:
+        kc, kb, kn = jax.random.split(key, 3)
+        cls = jax.random.randint(kc, (n,), 0, self.n_classes)
+        # class-dependent token distribution: class c draws from a band
+        lo = 100 + cls * 60
+        body = lo[:, None] + jax.random.randint(kb, (n, self.body_len), 0, 50)
+        noise = jax.random.randint(kn, (n, self.body_len), 0, self.vocab)
+        keep = jax.random.bernoulli(kb, 0.8, (n, self.body_len))
+        body = jnp.where(keep, body, noise)
+        sep = jnp.full((n, 1), 5, jnp.int32)          # "It was" analogue
+        if self.prompt:
+            lab = self.label_word(cls)[:, None]
+        else:
+            lab = cls[:, None] + 1                    # bare class id, no template
+        pad = jnp.zeros((n, 1), jnp.int32)
+        tokens = jnp.concatenate([body, sep, lab, pad], axis=1).astype(jnp.int32)
+        labels = jnp.roll(tokens, -1, axis=1)         # next-token targets
+        mask = jnp.zeros((n, self.seq_len), jnp.float32)
+        mask = mask.at[:, self.body_len].set(1.0)     # only the label position
+        return {"tokens": tokens, "labels": labels, "loss_mask": mask,
+                "cls": cls}
+
+    def batch_for_step(self, step: int, batch: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        return self.sample(key, batch)
+
+    def eval_accuracy(self, cfg, forward_logits, params, key: jax.Array,
+                      n: int = 256) -> float:
+        """Accuracy of argmax over the class label-words at the label slot."""
+        batch = self.sample(key, n)
+        logits = forward_logits(params, batch)        # (n, S, V)
+        slot = logits[:, self.body_len, :]
+        words = self.label_word(jnp.arange(self.n_classes))
+        pred = jnp.argmax(slot[:, words], axis=-1)
+        return float(jnp.mean((pred == batch["cls"]).astype(jnp.float32)))
+
+    def icl_batch(self, key: jax.Array, n: int, k_shots: int) -> dict:
+        """In-context learning episodes (paper Table 1's ICL column):
+        k labelled demonstrations concatenated before the test example; the
+        model predicts the test label word with NO parameter updates."""
+        ks = jax.random.split(key, k_shots + 1)
+        demo_parts = []
+        for j in range(k_shots):
+            d = self.sample(ks[j], n)
+            demo_parts.append(d["tokens"][:, :self.body_len + 2])  # body+sep+label
+        test = self.sample(ks[-1], n)
+        ctx = jnp.concatenate(
+            demo_parts + [test["tokens"][:, :self.body_len + 1]], axis=1)
+        slot = k_shots * (self.body_len + 2) + self.body_len
+        return {"tokens": ctx, "cls": test["cls"], "slot": slot}
+
+    def eval_icl(self, cfg, forward_logits, params, key: jax.Array,
+                 k_shots: int = 4, n: int = 256) -> float:
+        batch = self.icl_batch(key, n, k_shots)
+        logits = forward_logits(params, batch)
+        slot = logits[:, batch["slot"], :]
+        words = self.label_word(jnp.arange(self.n_classes))
+        pred = jnp.argmax(slot[:, words], axis=-1)
+        return float(jnp.mean((pred == batch["cls"]).astype(jnp.float32)))
+
+
+# --------------------------------------------------------------------------- #
+# Synthetic span-extraction (SQuAD-F1 proxy, paper Table 3)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class SpanExtraction:
+    """Copy task: the answer is a span of the context marked by delimiters;
+    gold output = the span tokens.  Greedy-decode F1 is the metric."""
+    vocab: int = 256
+    ctx_len: int = 24
+    span_len: int = 4
+    seed: int = 0
+
+    @property
+    def seq_len(self) -> int:
+        return self.ctx_len + 2 + self.span_len
+
+    def sample(self, key: jax.Array, n: int) -> dict:
+        kc, kp = jax.random.split(key)
+        ctx = jax.random.randint(kc, (n, self.ctx_len), 32, self.vocab, jnp.int32)
+        start = jax.random.randint(kp, (n,), 1, self.ctx_len - self.span_len - 1)
+        # mark span with delimiter token 7
+        idx = jnp.arange(self.ctx_len)[None]
+        in_span = (idx >= start[:, None]) & (idx < start[:, None] + self.span_len)
+        gold = jnp.take_along_axis(
+            ctx, start[:, None] + jnp.arange(self.span_len)[None], axis=1)
+        marked = jnp.where((idx == start[:, None] - 1) |
+                           (idx == start[:, None] + self.span_len), 7, ctx)
+        sep = jnp.full((n, 2), 9, jnp.int32)
+        tokens = jnp.concatenate([marked, sep, gold], axis=1)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.zeros((n, self.seq_len), jnp.float32)
+        mask = mask.at[:, self.ctx_len + 1:-1].set(1.0)   # answer positions
+        return {"tokens": tokens, "labels": labels, "loss_mask": mask,
+                "gold_ids": gold, "answer_start": self.ctx_len + 2,
+                "in_span": in_span}
+
+    def batch_for_step(self, step: int, batch: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        return self.sample(key, batch)

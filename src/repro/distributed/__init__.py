@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (batch_axes, infer_batch_spec,
+                                        infer_param_spec,
+                                        make_activation_resolver, param_specs,
+                                        param_shardings, tp_axes)
+
+__all__ = ["infer_param_spec", "infer_batch_spec", "param_specs",
+           "param_shardings", "make_activation_resolver", "batch_axes",
+           "tp_axes"]

@@ -1,0 +1,111 @@
+"""Bounded-staleness asynchronous MeZO — straggler mitigation (beyond-paper).
+
+Because a MeZO update is the rank-1 tensor −η·g·z(seed) with a SCALAR
+coefficient, updates commute cheaply and can be applied late: a straggling
+worker's (step, seed-id, g) contribution can reach peers a few steps after
+the fact, and every worker folds it in whenever it arrives.  Workers never
+exchange tensors — the wire format is 16 bytes per contribution.
+
+Model (synchronous-equivalent at staleness 0):
+  * each worker w at step t evaluates seed (t, w) on its batch shard and
+    broadcasts g_{t,w};
+  * a worker applies contribution (t', w') when it has it, up to
+    ``max_staleness`` steps late;
+  * convergence: stale rank-1 SGD with bounded delay — the classic
+    asynchronous-SGD regime, but with exact replay (z regenerated from the
+    seed), so workers remain bitwise-consistent once the same multiset of
+    contributions is applied.  tests/test_async_zo.py checks (a) staleness-0
+    == synchronous MeZO, (b) convergence on a quadratic under delay, and
+    (c) order-invariance of the applied updates (within fp tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mezo import MeZOConfig, apply_projected_update
+from repro.core.perturb import perturb, step_key
+from repro.tree_utils import PyTree
+
+
+@dataclasses.dataclass
+class Contribution:
+    step: int
+    worker: int
+    projected_grad: float
+    lr: float
+
+
+def worker_seed_key(base_key: jax.Array, step: int, worker: int) -> jax.Array:
+    return jax.random.fold_in(step_key(base_key, step), 1000 + worker)
+
+
+class AsyncZOWorker:
+    """One logical worker of the gossip ring (driven in-process by tests and
+    by the simulated-cluster example; a deployment pushes Contribution
+    records over its own transport)."""
+
+    def __init__(self, worker_id: int, n_workers: int, params: PyTree,
+                 loss_fn: Callable, config: MeZOConfig, base_seed: int = 0,
+                 max_staleness: int = 4):
+        self.w = worker_id
+        self.n = n_workers
+        self.params = params
+        self.loss_fn = loss_fn
+        self.c = config
+        self.base_key = jax.random.PRNGKey(base_seed)
+        self.max_staleness = max_staleness
+        self.outbox: deque[Contribution] = deque()
+        self.applied: set = set()
+        self.step = 0
+        self._jit_eval = jax.jit(self._eval)
+        self._jit_apply = jax.jit(self._apply)
+
+    # ---- local SPSA evaluation ------------------------------------------ #
+    def _eval(self, params, skey, batch):
+        p_plus = perturb(params, skey, self.c.eps, self.c.dist)
+        l_plus = self.loss_fn(p_plus, batch)
+        p_minus = perturb(p_plus, skey, -2.0 * self.c.eps, self.c.dist)
+        l_minus = self.loss_fn(p_minus, batch)
+        return (l_plus - l_minus) / (2.0 * self.c.eps), 0.5 * (l_plus + l_minus)
+
+    def _apply(self, params, skey, g, lr):
+        return apply_projected_update(params, skey, g, lr / self.n,
+                                      self.c.weight_decay, self.c.dist)
+
+    def produce(self, batch) -> Contribution:
+        """Evaluate this worker's seed for its current step."""
+        skey = worker_seed_key(self.base_key, self.step, self.w)
+        lr = float(self.c.lr_at(jnp.int32(self.step)))
+        g, _ = self._jit_eval(self.params, skey, batch)
+        contrib = Contribution(self.step, self.w, float(g), lr)
+        self.outbox.append(contrib)
+        self.step += 1
+        return contrib
+
+    def consume(self, contrib: Contribution) -> bool:
+        """Apply a (possibly remote, possibly stale) contribution."""
+        key = (contrib.step, contrib.worker)
+        if key in self.applied:
+            return False
+        if contrib.step < self.step - self.max_staleness:
+            return False          # too stale: dropped (bounded staleness)
+        skey = worker_seed_key(self.base_key, contrib.step, contrib.worker)
+        self.params = self._jit_apply(self.params, skey,
+                                      jnp.float32(contrib.projected_grad),
+                                      jnp.float32(contrib.lr))
+        self.applied.add(key)
+        return True
+
+
+def run_sync_equivalent(workers: list[AsyncZOWorker], batches_for) -> None:
+    """Drive one fully-synchronous round: every worker produces, then every
+    worker consumes every contribution (staleness 0)."""
+    contribs = [w.produce(batches_for(w.w, w.step)) for w in workers]
+    for w in workers:
+        for cb in contribs:
+            w.consume(cb)

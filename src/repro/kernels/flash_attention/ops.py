@@ -1,0 +1,24 @@
+"""jit'd wrapper matching the model-layer (B,S,H,hd) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    window: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd), causal (+optional SWA)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=True, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

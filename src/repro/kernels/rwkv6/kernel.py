@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the chunked WKV6 recurrence (RWKV-6 "Finch").
+
+Implements the same chunked matmul factorization as
+``models.rwkv6.time_mix`` (see its docstring for the math and numerics):
+within a chunk the strict-past contribution is (r̃ @ k̃ᵀ masked) @ v, the
+data-dependent per-channel decay enters through cumulated log-decays, and
+the cross-chunk state is carried *sequentially through the grid* — grid
+(B·H, n_chunks) with the chunk axis innermost, state (hd×hd) in VMEM
+scratch.  This is the TPU-native analogue of the sequential CUDA WKV kernel:
+the token loop becomes MXU matmuls, the state loop becomes the grid.
+
+Inputs per (b,h): r,k,v,lw (S, hd) with lw = log decay (< 0), u (hd,),
+s0 (hd, hd).  Outputs: y (S, hd) and the final state (hd, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CLIP = 50.0
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sout_ref,
+                state_scr, *, chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, hd)
+
+    lc = jnp.cumsum(lw, axis=0)               # inclusive within-chunk
+    lc_prev = lc - lw
+    r_t = r * jnp.exp(jnp.maximum(lc_prev, -_CLIP))
+    k_t = k * jnp.exp(jnp.minimum(-lc, _CLIP))
+
+    A = jax.lax.dot_general(r_t, k_t, (((1,), (1,)), ((), ())))   # (C, C)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(s_ids < t_ids, A, 0.0)                          # strict past
+    bonus = jnp.sum(r * u * k, axis=1, keepdims=True)             # (C, 1)
+
+    s_in = state_scr[...]
+    y = jax.lax.dot(A, v) + bonus * v + jax.lax.dot(r_t, s_in)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    dec = jnp.exp(lc[-1:, :])                                     # (1, hd)
+    k_hat = k * jnp.exp(jnp.maximum(lc[-1:, :] - lc, -_CLIP))
+    s_new = dec.T * s_in + jax.lax.dot_general(
+        k_hat, v, (((0,), (0,)), ((), ())))                       # (hd, hd)
+    state_scr[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        sout_ref[0] = s_new.astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 lw: jnp.ndarray, u: jnp.ndarray, s0: jnp.ndarray, *,
+                 chunk: int = 16, interpret: bool = True):
+    """r/k/v/lw (BH, S, hd) f32, u (BH, 1, hd), s0 (BH, hd, hd)
+    -> (y (BH, S, hd), s_final (BH, hd, hd))."""
+    BH, S, hd = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    y, s_final = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u, s0)
+    return y, s_final

@@ -1,0 +1,29 @@
+"""jit'd wrapper matching the model layer's (B,S,H,hd) tensors."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lw: jnp.ndarray,
+         u: jnp.ndarray, s0: jnp.ndarray, *, chunk: int = 16,
+         interpret: bool = True):
+    """r/k/v/lw (B,S,H,hd); u (H,hd); s0 (B,H,hd,hd)
+    -> (y (B,S,H,hd), s_final (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd).astype(jnp.float32)
+
+    u_b = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    s0_b = s0.reshape(B * H, hd, hd).astype(jnp.float32)
+    y, s_final = wkv6_chunked(fold(r), fold(k), fold(v), fold(lw),
+                              u_b.astype(jnp.float32), s0_b,
+                              chunk=chunk, interpret=interpret)
+    y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, s_final.reshape(B, H, hd, hd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: the exact per-token WKV6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, lw: jnp.ndarray,
+             u: jnp.ndarray, s0: jnp.ndarray):
+    """r/k/v/lw (BH, S, hd), u (BH, 1, hd), s0 (BH, hd, hd)
+    -> (y (BH, S, hd), s_final)."""
+    w = jnp.exp(lw.astype(jnp.float32))
+
+    def step(S_prev, xs_t):
+        r_t, k_t, v_t, w_t = xs_t                         # (BH, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (BH, hd, hd)
+        y_t = jnp.einsum("bi,bij->bj", r_t,
+                         S_prev + u[:, 0][..., :, None] * kv)
+        S_new = w_t[..., :, None] * S_prev + kv
+        return S_new, y_t
+
+    xs = (r.transpose(1, 0, 2).astype(jnp.float32),
+          k.transpose(1, 0, 2).astype(jnp.float32),
+          v.transpose(1, 0, 2).astype(jnp.float32),
+          w.transpose(1, 0, 2))
+    s_final, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), s_final

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for MeZO's fused perturb/update: y = a·x + b·z(seed).
+
+This is the paper's in-place trick taken one level further down the memory
+hierarchy: the Gaussian direction z is generated *inside VMEM*, tile by tile,
+from a counter-based hash of (seed, global element index) — z never exists in
+HBM at all.  One kernel serves all three uses in Algorithm 1 via the affine
+scalars:
+
+    perturb  +ε :  a = 1,        b = +ε
+    perturb −2ε :  a = 1,        b = −2ε
+    update      :  a = 1 − η·λ,  b = −η·g     (g = projected gradient)
+
+RNG: a murmur3-finalizer counter hash (32-bit ops only — TPU native) feeding
+a Box–Muller transform.  The identical arithmetic is implemented in pure jnp
+in ref.py, so kernel and oracle agree bit-for-bit on the generated bits.
+
+Grid: 1-D over row-blocks of the (padded) 2-D view; BlockSpec keeps one
+(block_rows × 128·lane_cols) tile of x and y in VMEM (~256 KB at f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+BLOCK_COLS = 512          # multiple of 128 lanes
+
+
+def _murmur_mix(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer (uint32)."""
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def counter_uniform(idx: jnp.ndarray, seed: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """uint32 counter + seed + salt -> uniform f32 in (0, 1)."""
+    h = idx * jnp.uint32(0x9E3779B1)                 # golden-ratio spread
+    h = h ^ (seed * jnp.uint32(0x7FEB352D))
+    h = h + jnp.uint32(salt) * jnp.uint32(0x846CA68B)
+    h = _murmur_mix(h)
+    # 24 mantissa-ish bits -> (0,1); +1 avoids exactly 0 for the log
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / 16777216.0) \
+        + (0.5 / 16777216.0)
+
+
+def gaussian_from_counter(idx: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Box–Muller on two independent counter streams."""
+    u1 = counter_uniform(idx, seed, 1)
+    u2 = counter_uniform(idx, seed, 2)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos((2.0 * jnp.pi) * u2)
+
+
+def _zo_affine_kernel(x_ref, seed_ref, a_ref, b_ref, o_ref, *, cols: int):
+    i = pl.program_id(0)
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+    a = a_ref[0, 0]
+    b = b_ref[0, 0]
+    rows = x_ref.shape[0]
+    base = jnp.uint32(i * rows * cols)
+    row_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    idx = base + row_ids * jnp.uint32(cols) + col_ids
+    z = gaussian_from_counter(idx, seed)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (a * x + b * z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zo_affine_2d(x: jnp.ndarray, seed: jnp.ndarray, a: jnp.ndarray,
+                 b: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """y = a·x + b·z on a 2-D array whose shape is (R·BLOCK_ROWS, BLOCK_COLS)."""
+    rows, cols = x.shape
+    assert rows % BLOCK_ROWS == 0 and cols == BLOCK_COLS, (rows, cols)
+    grid = (rows // BLOCK_ROWS,)
+    return pl.pallas_call(
+        functools.partial(_zo_affine_kernel, cols=cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, seed.reshape(1, 1).astype(jnp.int32),
+      jnp.asarray(a, jnp.float32).reshape(1, 1),
+      jnp.asarray(b, jnp.float32).reshape(1, 1))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the zo_fused kernel — identical counter-hash and
+Box–Muller arithmetic, evaluated array-at-once."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.zo_fused.kernel import gaussian_from_counter
+
+
+def z_for(shape: tuple, seed) -> jnp.ndarray:
+    n = 1
+    for s in shape:
+        n *= s
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    return gaussian_from_counter(idx, jnp.asarray(seed, jnp.uint32)).reshape(shape)
+
+
+def zo_affine_ref(x: jnp.ndarray, seed, a, b) -> jnp.ndarray:
+    """y = a·x + b·z with z from the same counter stream as the kernel."""
+    z = z_for(x.shape, seed)
+    return (jnp.asarray(a, jnp.float32) * x.astype(jnp.float32)
+            + jnp.asarray(b, jnp.float32) * z).astype(x.dtype)

@@ -1,0 +1,52 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run forces 512 host-platform devices while tests/benches must see 1.
+
+Mesh axes:
+  single-pod : (data=16, model=16)          — 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)   — 512 chips across 2 pods
+
+'model' is the tensor-parallel axis (intra-pod, ICI-local); 'data' (and
+'pod') carry pure data parallelism.  Under MeZO the cross-'pod' traffic is
+two f32 scalars per step — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(n_devices: int | None = None, model_parallel: int | None = None):
+    """Derive a mesh from whatever devices are alive (elastic scaling /
+    degraded restart).  Chooses the largest model axis that divides the
+    device count, capped at ``model_parallel`` (default 16)."""
+    n = n_devices if n_devices is not None else len(jax.devices())
+    cap = model_parallel or 16
+    model = 1
+    for m in range(min(cap, n), 0, -1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_ep_mesh(n_experts: int, *, multi_pod: bool = False):
+    """Expert-parallel mesh refactorization used by the MoE hillclimb: the 16
+    'model' ways are split into (expert, tp) with expert | n_experts.  Device
+    count is unchanged (256 / 512); only the logical factorization differs."""
+    ep = 1
+    for cand in (16, 8, 4, 2):
+        if n_experts % cand == 0 and 16 % cand == 0:
+            ep = cand
+            break
+    tp = 16 // ep
+    if multi_pod:
+        return jax.make_mesh((2, 16, ep, tp), ("pod", "data", "expert", "model"))
+    return jax.make_mesh((16, ep, tp), ("data", "expert", "model"))

@@ -1,0 +1,322 @@
+"""Attention: GQA / MHA, causal + sliding-window + cross, three impls:
+
+* ``xla``      — straightforward einsum attention (materializes S×S scores);
+                 reference semantics, fine for short sequences.
+* ``chunked``  — lax.scan over KV blocks with an online softmax.  This is the
+                 flash-attention *algorithm* expressed at the XLA level: O(S)
+                 live memory instead of O(S²), compiles on every backend, and
+                 is the memory-term hillclimb lever for the 32 K cells.
+* ``pallas_flash`` — the Pallas TPU kernel (repro.kernels.flash_attention);
+                 numerically identical to ``chunked``; validated in interpret
+                 mode (kernel tests), selectable for real-TPU runs.
+
+KV caches are per-layer dicts ``{"k": (B,S,KV,hd), "v": (B,S,KV,hd)}`` stacked
+over layers by the model.  Decode writes at ``cache_pos`` via
+dynamic_update_slice and attends over the full (mask-limited) cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rope_cos_sin, shard_hint
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def attention_params(cfg, kg, dtype, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    p = {
+        "wq": dense_init(kg(), (d, H * hd), dtype),
+        "wk": dense_init(kg(), (d, KV * hd), dtype),
+        "wv": dense_init(kg(), (d, KV * hd), dtype),
+        "wo": dense_init(kg(), (H * hd, d), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def project_qkv(cfg, p: dict, xq: jnp.ndarray, xkv: jnp.ndarray):
+    """xq (B,Sq,d) -> q (B,Sq,H,hd);  xkv (B,Skv,d) -> k,v (B,Skv,KV,hd)."""
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    B, Sq = xq.shape[:2]
+    Skv = xkv.shape[1]
+    q = q.reshape(B, Sq, H, hd)
+    k = k.reshape(B, Skv, KV, hd)
+    v = v.reshape(B, Skv, KV, hd)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------- #
+# Core attend (shared mask logic)
+# --------------------------------------------------------------------------- #
+def _mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+          window: int, kv_len: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Boolean mask.  window counts *inclusive* lookback tokens.
+    k_pos == −1 marks invalid (unwritten ring-buffer) slots;
+    k_pos == −2 marks prefix-tuning slots (always attendable).
+
+    Shapes: q_pos (Q,) or (B,Q); k_pos (K,) or (B,K).  Result (Q,K) in the
+    shared case, (B,Q,K) when either side is per-batch (continuous-batching
+    serving uses per-slot positions)."""
+    if q_pos.ndim == 1 and k_pos.ndim == 1:
+        qp, kp = q_pos[:, None], k_pos[None, :]
+    else:
+        qp = (q_pos if q_pos.ndim == 2 else q_pos[None])[:, :, None]
+        kp = (k_pos if k_pos.ndim == 2 else k_pos[None])[:, None, :]
+    m = kp >= 0
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    if kv_len is not None:
+        m &= kp < kv_len
+    m |= (kp == -2)
+    return m
+
+
+def attend_xla(q, k, v, *, q_pos, k_pos, causal=True, window=0, kv_len=None,
+               scale=None):
+    """q (B,Q,H,hd), k/v (B,K,KV,hd) -> (B,Q,H,hd).  GQA via head grouping."""
+    B, Q, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else (hd ** -0.5)
+    qg = q.reshape(B, Q, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    m = _mask(q_pos, k_pos, causal, window, kv_len)
+    m = m[None, None, None] if m.ndim == 2 else m[:, None, None]
+    scores = jnp.where(m, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Q, H, hd)
+
+
+def attend_chunked(q, k, v, *, q_pos, k_pos, causal=True, window=0,
+                   kv_len=None, scale=None, chunk=1024, q_chunk=0,
+                   arange_layout=False, _q_span=None):
+    """Flash-style online-softmax attention, tiled over KV (and optionally Q)
+    blocks at the XLA level.
+
+    Live memory per block is O(B·H·q_block·kv_block) instead of O(B·H·Q·S).
+    KV blocks are statically UNROLLED: (a) XLA frees each block's
+    temporaries, keeping the flash memory profile, and (b) HLO cost analysis
+    counts every block (while-loop bodies are counted once — see
+    EXPERIMENTS.md §Dry-run methodology).
+
+    ``arange_layout=True`` asserts q_pos == k_pos == arange(S) (the
+    train/prefill self-attention layout): causal Q-blocks then statically
+    skip KV blocks entirely in their future, and SWA additionally skips
+    blocks beyond the window — the flash kernel's block-sparsity, in XLA.
+    """
+    B, Q, H, hd = q.shape
+    if q_chunk and Q > q_chunk:
+        outs = []
+        for qs in range(0, Q, q_chunk):
+            qe = min(qs + q_chunk, Q)
+            outs.append(attend_chunked(
+                q[:, qs:qe], k, v, q_pos=q_pos[qs:qe], k_pos=k_pos,
+                causal=causal, window=window, kv_len=kv_len, scale=scale,
+                chunk=chunk, q_chunk=0, arange_layout=arange_layout,
+                _q_span=(qs, qe) if arange_layout else None))
+        return jnp.concatenate(outs, axis=1)
+    if arange_layout and _q_span is None:
+        _q_span = (0, Q)
+
+    S = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else (hd ** -0.5)
+    chunk = min(chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pad_spec = ((0, pad),) if k_pos.ndim == 1 else ((0, 0), (0, pad))
+        k_pos = jnp.pad(k_pos, pad_spec, constant_values=-1)
+    qg = (q.reshape(B, Q, KV, G, hd).astype(jnp.float32) * scale)
+
+    m0 = jnp.full((B, KV, G, Q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Q), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Q, hd), jnp.float32)
+    m_prev, l_prev, acc = m0, l0, a0
+    for c in range(n_chunks):
+        if _q_span is not None:
+            k_lo, k_hi = c * chunk, min((c + 1) * chunk, S) - 1
+            if causal and k_lo > _q_span[1] - 1:
+                continue            # block entirely in the future
+            if window > 0 and k_hi <= _q_span[0] - window:
+                continue            # block entirely beyond the SWA window
+        kc = k[:, c * chunk:(c + 1) * chunk]
+        vc = v[:, c * chunk:(c + 1) * chunk]
+        kpc = (k_pos[c * chunk:(c + 1) * chunk] if k_pos.ndim == 1
+               else k_pos[:, c * chunk:(c + 1) * chunk])
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kc.astype(jnp.float32))
+        msk = _mask(q_pos, kpc, causal, window, kv_len)
+        msk = msk[None, None, None] if msk.ndim == 2 else msk[:, None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        corr = jnp.exp(m_prev - m_cur)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
+        m_prev, l_prev = m_cur, l_new
+    out = acc / jnp.maximum(l_prev, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, hd).astype(q.dtype)
+
+
+def attend(cfg, q, k, v, *, arange_layout=False, **kw):
+    impl = cfg.attention_impl
+    if impl == "chunked":
+        q_chunk = getattr(cfg, "attention_q_chunk", 0)
+        return attend_chunked(q, k, v, chunk=cfg.attention_chunk,
+                              q_chunk=q_chunk, arange_layout=arange_layout,
+                              **kw)
+    if impl == "pallas_flash":
+        # TPU kernel path: only causal self-attention without caches routes to
+        # the kernel; other cases fall back to chunked (same numerics).
+        from repro.kernels.flash_attention import ops as flash_ops
+        if kw.get("causal", True) and kw.get("kv_len") is None and q.shape[1] == k.shape[1]:
+            return flash_ops.flash_attention(
+                q, k, v, window=kw.get("window", 0),
+                block_q=min(cfg.attention_chunk, 512),
+                block_k=min(cfg.attention_chunk, 512))
+        return attend_chunked(q, k, v, chunk=cfg.attention_chunk,
+                              arange_layout=arange_layout, **kw)
+    return attend_xla(q, k, v, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Block-level entry points
+# --------------------------------------------------------------------------- #
+def init_cache(cfg, batch: int, max_len: int, dtype,
+               layers: Optional[int] = None, per_slot: bool = False) -> dict:
+    """Stacked-over-layers KV cache with a slot-position array.
+
+    ``capacity`` is ``min(max_len, sliding_window)`` for SWA models: the cache
+    is a *ring buffer* indexed by absolute-position mod capacity, and ``pos``
+    records which absolute position each slot currently holds (−1 = empty).
+    This is what makes sliding-window archs (Hymba, Mixtral) O(window) in
+    decode regardless of context length.
+
+    ``per_slot=True`` gives every batch row its own position array (shape
+    (L, B, cap)) — required by the continuous-batching serving engine where
+    requests at different positions share one decode batch.
+    """
+    L = layers if layers is not None else cfg.n_layers
+    KV, hd = cfg.kv_heads, cfg.hd
+    cap = max_len if cfg.sliding_window == 0 else min(max_len, cfg.sliding_window)
+    shape = (L, batch, cap, KV, hd)
+    pos_shape = (L, batch, cap) if per_slot else (L, cap)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full(pos_shape, -1, jnp.int32)}
+
+
+def self_attention(cfg, p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                   cache: Optional[dict] = None,
+                   cache_pos: Optional[jnp.ndarray] = None):
+    """Causal (optionally sliding-window) self attention.
+
+    Training: ``cache`` is None.
+    Prefill:  ``cache`` is an empty per-layer cache; K/V written at [0, S).
+    Decode:   x is (B,1,d); ``cache_pos`` is the absolute position — a scalar
+              (lockstep batch; ``positions`` is (1,)) or a (B,) vector
+              (continuous batching; ``positions`` is (B,1) and the cache's
+              ``pos`` is (B,cap)).  Writes land at ``cache_pos % capacity``.
+    Returns (out (B,S,d), new_cache | None).
+    """
+    B, S, _ = x.shape
+    q, k, v = project_qkv(cfg, p, x, x)
+    if cfg.use_rope:
+        cos, sin = rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = shard_hint(q, "act_heads")
+    k = shard_hint(k, "act_kv_heads")
+
+    new_cache = None
+    if cache is not None and cache_pos is not None and jnp.ndim(cache_pos) == 1:
+        # per-slot decode (serving engine): one-hot scatter into each row's
+        # ring slot; per-batch position masks keep rows independent.
+        cap = cache["k"].shape[1]
+        idx = jax.lax.rem(cache_pos, cap)                        # (B,)
+        hot = idx[:, None] == jnp.arange(cap, dtype=jnp.int32)[None]  # (B,cap)
+        ck = jnp.where(hot[..., None, None], k, cache["k"])
+        cv = jnp.where(hot[..., None, None], v, cache["v"])
+        cpos = jnp.where(hot, cache_pos[:, None].astype(jnp.int32),
+                         cache["pos"])
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        out = attend(cfg, q, ck, cv, q_pos=positions, k_pos=cpos,
+                     causal=cfg.causal, window=cfg.sliding_window)
+    elif cache is not None and cache_pos is not None:
+        cap = cache["k"].shape[1]
+        idx = jax.lax.rem(cache_pos, cap)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), idx, axis=0)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        out = attend(cfg, q, ck, cv, q_pos=positions, k_pos=cpos, causal=cfg.causal,
+                     window=cfg.sliding_window)
+    else:
+        out = attend(cfg, q, k, v, q_pos=positions, k_pos=positions,
+                     causal=cfg.causal, window=cfg.sliding_window,
+                     arange_layout=True)
+        if cache is not None:
+            # Prefill into a fresh cache.  Slot for absolute position p is
+            # p % capacity (ring invariant shared with the decode path): keep
+            # the last ``cap`` tokens and roll them into their ring slots.
+            cap = cache["k"].shape[1]
+            S_keep = min(S, cap)
+            shift = S % cap if S > cap else 0
+            kk = jnp.roll(k[:, S - S_keep:], shift, axis=1)
+            vv = jnp.roll(v[:, S - S_keep:], shift, axis=1)
+            pp = jnp.roll(positions[S - S_keep:].astype(jnp.int32), shift)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kk, 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vv, 0, axis=1)
+            cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], pp, 0, axis=0)
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"], new_cache
+
+
+def cross_attention(cfg, p: dict, x: jnp.ndarray, enc_k: jnp.ndarray,
+                    enc_v: jnp.ndarray) -> jnp.ndarray:
+    """Decoder->encoder attention (Whisper).  enc_k/v (B,Senc,KV,hd) are
+    precomputed from the encoder output once per sequence."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    S_enc = enc_k.shape[1]
+    out = attend(cfg, q, enc_k, enc_v,
+                 q_pos=jnp.arange(S, dtype=jnp.int32),
+                 k_pos=jnp.arange(S_enc, dtype=jnp.int32),
+                 causal=False, window=0)
+    out = out.reshape(B, S, H * hd)
+    return out @ p["wo"]
+
+
+def precompute_cross_kv(cfg, p: dict, enc_out: jnp.ndarray):
+    B, S, _ = enc_out.shape
+    KV, hd = cfg.kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(B, S, KV, hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, KV, hd)
+    return k, v

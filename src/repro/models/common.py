@@ -1,0 +1,158 @@
+"""Shared model building blocks: norms, activations, RoPE, initializers,
+and the activation-sharding hook used by the distributed layer.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------- #
+# Activation-sharding context: models call shard_hint(x, logical_name) at key
+# points; the distributed layer installs a resolver mapping logical names to
+# PartitionSpecs.  Outside any mesh/resolver this is the identity, so model
+# code never imports mesh machinery.
+# --------------------------------------------------------------------------- #
+_tls = threading.local()
+
+
+def set_shard_resolver(fn: Optional[Callable[[str], Optional[object]]]) -> None:
+    _tls.resolver = fn
+
+
+@contextlib.contextmanager
+def shard_resolver(fn):
+    prev = getattr(_tls, "resolver", None)
+    _tls.resolver = fn
+    try:
+        yield
+    finally:
+        _tls.resolver = prev
+
+
+def shard_hint(x: jnp.ndarray, logical: str) -> jnp.ndarray:
+    """Annotate an activation with a logical sharding name.  The resolver
+    (installed by repro.distributed) maps (logical, shape) -> PartitionSpec,
+    checking divisibility; identity when no resolver is installed."""
+    fn = getattr(_tls, "resolver", None)
+    if fn is None:
+        return x
+    spec = fn(logical, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg, x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def norm_params(cfg, d: int, dtype) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# --------------------------------------------------------------------------- #
+# Activations
+# --------------------------------------------------------------------------- #
+def activation(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "sq_relu":           # Nemotron-4: squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                 dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) int -> cos/sin (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_embedding(seq: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Whisper-style absolute sinusoidal positions (S, d)."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)
+
+
+def sinusoidal_at(positions: jnp.ndarray, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Sinusoidal positional rows for arbitrary (possibly traced) positions:
+    positions (S,) -> (S, d).  Used when RoPE is disabled (OPT / RoBERTa /
+    Whisper-decoder absolute-position proxies), including decode steps."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = positions.astype(jnp.float32)[:, None] / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Initializers
+# --------------------------------------------------------------------------- #
+def dense_init(key: jax.Array, shape: tuple, dtype, fan_in: Optional[int] = None) -> jnp.ndarray:
+    fan_in = fan_in or shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic named key dispenser for param init."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self._n = 0
+
+    def __call__(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)

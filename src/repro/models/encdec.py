@@ -1,0 +1,171 @@
+"""Encoder-decoder transformer (Whisper-large-v3 backbone).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d) — see
+``models/frontends.py``.  The encoder is a non-causal transformer over those
+frames with sinusoidal positions; the decoder is a causal LM with
+cross-attention whose K/V are precomputed once per sequence (the standard
+serving optimization).
+
+Params:
+    {"enc": {"layers": …, "ln_f": …},
+     "dec": {"embed": (V,d), "layers": {… + "ln_x", "xattn"}, "ln_f", "head"}}
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.common import (KeyGen, apply_norm, dense_init, embed_init,
+                                 norm_params, shard_hint, sinusoidal_embedding)
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn, ffn_params
+
+
+def _enc_layer_params(cfg, key, dtype):
+    kg = KeyGen(key)
+    return {
+        "ln1": norm_params(cfg, cfg.d_model, dtype),
+        "attn": attn_lib.attention_params(cfg, kg, dtype),
+        "ln2": norm_params(cfg, cfg.d_model, dtype),
+        "mlp": ffn_params(cfg, kg, dtype),
+    }
+
+
+def _dec_layer_params(cfg, key, dtype):
+    kg = KeyGen(key)
+    return {
+        "ln1": norm_params(cfg, cfg.d_model, dtype),
+        "attn": attn_lib.attention_params(cfg, kg, dtype),
+        "ln_x": norm_params(cfg, cfg.d_model, dtype),
+        "xattn": attn_lib.attention_params(cfg, kg, dtype, cross=True),
+        "ln2": norm_params(cfg, cfg.d_model, dtype),
+        "mlp": ffn_params(cfg, kg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = cfg.param_dtype
+    kg = KeyGen(key)
+    enc_keys = jax.random.split(kg(), cfg.encoder_layers)
+    dec_keys = jax.random.split(kg(), cfg.n_layers)
+    return {
+        "enc": {
+            "layers": jax.vmap(lambda k: _enc_layer_params(cfg, k, dtype))(enc_keys),
+            "ln_f": norm_params(cfg, cfg.d_model, dtype),
+        },
+        "dec": {
+            "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dtype),
+            "layers": jax.vmap(lambda k: _dec_layer_params(cfg, k, dtype))(dec_keys),
+            "ln_f": norm_params(cfg, cfg.d_model, dtype),
+            "head": dense_init(kg(), (cfg.d_model, cfg.padded_vocab), dtype),
+        },
+    }
+
+
+# --------------------------------------------------------------------------- #
+def encode(cfg: ModelConfig, params: dict, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames (B, S_enc, d) precomputed embeddings -> encoder states."""
+    B, S, d = frames.shape
+    x = frames.astype(cfg.param_dtype) + sinusoidal_embedding(S, d, cfg.param_dtype)
+    x = shard_hint(x, "act_btd")
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = apply_norm(cfg, x, lp["ln1"])
+        # Non-causal self-attention: reuse the attend machinery directly.
+        q, k, v = attn_lib.project_qkv(cfg, lp["attn"], h, h)
+        out = attn_lib.attend(cfg, q, k, v, q_pos=positions, k_pos=positions,
+                              causal=False, window=0)
+        out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        x = x + out
+        x = x + ffn(cfg, lp["mlp"], apply_norm(cfg, x, lp["ln2"]))
+        x = shard_hint(x, "act_btd")
+        return x, 0
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc"]["layers"])
+    else:
+        for i in range(cfg.encoder_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["enc"]["layers"])
+            x, _ = body(x, lp)
+    return apply_norm(cfg, x, params["enc"]["ln_f"])
+
+
+class DecodeResult(NamedTuple):
+    logits: jnp.ndarray
+    cache: Optional[dict]
+
+
+def precompute_cross_kv(cfg: ModelConfig, params: dict, enc_out: jnp.ndarray):
+    """Stacked (L, B, S_enc, KV, hd) cross K/V from encoder states."""
+    def one(lp):
+        return attn_lib.precompute_cross_kv(cfg, lp["xattn"], enc_out)
+    if cfg.scan_layers:
+        ks, vs = jax.lax.map(one, params["dec"]["layers"])
+    else:
+        outs = [one(jax.tree_util.tree_map(lambda a: a[i], params["dec"]["layers"]))
+                for i in range(cfg.n_layers)]
+        ks = jnp.stack([o[0] for o in outs])
+        vs = jnp.stack([o[1] for o in outs])
+    return {"k": ks, "v": vs}
+
+
+def decode(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+           cross_kv: dict, positions: Optional[jnp.ndarray] = None,
+           cache: Optional[dict] = None, cache_pos=None) -> DecodeResult:
+    """Decoder forward (teacher forcing when cache is None; incremental when
+    cache+cache_pos given).  ``cross_kv`` from :func:`precompute_cross_kv`."""
+    dec = params["dec"]
+    x = jnp.take(dec["embed"], tokens, axis=0)
+    x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if not cfg.use_rope:
+        from repro.models.common import sinusoidal_at
+        x = x + sinusoidal_at(positions, cfg.d_model, x.dtype)[None]
+    x = shard_hint(x, "act_btd")
+    use_cache = cache is not None
+
+    def body(x, layer_in):
+        lp, xk, xv, cache_l = layer_in
+        h = apply_norm(cfg, x, lp["ln1"])
+        attn_out, new_cache_l = attn_lib.self_attention(
+            cfg, lp["attn"], h, positions,
+            cache_l if use_cache else None, cache_pos)
+        x = x + attn_out
+        hx = apply_norm(cfg, x, lp["ln_x"])
+        x = x + attn_lib.cross_attention(cfg, lp["xattn"], hx, xk, xv)
+        x = x + ffn(cfg, lp["mlp"], apply_norm(cfg, x, lp["ln2"]))
+        x = shard_hint(x, "act_btd")
+        return x, (new_cache_l if use_cache else 0)
+
+    xs = (dec["layers"], cross_kv["k"], cross_kv["v"],
+          cache if use_cache else jnp.zeros((cfg.n_layers,), jnp.int8))
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, xs)
+    else:
+        caches = []
+        for i in range(cfg.n_layers):
+            layer_in = jax.tree_util.tree_map(lambda a: a[i], xs)
+            x, nc = body(x, layer_in)
+            caches.append(nc)
+        new_cache = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *caches)
+                     if use_cache else 0)
+
+    x = apply_norm(cfg, x, dec["ln_f"])
+    logits = x @ dec["head"]
+    logits = shard_hint(logits, "act_vocab")
+    return DecodeResult(logits, new_cache if use_cache else None)
+
+
+def forward_train(cfg: ModelConfig, params: dict, frames: jnp.ndarray,
+                  tokens: jnp.ndarray) -> jnp.ndarray:
+    """End-to-end teacher-forcing forward: encode frames, decode tokens."""
+    enc_out = encode(cfg, params, frames)
+    cross_kv = precompute_cross_kv(cfg, params, enc_out)
+    return decode(cfg, params, tokens, cross_kv).logits

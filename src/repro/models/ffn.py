@@ -1,0 +1,26 @@
+"""Dense feed-forward blocks: gated (SwiGLU / GeGLU) and plain 2-matmul
+(incl. Nemotron's squared-ReLU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init, shard_hint
+
+
+def ffn_params(cfg, kg, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {"w1": dense_init(kg(), (d, ff), dtype),
+         "w2": dense_init(kg(), (ff, d), dtype, fan_in=ff)}
+    if cfg.gated_ffn:
+        p["w3"] = dense_init(kg(), (d, ff), dtype)
+    return p
+
+
+def ffn(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ p["w1"]
+    if cfg.gated_ffn:
+        h = activation(cfg.activation, h) * (x @ p["w3"])
+    else:
+        h = activation(cfg.activation, h)
+    h = shard_hint(h, "act_ff")
+    return h @ p["w2"]

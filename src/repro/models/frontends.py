@@ -1,0 +1,27 @@
+"""Modality frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+The stubs document exactly what a production frontend would compute and
+provide deterministic synthetic embeddings for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_stub_embeddings(key: jax.Array, batch: int, seq: int, d_model: int,
+                           dtype=jnp.float32) -> jnp.ndarray:
+    """Phi-3-vision: a CLIP-L/14 vision tower + projector would map image
+    crops to patch embeddings that are spliced into the token stream.  The
+    stub emits the post-projector sequence (text+patch embeddings merged)."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02
+
+
+def audio_stub_embeddings(key: jax.Array, batch: int, frames: int, d_model: int,
+                          dtype=jnp.float32) -> jnp.ndarray:
+    """Whisper: two conv1d layers (stride 1 and 2) over 128-bin log-mel
+    spectrograms produce frame embeddings at 50 Hz.  The stub emits the
+    post-conv frame sequence directly."""
+    return jax.random.normal(key, (batch, frames, d_model), dtype) * 0.02

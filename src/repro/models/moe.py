@@ -1,0 +1,88 @@
+"""Mixture-of-Experts FFN with GShard-style capacity-based top-k dispatch.
+
+Tokens are grouped (``moe_group_size``) and each group dispatches its top-k
+choices into per-expert capacity slots via one-hot einsums — the standard
+XLA-friendly formulation (no dynamic shapes, shards cleanly: the ``experts``
+dimension maps to the 'model'/'expert' mesh axis, giving expert parallelism
+when divisible, and the dispatch einsums lower to all-to-alls under EP).
+
+Capacity C = ceil(top_k · M / E · capacity_factor); overflow tokens are
+dropped (standard GShard semantics), and an auxiliary load-balancing loss is
+returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init, shard_hint
+
+
+def moe_params(cfg, kg, dtype) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": dense_init(kg(), (d, E), dtype),
+        "w1": dense_init(kg(), (E, d, ff), dtype, fan_in=d),
+        "w2": dense_init(kg(), (E, ff, d), dtype, fan_in=ff),
+    }
+    if cfg.gated_ffn:
+        p["w3"] = dense_init(kg(), (E, d, ff), dtype, fan_in=d)
+    return p
+
+
+def _capacity(cfg, group_tokens: int) -> int:
+    c = int(cfg.top_k * group_tokens / cfg.n_experts * cfg.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)     # 8-aligned for TPU lanes
+
+
+def moe_ffn(cfg, p: dict, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    M = min(cfg.moe_group_size, S)
+    assert (B * S) % M == 0, f"tokens {B*S} not divisible by group {M}"
+    G = (B * S) // M
+    C = _capacity(cfg, M)
+
+    xg = x.reshape(G, M, d)
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G,M,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (G,M,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)    # renormalize top-k
+
+    # position of each (token, k) inside its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G,M,K,E)
+    # priority: k-th choices ordered by (k, token); cumulative count per expert
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * M, E)  # (G, K*M, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat)         # (G, K*M, E)
+    pos = jnp.sum(flat * pos_in_expert, axis=-1)              # (G, K*M)
+    keep = pos < C
+    pos = pos.reshape(G, K, M).transpose(0, 2, 1)             # (G,M,K)
+    keep = keep.reshape(G, K, M).transpose(0, 2, 1)           # (G,M,K)
+
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    cap_onehot = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch (G,M,E,C) / combine weights
+    dispatch = jnp.einsum("gmke,gmkc->gmec", onehot, cap_onehot)
+    combine = jnp.einsum("gmk,gmke,gmkc->gmec", gate_vals, onehot, cap_onehot)
+
+    cdtype = x.dtype
+    expert_in = jnp.einsum("gmec,gmd->egcd", dispatch.astype(cdtype), xg)
+    expert_in = shard_hint(expert_in, "act_experts")
+
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["w1"])
+    if cfg.gated_ffn:
+        h = activation(cfg.activation, h) * jnp.einsum(
+            "egcd,edf->egcf", expert_in, p["w3"])
+    else:
+        h = activation(cfg.activation, h)
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w2"])
+    out = jnp.einsum("gmec,egcd->gmd", combine.astype(cdtype), expert_out)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                        # mean router prob
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))      # fraction routed
+    aux = E * jnp.sum(me * ce)
+
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,184 @@
+"""Parameter-efficient fine-tuning: LoRA and prefix tuning (paper §3 / App. E.5).
+
+MeZO composes with PEFT by construction: the optimizer perturbs whatever tree
+it is given.  Here the *trainable tree* is the PEFT tree; the frozen base
+params are closed over.  ``peft_loss_fn`` produces the ``loss(peft_params,
+batch)`` scalar function MeZO consumes, and the same function works for the
+backprop baselines (``jax.grad`` w.r.t. the PEFT tree).
+
+LoRA (Hu et al. 2022):   W_eff = W + (α/r)·A·B on attention q and v
+                         projections (paper's setting, r=8, α=16).
+Prefix (Li & Liang 2021): m virtual K/V pairs per layer, prepended at
+                         attention time; initialized from *real token
+                         activations* (the paper's stability trick, Tab. 17).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.attention import project_qkv
+from repro.models.common import dense_init
+from repro.models.config import ModelConfig
+
+PREFIX_POS = -2  # sentinel k_pos: always attendable (see attention._mask)
+
+
+# --------------------------------------------------------------------------- #
+# LoRA
+# --------------------------------------------------------------------------- #
+def init_lora(cfg: ModelConfig, key: jax.Array, rank: int = 8,
+              alpha: float = 16.0, targets: tuple = ("wq", "wv")) -> dict:
+    """LoRA trees for stacked attention projections.  B zero-init (standard:
+    the delta starts at exactly zero)."""
+    dtype = cfg.param_dtype
+    L, d, H, KV, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    outs = {"wq": H * hd, "wk": KV * hd, "wv": KV * hd, "wo": d}
+    tree = {}
+    for i, t in enumerate(targets):
+        k = jax.random.fold_in(key, i)
+        tree[t] = {
+            "a": dense_init(k, (L, d if t != "wo" else H * hd, rank), dtype),
+            "b": jnp.zeros((L, rank, outs[t]), dtype),
+        }
+    tree["_scale"] = jnp.asarray(alpha / rank, dtype)
+    return tree
+
+
+def merge_lora(base_params: dict, lora: dict) -> dict:
+    """Return params with W := W + (α/r)·A·B applied to the targeted stacked
+    attention leaves.  Cheap (rank-r matmuls) and traced inside the loss, so
+    MeZO's perturbation of A/B flows through exactly."""
+    scale = lora["_scale"]
+    attn = dict(base_params["layers"]["attn"])
+    for t, ab in lora.items():
+        if t.startswith("_"):
+            continue
+        delta = jnp.einsum("ldr,lro->ldo", ab["a"], ab["b"]) * scale
+        attn[t] = base_params["layers"]["attn"][t] + delta.astype(
+            base_params["layers"]["attn"][t].dtype)
+    layers = dict(base_params["layers"])
+    layers["attn"] = attn
+    out = dict(base_params)
+    out["layers"] = layers
+    return out
+
+
+def lora_loss_fn(cfg: ModelConfig, base_params: dict) -> Callable:
+    base_loss = transformer.train_loss_fn(cfg)
+    def loss(lora_params, batch):
+        return base_loss(merge_lora(base_params, lora_params), batch)
+    return loss
+
+
+# --------------------------------------------------------------------------- #
+# Prefix tuning
+# --------------------------------------------------------------------------- #
+def init_prefix(cfg: ModelConfig, key: jax.Array, m: int = 5) -> dict:
+    """Random-init prefixes (ablation baseline)."""
+    dtype = cfg.param_dtype
+    L, KV, hd = cfg.n_layers, cfg.kv_heads, cfg.hd
+    k1, k2 = jax.random.split(key)
+    return {"pk": jax.random.normal(k1, (L, m, KV, hd), dtype) * 0.02,
+            "pv": jax.random.normal(k2, (L, m, KV, hd), dtype) * 0.02}
+
+
+def init_prefix_from_tokens(cfg: ModelConfig, params: dict, key: jax.Array,
+                            m: int = 5) -> dict:
+    """The paper's real-activation init (App. E.5, Table 17): sample m random
+    vocabulary tokens, run the frozen LM, and harvest their per-layer K/V."""
+    toks = jax.random.randint(key, (1, m), 0, cfg.vocab_size)
+
+    x = jnp.take(params["embed"], toks, axis=0)
+    x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.arange(m, dtype=jnp.int32)
+
+    def body(x, lp):
+        from repro.models.common import apply_norm
+        h = apply_norm(cfg, x, lp["ln1"])
+        _, k, v = project_qkv(cfg, lp["attn"], h, h)
+        # advance x through the real block so deeper layers see real inputs
+        x_next, _, _, _ = transformer.block(cfg, lp, x, positions, None, None, None)
+        return x_next, (k[0], v[0])
+
+    _, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    return {"pk": ks.astype(cfg.param_dtype), "pv": vs.astype(cfg.param_dtype)}
+
+
+def _forward_with_prefix(cfg: ModelConfig, params: dict, prefix: dict, batch):
+    """Forward pass where each layer's attention sees [prefix_kv ; kv].
+
+    Implemented by a scan mirroring transformer.forward but concatenating the
+    per-layer prefix K/V with sentinel positions (always attendable)."""
+    from repro.models import attention as attn_lib
+    from repro.models.common import apply_norm, shard_hint
+    from repro.models.ffn import ffn
+    from repro.models.moe import moe_ffn
+    from repro.models import ssm as ssm_lib
+
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    else:
+        x = embeds.astype(cfg.param_dtype)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    m = prefix["pk"].shape[1]
+    prefix_pos = jnp.full((m,), PREFIX_POS, jnp.int32)
+
+    def body(carry, layer_in):
+        x, aux_acc = carry
+        lp, pk, pv = layer_in
+        h = apply_norm(cfg, x, lp["ln1"])
+        q, k, v = attn_lib.project_qkv(cfg, lp["attn"], h, h)
+        if cfg.use_rope:
+            from repro.models.common import apply_rope, rope_cos_sin
+            cos, sin = rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        pkb = jnp.broadcast_to(pk[None], (B,) + pk.shape).astype(k.dtype)
+        pvb = jnp.broadcast_to(pv[None], (B,) + pv.shape).astype(v.dtype)
+        k_all = jnp.concatenate([pkb, k], axis=1)
+        v_all = jnp.concatenate([pvb, v], axis=1)
+        k_pos = jnp.concatenate([prefix_pos, positions])
+        out = attn_lib.attend(cfg, q, k_all, v_all, q_pos=positions,
+                              k_pos=k_pos, causal=True,
+                              window=cfg.sliding_window)
+        out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ lp["attn"]["wo"]
+        if cfg.family == "hybrid":
+            hs = apply_norm(cfg, x, lp["ln_ssm"])
+            ssm_out, _ = ssm_lib.ssm_scan(cfg, lp["ssm"], hs, None)
+            mix = lp["mix"].astype(out.dtype)
+            x = x + mix[0] * out + mix[1] * ssm_out
+        else:
+            x = x + out
+        h2 = apply_norm(cfg, x, lp["ln2"])
+        aux = jnp.float32(0.0)
+        if cfg.n_experts:
+            mo, aux = moe_ffn(cfg, lp["moe"], h2)
+            x = x + mo
+        else:
+            x = x + ffn(cfg, lp["mlp"], h2)
+        x = shard_hint(x, "act_btd")
+        return (x, aux_acc + aux), 0
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               (params["layers"], prefix["pk"], prefix["pv"]))
+    x = apply_norm(cfg, x, params["ln_f"])
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head, aux
+
+
+def prefix_loss_fn(cfg: ModelConfig, base_params: dict) -> Callable:
+    def loss(prefix_params, batch):
+        logits, aux = _forward_with_prefix(cfg, base_params, prefix_params, batch)
+        return transformer.lm_loss(cfg, logits, batch["labels"],
+                                   batch.get("loss_mask"), aux)
+    return loss

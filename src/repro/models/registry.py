@@ -1,0 +1,227 @@
+"""Architecture registry: uniform init / train-loss / prefill / decode entry
+points per family, plus ``input_specs`` (ShapeDtypeStruct stand-ins, no
+allocation) for the multi-pod dry-run.
+
+Step-function signatures (what dryrun.py lowers):
+  train   loss_fn(params, batch)                        — inside a MeZO step
+  prefill prefill_fn(params, batch)   -> (logits, cache-or-state)
+  decode  decode_fn(params, batch)    -> (logits, cache-or-state)
+          where batch carries {"token", "cache"/"state", "cache_pos", …}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import encdec, rwkv6, ssm as ssm_lib, transformer
+from repro.models.config import ModelConfig, ShapeCell
+
+_REGISTRY: dict[str, "Arch"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """A registered architecture: production config + reduced smoke config."""
+    arch_id: str
+    cfg: ModelConfig
+    smoke_cfg: ModelConfig
+    notes: str = ""
+
+
+def register(arch_id: str, cfg: ModelConfig, smoke_cfg: ModelConfig,
+             notes: str = "") -> Arch:
+    arch = Arch(arch_id, cfg, smoke_cfg, notes)
+    _REGISTRY[arch_id] = arch
+    return arch
+
+
+def get(arch_id: str) -> Arch:
+    if arch_id not in _REGISTRY:
+        import repro.configs  # noqa: F401  (registers everything)
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> dict[str, Arch]:
+    import repro.configs  # noqa: F401
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------- #
+class Bundle:
+    """Callable surface for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- init ---------------------------------------------------------- #
+    def init(self, key: jax.Array) -> dict:
+        if self.cfg.family == "ssm":
+            return rwkv6.init_params(self.cfg, key)
+        if self.cfg.family == "encdec":
+            return encdec.init_params(self.cfg, key)
+        return transformer.init_params(self.cfg, key)
+
+    def param_shapes(self) -> Any:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ---- training loss (the function MeZO evaluates twice) -------------- #
+    def loss_fn(self) -> Callable:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            def loss(params, batch):
+                logits, _ = rwkv6.forward(cfg, params, tokens=batch["tokens"])
+                return transformer.lm_loss(cfg, logits, batch["labels"],
+                                           batch.get("loss_mask"))
+            return loss
+        if cfg.family == "encdec":
+            def loss(params, batch):
+                logits = encdec.forward_train(cfg, params, batch["frames"],
+                                              batch["tokens"])
+                return transformer.lm_loss(cfg, logits, batch["labels"],
+                                           batch.get("loss_mask"))
+            return loss
+        return transformer.train_loss_fn(cfg)
+
+    # ---- serving ---------------------------------------------------------- #
+    def prefill_fn(self) -> Callable:
+        cfg = self.cfg
+
+        def prefill(params, batch):
+            if cfg.family == "ssm":
+                logits, state = rwkv6.forward(cfg, params, tokens=batch["tokens"],
+                                              state=rwkv6.init_rwkv_state(
+                                                  cfg, batch["tokens"].shape[0]))
+                return logits[:, -1:], state
+            if cfg.family == "encdec":
+                enc_out = encdec.encode(cfg, params, batch["frames"])
+                cross_kv = encdec.precompute_cross_kv(cfg, params, enc_out)
+                B = batch["frames"].shape[0]
+                cache = attn_lib.init_cache(cfg, B, cfg.max_seq, cfg.param_dtype)
+                r = encdec.decode(cfg, params, batch["tokens"], cross_kv,
+                                  cache=cache, cache_pos=jnp.int32(0))
+                return r.logits[:, -1:], (r.cache, cross_kv)
+            tokens = batch.get("tokens")
+            embeds = batch.get("embeds")
+            B = (tokens if tokens is not None else embeds).shape[0]
+            S = (tokens if tokens is not None else embeds).shape[1]
+            cache = attn_lib.init_cache(cfg, B, max(S, cfg.max_seq), cfg.param_dtype)
+            ssm_state = (ssm_lib.init_ssm_state(cfg, B)
+                         if cfg.family == "hybrid" else None)
+            # cache_pos=None -> prefill-write path (ring-rolled for SWA)
+            r = transformer.forward(cfg, params, tokens=tokens, embeds=embeds,
+                                    cache=cache, cache_pos=None,
+                                    ssm_state=ssm_state)
+            if cfg.family == "hybrid":
+                return r.logits[:, -1:], (r.cache, r.ssm_state)
+            return r.logits[:, -1:], r.cache
+
+        return prefill
+
+    def decode_fn(self) -> Callable:
+        cfg = self.cfg
+
+        def decode(params, batch):
+            pos = batch["cache_pos"]
+            if jnp.ndim(pos) == 1:          # per-slot (continuous batching)
+                positions = pos[:, None].astype(jnp.int32)          # (B,1)
+            else:                            # lockstep batch
+                positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+            if cfg.family == "ssm":
+                logits, state = rwkv6.forward(cfg, params, tokens=batch["token"],
+                                              state=batch["state"])
+                return logits, state
+            if cfg.family == "encdec":
+                r = encdec.decode(cfg, params, batch["token"], batch["cross_kv"],
+                                  positions=positions, cache=batch["cache"],
+                                  cache_pos=pos)
+                return r.logits, r.cache
+            ssm_state = batch.get("state") if cfg.family == "hybrid" else None
+            r = transformer.forward(cfg, params, tokens=batch.get("token"),
+                                    embeds=batch.get("embed"),
+                                    positions=positions, cache=batch["cache"],
+                                    cache_pos=pos, ssm_state=ssm_state)
+            if cfg.family == "hybrid":
+                return r.logits, (r.cache, r.ssm_state)
+            return r.logits, r.cache
+
+        return decode
+
+    # ---- dry-run input specs (ShapeDtypeStruct; never allocates) --------- #
+    def input_specs(self, cell: ShapeCell) -> dict:
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32, f32 = jnp.int32, jnp.float32
+        dt = cfg.param_dtype
+        sds = jax.ShapeDtypeStruct
+
+        def tok(shape):
+            return sds(shape, i32)
+
+        if cell.kind == "train":
+            if cfg.family == "encdec":
+                return {"frames": sds((B, S, cfg.d_model), dt),
+                        "tokens": tok((B, S)), "labels": tok((B, S)),
+                        "loss_mask": sds((B, S), f32)}
+            if cfg.frontend == "vision_stub":
+                return {"embeds": sds((B, S, cfg.d_model), dt),
+                        "labels": tok((B, S)), "loss_mask": sds((B, S), f32)}
+            return {"tokens": tok((B, S)), "labels": tok((B, S)),
+                    "loss_mask": sds((B, S), f32)}
+
+        if cell.kind == "prefill":
+            if cfg.family == "encdec":
+                return {"frames": sds((B, S, cfg.d_model), dt),
+                        "tokens": tok((B, 1))}
+            if cfg.frontend == "vision_stub":
+                return {"embeds": sds((B, S, cfg.d_model), dt)}
+            return {"tokens": tok((B, S))}
+
+        # decode: one new token against a seq_len-long context
+        specs = {"token": tok((B, 1)), "cache_pos": sds((), i32)}
+        if cfg.family == "ssm":
+            st = jax.eval_shape(lambda: rwkv6.init_rwkv_state(cfg, B))
+            specs["state"] = st
+            del specs["cache_pos"]
+            specs["cache_pos"] = sds((), i32)
+            return specs
+        cache = jax.eval_shape(
+            lambda: attn_lib.init_cache(cfg, B, S, cfg.param_dtype))
+        specs["cache"] = cache
+        if cfg.family == "hybrid":
+            specs["state"] = jax.eval_shape(
+                lambda: ssm_lib.init_ssm_state(cfg, B))
+        if cfg.family == "encdec":
+            # realistic encoder extent for the decode cells (Whisper: 1500
+            # frames ≈ 30 s audio); the 32 K/500 K axis is the decoder cache.
+            s_enc = 1504
+            KV, hd, L = cfg.kv_heads, cfg.hd, cfg.n_layers
+            specs["cross_kv"] = {"k": sds((L, B, s_enc, KV, hd), dt),
+                                 "v": sds((L, B, s_enc, KV, hd), dt)}
+        return specs
+
+    # ---- smoke-test batch (small, actual arrays) ------------------------- #
+    def make_batch(self, key: jax.Array, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        out: dict = {}
+        if cfg.family == "encdec":
+            out["frames"] = jax.random.normal(k3, (batch, seq, cfg.d_model),
+                                              cfg.param_dtype) * 0.02
+            out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+        elif cfg.frontend == "vision_stub":
+            out["embeds"] = jax.random.normal(k3, (batch, seq, cfg.d_model),
+                                              cfg.param_dtype) * 0.02
+        else:
+            out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+        out["labels"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size)
+        out["loss_mask"] = jnp.ones((batch, seq), jnp.float32)
+        return out
+
+
+def bundle(cfg_or_arch) -> Bundle:
+    cfg = cfg_or_arch.cfg if isinstance(cfg_or_arch, Arch) else cfg_or_arch
+    return Bundle(cfg)

@@ -1,0 +1,311 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Per layer: TimeMix (the WKV6 linear recurrence) + ChannelMix.  The WKV state
+is O(H·hd²) per sequence regardless of length — this is why rwkv6 runs the
+long_500k cell natively.
+
+TimeMix recurrence (per head, key index i, value index j):
+
+    S_t[i,j] = w_t[i] · S_{t−1}[i,j] + k_t[i] · v_t[j]
+    y_t[j]   = Σ_i r_t[i] · (S_{t−1}[i,j] + u[i] · k_t[i] · v_t[j])
+
+with w_t = exp(−exp(w0 + lora_w(x_w))) the *data-dependent decay* (the Finch
+novelty vs RWKV5), r/k/v/g from token-shifted lerps.  Training uses a
+``lax.scan`` over time (the chunked-matmul Pallas kernel in
+``repro.kernels.rwkv6`` is the MXU-friendly variant); decode is a single
+recurrence step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dense_init, embed_init, rmsnorm, shard_hint
+
+LORA_R = 64
+
+
+class RWKVLayerState(NamedTuple):
+    shift_tm: jnp.ndarray     # (B, d) last token for TimeMix token-shift
+    shift_cm: jnp.ndarray     # (B, d) last token for ChannelMix token-shift
+    wkv: jnp.ndarray          # (B, H, hd, hd) recurrence state (f32)
+
+
+def rwkv_layer_params(cfg, kg: KeyGen, dtype) -> dict:
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    inner = H * hd
+    return {
+        "tm": {
+            "norm_scale": jnp.zeros((d,), dtype),
+            "mu_r": jnp.full((d,), 0.5, dtype),
+            "mu_k": jnp.full((d,), 0.5, dtype),
+            "mu_v": jnp.full((d,), 0.5, dtype),
+            "mu_g": jnp.full((d,), 0.5, dtype),
+            "mu_w": jnp.full((d,), 0.5, dtype),
+            "wr": dense_init(kg(), (d, inner), dtype),
+            "wk": dense_init(kg(), (d, inner), dtype),
+            "wv": dense_init(kg(), (d, inner), dtype),
+            "wg": dense_init(kg(), (d, inner), dtype),
+            "wo": dense_init(kg(), (inner, d), dtype, fan_in=inner),
+            "w0": jnp.full((H, hd), -1.0, dtype),      # base decay logit
+            "w_lora_a": dense_init(kg(), (d, LORA_R), dtype),
+            "w_lora_b": (jnp.zeros((LORA_R, inner), dtype)),
+            "u": jnp.zeros((H, hd), dtype),            # first-token bonus
+            "ln_out_scale": jnp.zeros((inner,), dtype),
+        },
+        "cm": {
+            "norm_scale": jnp.zeros((d,), dtype),
+            "mu_k": jnp.full((d,), 0.5, dtype),
+            "mu_r": jnp.full((d,), 0.5, dtype),
+            "wk": dense_init(kg(), (d, cfg.d_ff), dtype),
+            "wv": dense_init(kg(), (cfg.d_ff, d), dtype, fan_in=cfg.d_ff),
+            "wr": dense_init(kg(), (d, d), dtype),
+        },
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """xx_t = x_{t-1}; position 0 uses ``last`` (carried state) or zeros."""
+    B, S, d = x.shape
+    first = jnp.zeros((B, 1, d), x.dtype) if last is None else last[:, None, :]
+    return jnp.concatenate([first, x[:, :-1, :]], axis=1)
+
+
+def _tm_projections(cfg, p: dict, x: jnp.ndarray, state):
+    """Shared TimeMix input path: token shift, lerps, projections, decay."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xn = rmsnorm(x, p["norm_scale"])
+    xx = _token_shift(xn, state.shift_tm if state is not None else None)
+
+    def lerp(mu):
+        return xn + (xx - xn) * mu.astype(xn.dtype)
+
+    r = (lerp(p["mu_r"]) @ p["wr"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (lerp(p["mu_k"]) @ p["wk"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (lerp(p["mu_v"]) @ p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["wg"])                     # (B,S,H*hd)
+    w_in = lerp(p["mu_w"])
+    w_logit = (w_in @ p["w_lora_a"]) @ p["w_lora_b"]               # (B,S,H*hd)
+    w_logit = w_logit.reshape(B, S, H, hd) + p["w0"].astype(w_logit.dtype)
+    # per-channel log decay, data-dependent (Finch): log w = −exp(logit) < 0.
+    # The logit is clamped to [−8, 1] (decay rate ≤ e per token, as in the
+    # official RWKV6 setup) so that the chunked factorization's exponent range
+    # C·rate stays within f32 (chunk 16 → ≤ 43.5; see time_mix docstring).
+    logw = -jnp.exp(jnp.clip(w_logit.astype(jnp.float32), -8.0, 1.0))
+    u = p["u"].astype(jnp.float32)
+    wkv0 = (state.wkv if state is not None
+            else jnp.zeros((B, H, hd, hd), jnp.float32))
+    return xn, r, k, v, g, logw, u, wkv0
+
+
+def _tm_output(cfg, p: dict, x, xn, y, g):
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, cfg.n_heads * cfg.hd)
+    y = rmsnorm(y, p["ln_out_scale"])                              # group-ish norm
+    out = (y * g.astype(y.dtype)) @ p["wo"]
+    return out.astype(x.dtype), xn[:, -1, :]
+
+
+_CLIP = 50.0  # f32 overflow guard; never active in the valid decay regime
+              # (rate ≤ e, chunk 16 → exponents ≤ 43.5)
+
+
+def time_mix(cfg, p: dict, x: jnp.ndarray, state: Optional[RWKVLayerState]):
+    """WKV6 in chunked matmul form (no sequential while-loop).
+
+    With lc = cumsum(log w) within a chunk, the strict-past contribution is
+        y_t += Σ_{s<t} (r_t·Π_{s+1..t−1}w ⊙ k_s) v_s
+             = Σ_{s<t} (r̃_t · k̃_s) v_s,   r̃_t = r_t·e^{lc_{t−1}},
+                                            k̃_s = k_s·e^{−lc_s}
+    — a causal linear-attention matmul; the bonus term is the diagonal, the
+    carried state enters as r̃ @ S_in, and chunk states compose by a log-depth
+    associative_scan.
+
+    Numerics: the k̃ factor grows as e^{rate·C}; with the decay-rate clamp
+    (≤ e per token, see _tm_projections) and chunk C = 16 the exponent is
+    ≤ 43.5, well inside f32 — the factorization is then EXACT (products are
+    the true ≤ O(1) weights; only the factors are large).  _CLIP = 50 is a
+    pure overflow guard.  This is the MXU-native WKV the Pallas kernel
+    (repro.kernels.rwkv6) implements tile-wise; ``time_mix_ref`` is the exact
+    recurrence oracle.
+    """
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    if S == 1 and state is not None:
+        return time_mix_decode(cfg, p, x, state)
+    xn, r, k, v, g, logw, u, wkv0 = _tm_projections(cfg, p, x, state)
+
+    C = min(cfg.scan_chunk, S)
+    S_real = S
+    if S % C:
+        # pad with identity tokens: log w = 0 (decay 1), k = v = r = 0 —
+        # the state passes through untouched; padded rows sliced off below.
+        pad = C - S % C
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, pad4)
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+        logw = jnp.pad(logw, pad4)
+        S = S + pad
+    nc = S // C
+    rc = r.reshape(B, nc, C, H, hd)
+    kc = k.reshape(B, nc, C, H, hd)
+    vc = v.reshape(B, nc, C, H, hd)
+    lw = logw.reshape(B, nc, C, H, hd)
+    lc = jnp.cumsum(lw, axis=2)                                    # inclusive
+    lc_prev = lc - lw                                              # exclusive (lc_{t-1})
+
+    r_t = rc * jnp.exp(jnp.maximum(lc_prev, -_CLIP))               # r̃ (≤ 1 safe)
+    k_t = kc * jnp.exp(jnp.minimum(-lc, _CLIP))                    # k̃ (clipped)
+    A = jnp.einsum("bnchd,bnshd->bnhcs", r_t, k_t)                 # (B,nc,H,C,C)
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), -1)              # strict past
+    A = A * tri[None, None, None]
+    bonus = jnp.einsum("bnchd,bnchd->bnch", rc, u[None, None, None] * kc)
+    y = jnp.einsum("bnhcs,bnshd->bnchd", A, vc)
+    y = y + bonus[..., None] * vc                                  # diagonal term
+    # carried-state contribution: r̃_t @ S_in
+    dec_chunk = jnp.exp(lc[:, :, -1])                              # (B,nc,H,hd)
+    k_hat = kc * jnp.exp(jnp.maximum(lc[:, :, -1:] - lc, -_CLIP))  # ≤ 1 safe
+    s_loc = jnp.einsum("bnchi,bnchj->bnhij", k_hat, vc)            # (B,nc,H,hd,hd)
+
+    def combine(left, right):
+        d1, s1 = left
+        d2, s2 = right
+        return d1 * d2, d2[..., None] * s1 + s2
+
+    dec_all, s_all = jax.lax.associative_scan(combine, (dec_chunk, s_loc), axis=1)
+    dec_in = jnp.concatenate([jnp.ones_like(dec_chunk[:, :1]),
+                              dec_all[:, :-1]], axis=1)
+    s_prev = jnp.concatenate([jnp.zeros_like(s_loc[:, :1]),
+                              s_all[:, :-1]], axis=1)
+    s_in = dec_in[..., None] * wkv0[:, None] + s_prev              # (B,nc,H,hd,hd)
+    wkv_final = dec_all[:, -1][..., None] * wkv0 + s_all[:, -1]
+    y = y + jnp.einsum("bnchi,bnhij->bnchj", r_t, s_in)
+
+    y = y.reshape(B, S, H, hd)[:, :S_real]
+    out, shift = _tm_output(cfg, p, x, xn, y, g)
+    return out, (shift, wkv_final)
+
+
+def time_mix_ref(cfg, p: dict, x: jnp.ndarray, state: Optional[RWKVLayerState]):
+    """Exact per-token recurrence (lax.scan) — the test oracle."""
+    B, S, d = x.shape
+    xn, r, k, v, g, logw, u, wkv0 = _tm_projections(cfg, p, x, state)
+    w = jnp.exp(logw)
+
+    rs = r.transpose(1, 0, 2, 3)
+    ks = k.transpose(1, 0, 2, 3)
+    vs = v.transpose(1, 0, 2, 3)
+    ws = w.transpose(1, 0, 2, 3)
+
+    def step(S_prev, xs_t):
+        r_t, k_t, v_t, w_t = xs_t                                   # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]                  # (B,H,hd,hd)
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t, S_prev + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S_prev + kv
+        return S_new, y_t
+
+    wkv_final, ys = jax.lax.scan(step, wkv0, (rs, ks, vs, ws))
+    y = ys.transpose(1, 0, 2, 3)
+    out, shift = _tm_output(cfg, p, x, xn, y, g)
+    return out, (shift, wkv_final)
+
+
+def time_mix_decode(cfg, p: dict, x: jnp.ndarray, state: RWKVLayerState):
+    """Single-token step: one rank-1 state update (O(1) per token)."""
+    xn, r, k, v, g, logw, u, wkv0 = _tm_projections(cfg, p, x, state)
+    r1, k1, v1 = r[:, 0], k[:, 0], v[:, 0]
+    w1 = jnp.exp(logw[:, 0])
+    kv = k1[..., :, None] * v1[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", r1, wkv0 + u[None, :, :, None] * kv)
+    wkv_new = w1[..., :, None] * wkv0 + kv
+    out, shift = _tm_output(cfg, p, x, xn, y[:, None], g)
+    return out, (shift, wkv_new)
+
+
+def channel_mix(cfg, p: dict, x: jnp.ndarray, state: Optional[RWKVLayerState]):
+    xn = rmsnorm(x, p["norm_scale"])
+    xx = _token_shift(xn, state.shift_cm if state is not None else None)
+    xk = xn + (xx - xn) * p["mu_k"].astype(xn.dtype)
+    xr = xn + (xx - xn) * p["mu_r"].astype(xn.dtype)
+    k = jax.nn.relu(xk @ p["wk"])
+    k = k * k                                                       # relu²
+    k = shard_hint(k, "act_ff")
+    kv = k @ p["wv"]
+    out = jax.nn.sigmoid(xr @ p["wr"]) * kv
+    return out.astype(x.dtype), xn[:, -1, :]
+
+
+def rwkv_block(cfg, p: dict, x: jnp.ndarray,
+               state: Optional[RWKVLayerState] = None):
+    tm_out, (shift_tm, wkv) = time_mix(cfg, p["tm"], x, state)
+    x = x + tm_out
+    cm_out, shift_cm = channel_mix(cfg, p["cm"], x, state)
+    x = x + cm_out
+    return x, RWKVLayerState(shift_tm, shift_cm, wkv)
+
+
+def init_rwkv_state(cfg, batch: int) -> RWKVLayerState:
+    """Stacked-over-layers recurrent state."""
+    L, d, H, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.hd
+    dt = cfg.param_dtype
+    return RWKVLayerState(
+        shift_tm=jnp.zeros((L, batch, d), dt),
+        shift_cm=jnp.zeros((L, batch, d), dt),
+        wkv=jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Full model (family = "ssm")
+# --------------------------------------------------------------------------- #
+def init_params(cfg, key: jax.Array) -> dict:
+    dtype = cfg.param_dtype
+    kg = KeyGen(key)
+    layer_keys = jax.random.split(kg(), cfg.n_layers)
+    layers = jax.vmap(lambda k: rwkv_layer_params(cfg, KeyGen(k), dtype))(layer_keys)
+    return {
+        "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dtype),
+        "ln_in_scale": jnp.zeros((cfg.d_model,), dtype),
+        "layers": layers,
+        "ln_f_scale": jnp.zeros((cfg.d_model,), dtype),
+        "head": dense_init(kg(), (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+def forward(cfg, params: dict, *, tokens: jnp.ndarray,
+            state: Optional[RWKVLayerState] = None):
+    """tokens (B,S) -> (logits (B,S,V), new_state).  ``state`` is the
+    stacked-over-layers recurrent state; pass it for decode (S may be 1),
+    None for training-from-scratch."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = rmsnorm(x, params["ln_in_scale"])
+    x = shard_hint(x, "act_btd")
+    use_state = state is not None
+
+    def body(x, layer_in):
+        lp, state_l = layer_in
+        x, new_state_l = rwkv_block(cfg, lp, x, state_l if use_state else None)
+        return x, new_state_l
+
+    xs = (params["layers"],
+          state if use_state else jnp.zeros((cfg.n_layers,), jnp.int8))
+    if cfg.scan_layers:
+        x, new_state = jax.lax.scan(body, x, xs)
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            layer_in = jax.tree_util.tree_map(lambda a: a[i], xs)
+            x, ns = body(x, layer_in)
+            outs.append(ns)
+        new_state = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *outs)
+
+    x = rmsnorm(x, params["ln_f_scale"])
+    logits = x @ params["head"]
+    logits = shard_hint(logits, "act_vocab")
+    return logits, new_state

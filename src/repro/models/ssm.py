@@ -1,0 +1,190 @@
+"""Selective SSM heads (Hymba's parallel-mamba side), in SSD chunked-matmul
+form (the mamba-2 duality) — the TPU-native formulation.
+
+Recurrence per head (decay SCALAR per head, mamba-2 style — a deliberate
+hardware adaptation recorded in DESIGN.md §10: per-channel decay has no
+matmul form, scalar-per-head decay turns the scan into MXU matmuls):
+
+    h_t = exp(−Δ_t·a) · h_{t−1} + Δ_t · (x_t ⊗ B_t)        h ∈ R^{hd×N}
+    y_t = h_t · C_t + D ⊙ x_t
+
+Chunked evaluation (chunk length C, no sequential while-loop — everything is
+batched matmuls + one log-depth ``associative_scan`` over chunk states, so
+XLA's cost analysis counts every FLOP and the MXU sees dense GEMMs):
+
+  within-chunk:  M[t,s] = exp(lc_t − lc_s)·Δ_s·(C_t·B_s)  (s ≤ t);  y = M@x
+  carry-in:      y_t   += exp(lc_t) · C_t @ h_inᵀ
+  chunk state:   h_out  = exp(lc_C)·h_in + Σ_s exp(lc_C − lc_s)·Δ_s·(x_s⊗B_s)
+  across chunks: associative_scan over (decay, state) pairs.
+
+``ssm_scan_ref`` keeps the naive ``lax.scan`` semantics as the test oracle;
+decode (S == 1) is the direct single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def ssm_params(cfg, kg, dtype) -> dict:
+    d = cfg.d_model
+    SH, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    inner = SH * hd
+    return {
+        "in_proj": dense_init(kg(), (d, 2 * inner), dtype),       # x and gate
+        "dt_proj": dense_init(kg(), (d, SH), dtype),
+        "b_proj": dense_init(kg(), (d, SH * N), dtype),
+        "c_proj": dense_init(kg(), (d, SH * N), dtype),
+        "a_log": jnp.zeros((SH,), dtype),                         # a = exp(a_log)
+        "d_skip": jnp.ones((SH, hd), dtype),
+        "out_proj": dense_init(kg(), (inner, d), dtype, fan_in=inner),
+    }
+
+
+def _project(cfg, p, u):
+    """Shared input projections.  u (B,S,d)."""
+    B, S, _ = u.shape
+    SH, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = x.reshape(B, S, SH, hd).astype(jnp.float32)
+    dt = jax.nn.softplus((u @ p["dt_proj"]).astype(jnp.float32))   # (B,S,SH)
+    bmat = (u @ p["b_proj"]).reshape(B, S, SH, N).astype(jnp.float32)
+    cmat = (u @ p["c_proj"]).reshape(B, S, SH, N).astype(jnp.float32)
+    a = jnp.exp(p["a_log"].astype(jnp.float32))                    # (SH,) > 0
+    return x, z, dt, bmat, cmat, a
+
+
+def _finish(cfg, p, u, y, x, z):
+    B, S = u.shape[:2]
+    SH, hd = cfg.ssm_heads, cfg.hd
+    y = y + p["d_skip"].astype(jnp.float32)[None, None] * x
+    y = (y.reshape(B, S, SH * hd) * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ p["out_proj"]
+
+
+# --------------------------------------------------------------------------- #
+# Chunked SSD path (training / prefill)
+# --------------------------------------------------------------------------- #
+def ssm_scan(cfg, p: dict, u: jnp.ndarray, state: Optional[jnp.ndarray] = None,
+             chunk: int = 0):
+    """u (B,S,d) -> (y (B,S,d), final_state (B,SH,hd,N))."""
+    B, S, d = u.shape
+    SH, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    chunk = chunk or cfg.scan_chunk
+    if S == 1:
+        if state is None:
+            state = jnp.zeros((B, SH, hd, N), jnp.float32)
+        return ssm_decode_step(cfg, p, u, state)
+    x, z, dt, bmat, cmat, a = _project(cfg, p, u)
+    if state is None:
+        state = jnp.zeros((B, SH, hd, N), jnp.float32)
+
+    C = min(chunk, S)
+    S_real = S
+    if S % C:
+        # pad to a chunk multiple with IDENTITY tokens: dt = 0 -> decay 1,
+        # drive 0 — the state passes through unchanged; padded y rows are
+        # sliced off below.
+        pad = C - S % C
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // C
+    from repro.models.common import shard_hint
+    # per-token log decay (negative): (B,S,SH) -> chunked (B,nc,C,SH)
+    ldec = (-dt * a[None, None, :]).reshape(B, nc, C, SH)
+    lc = jnp.cumsum(ldec, axis=2)                        # inclusive within chunk
+    # chunk axis == sequence: shard over 'model' under context parallelism
+    # (heads SH=25 can't shard; nc can — the SSD analogue of CP attention)
+    xc = shard_hint(x.reshape(B, nc, C, SH, hd), "act_ssd")
+    dtc = dt.reshape(B, nc, C, SH)
+    bc = shard_hint(bmat.reshape(B, nc, C, SH, N), "act_ssd")
+    cc = shard_hint(cmat.reshape(B, nc, C, SH, N), "act_ssd")
+
+    # ---- chunk-local states: h_loc = Σ_s exp(lc_C − lc_s)·Δ_s·(x_s ⊗ B_s)
+    wE = jnp.exp(lc[:, :, -1:, :] - lc)                  # (B,nc,C,SH) ≤ 1
+    b_hat = bc * (wE * dtc)[..., None]                   # (B,nc,C,SH,N)
+    h_loc = jnp.einsum("bnchd,bnchk->bnhdk", xc, b_hat)  # (B,nc,SH,hd,N)
+    dec_chunk = jnp.exp(lc[:, :, -1, :])                 # (B,nc,SH)
+
+    # ---- propagate states across chunks (log-depth, loop-free)
+    def combine(left, right):
+        d1, s1 = left
+        d2, s2 = right
+        return d1 * d2, d2[..., None, None] * s1 + s2
+
+    dec_all, h_all = jax.lax.associative_scan(
+        combine, (dec_chunk, h_loc), axis=1)
+    # state entering chunk i = dec_all[i-1]·state0 + h_all[i-1]; chunk 0: state0
+    dec_in = jnp.concatenate([jnp.ones_like(dec_chunk[:, :1]),
+                              dec_all[:, :-1]], axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(h_loc[:, :1]),
+                              h_all[:, :-1]], axis=1)
+    h_in = dec_in[..., None, None] * state[:, None] + h_prev   # (B,nc,SH,hd,N)
+    final_state = dec_all[:, -1][..., None, None] * state + h_all[:, -1]
+
+    # ---- within-chunk attention-like matmul
+    gate = jnp.exp(lc[:, :, :, None, :] - lc[:, :, None, :, :])   # (B,nc,t,s,SH)
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32))
+    scores = jnp.einsum("bnthk,bnshk->bntsh", cc, bc)             # C_t·B_s
+    M = scores * gate * dtc[:, :, None, :, :] * tri[None, None, :, :, None]
+    y = jnp.einsum("bntsh,bnshd->bnthd", M, xc)
+
+    # ---- carry-in contribution: exp(lc_t)·C_t @ h_inᵀ
+    c_tilde = cc * jnp.exp(lc)[..., None]                         # (B,nc,C,SH,N)
+    y = y + jnp.einsum("bnchk,bnhdk->bnchd", c_tilde, h_in)
+
+    y = y.reshape(B, S, SH, hd)[:, :S_real]
+    return _finish(cfg, p, u, y, x[:, :S_real], z), final_state
+
+
+# --------------------------------------------------------------------------- #
+# Reference (naive lax.scan) — oracle for tests
+# --------------------------------------------------------------------------- #
+def ssm_scan_ref(cfg, p: dict, u: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    B, S, d = u.shape
+    SH, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    x, z, dt, bmat, cmat, a = _project(cfg, p, u)
+    if state is None:
+        state = jnp.zeros((B, SH, hd, N), jnp.float32)
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2, 3), cmat.transpose(1, 0, 2, 3))
+
+    def step(h, xs_t):
+        x_t, dt_t, b_t, c_t = xs_t
+        decay = jnp.exp(-dt_t * a[None, :])[..., None, None]       # (B,SH,1,1)
+        drive = dt_t[..., None, None] * x_t[..., None] * b_t[..., None, :]
+        h = decay * h + drive                                      # (B,SH,hd,N)
+        y_t = jnp.einsum("bhdn,bhn->bhd", h, c_t)
+        return h, y_t
+
+    final_state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    return _finish(cfg, p, u, y, x, z), final_state
+
+
+# --------------------------------------------------------------------------- #
+# Decode (single step, O(1) state)
+# --------------------------------------------------------------------------- #
+def ssm_decode_step(cfg, p: dict, u: jnp.ndarray, state: jnp.ndarray):
+    """u (B,1,d) single-token step with O(1) state carry."""
+    x, z, dt, bmat, cmat, a = _project(cfg, p, u)
+    decay = jnp.exp(-dt[:, 0] * a[None, :])[..., None, None]       # (B,SH,1,1)
+    drive = dt[:, 0][..., None, None] * x[:, 0][..., None] * bmat[:, 0][..., None, :]
+    h = decay * state + drive
+    y = jnp.einsum("bhdn,bhn->bhd", h, cmat[:, 0])[:, None]        # (B,1,SH,hd)
+    return _finish(cfg, p, u, y, x, z), h
+
+
+def init_ssm_state(cfg, batch: int, layers: Optional[int] = None) -> jnp.ndarray:
+    L = layers if layers is not None else cfg.n_layers
+    return jnp.zeros((L, batch, cfg.ssm_heads, cfg.hd, cfg.ssm_state), jnp.float32)

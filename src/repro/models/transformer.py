@@ -1,0 +1,202 @@
+"""Decoder-only transformer stack: dense GQA, MoE, and hybrid (attn ⊕ SSM)
+families, with scan-over-layers (stacked parameters) so the lowered HLO is
+O(1) in depth — essential both for the 96-layer dry-run compiles and for
+keeping MeZO's per-leaf z regeneration to a handful of large leaves.
+
+Params layout (all block leaves stacked over layers on axis 0):
+    {"embed": (V, d),
+     "layers": {"ln1": …, "attn": …, ("mlp"|"moe"): …,
+                ["ln_ssm": …, "ssm": …, "mix": …], "ln2": …},
+     "ln_f": …, ["head": (d, V)]}
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (KeyGen, apply_norm, dense_init, embed_init,
+                                 norm_params, shard_hint)
+from repro.models.config import ModelConfig
+from repro.models.ffn import ffn, ffn_params
+from repro.models.moe import moe_ffn, moe_params
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+def _layer_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    kg = KeyGen(key)
+    p = {
+        "ln1": norm_params(cfg, cfg.d_model, dtype),
+        "attn": attn_lib.attention_params(cfg, kg, dtype),
+        "ln2": norm_params(cfg, cfg.d_model, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_params(cfg, kg, dtype)
+    else:
+        p["mlp"] = ffn_params(cfg, kg, dtype)
+    if cfg.family == "hybrid":
+        p["ln_ssm"] = norm_params(cfg, cfg.d_model, dtype)
+        p["ssm"] = ssm_lib.ssm_params(cfg, kg, dtype)
+        p["mix"] = jnp.full((2,), 0.5, dtype)   # learned attn/ssm combination
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = cfg.param_dtype
+    kg = KeyGen(key)
+    V = cfg.padded_vocab
+    layer_keys = jax.random.split(kg(), cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_params(cfg, k, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(kg(), (V, cfg.d_model), dtype),
+        "layers": layers,
+        "ln_f": norm_params(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(kg(), (cfg.d_model, V), dtype)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# One block
+# --------------------------------------------------------------------------- #
+def block(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+          cache: Optional[dict], cache_pos, ssm_state: Optional[jnp.ndarray]):
+    h = apply_norm(cfg, x, p["ln1"])
+    attn_out, new_cache = attn_lib.self_attention(cfg, p["attn"], h, positions,
+                                                  cache, cache_pos)
+    new_ssm_state = None
+    if cfg.family == "hybrid":
+        hs = apply_norm(cfg, x, p["ln_ssm"])
+        ssm_out, new_ssm_state = ssm_lib.ssm_scan(cfg, p["ssm"], hs, ssm_state)
+        mix = p["mix"].astype(attn_out.dtype)
+        x = x + mix[0] * attn_out + mix[1] * ssm_out
+    else:
+        x = x + attn_out
+
+    h2 = apply_norm(cfg, x, p["ln2"])
+    aux = jnp.float32(0.0)
+    if cfg.n_experts:
+        mo, aux = moe_ffn(cfg, p["moe"], h2)
+        x = x + mo
+    else:
+        x = x + ffn(cfg, p["mlp"], h2)
+    x = shard_hint(x, "act_btd")
+    return x, new_cache, new_ssm_state, aux
+
+
+# --------------------------------------------------------------------------- #
+# Full forward
+# --------------------------------------------------------------------------- #
+class ForwardResult(NamedTuple):
+    logits: jnp.ndarray
+    cache: Optional[dict]
+    ssm_state: Optional[jnp.ndarray]
+    aux_loss: jnp.ndarray
+
+
+def forward(cfg: ModelConfig, params: dict, *, tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            cache: Optional[dict] = None, cache_pos=None,
+            ssm_state: Optional[jnp.ndarray] = None) -> ForwardResult:
+    """tokens (B,S) int32 or embeds (B,S,d) (stub frontends).  ``cache`` /
+    ``ssm_state`` are stacked over layers (leading L axis)."""
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    else:
+        x = embeds.astype(cfg.param_dtype)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if not cfg.use_rope:
+        # absolute sinusoidal positions (OPT/RoBERTa-style proxy)
+        from repro.models.common import sinusoidal_at
+        x = x + sinusoidal_at(positions, cfg.d_model, x.dtype)[None]
+    x = shard_hint(x, "act_btd")
+
+    use_cache = cache is not None
+    use_ssm = cfg.family == "hybrid" and ssm_state is not None
+
+    def body(carry, layer_in):
+        x, aux_acc = carry
+        lp, cache_l, state_l = layer_in
+        x, new_cache_l, new_state_l, aux = block(
+            cfg, lp, x, positions,
+            cache_l if use_cache else None, cache_pos,
+            state_l if use_ssm else None)
+        outs = (new_cache_l if use_cache else 0,
+                new_state_l if use_ssm else 0)
+        return (x, aux_acc + aux), outs
+
+    xs = (params["layers"],
+          cache if use_cache else jnp.zeros((cfg.n_layers,), jnp.int8),
+          ssm_state if use_ssm else jnp.zeros((cfg.n_layers,), jnp.int8))
+
+    if cfg.scan_layers:
+        (x, aux_total), (new_cache, new_ssm) = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    else:
+        aux_total = jnp.float32(0.0)
+        new_cache_list, new_ssm_list = [], []
+        for i in range(cfg.n_layers):
+            layer_in = jax.tree_util.tree_map(lambda a: a[i], xs)
+            (x, aux_total), (nc, ns) = body((x, aux_total), layer_in)
+            new_cache_list.append(nc)
+            new_ssm_list.append(ns)
+        stack = lambda l: jax.tree_util.tree_map(lambda *a: jnp.stack(a), *l)
+        new_cache = stack(new_cache_list) if use_cache else 0
+        new_ssm = stack(new_ssm_list) if use_ssm else 0
+
+    x = apply_norm(cfg, x, params["ln_f"])
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    logits = shard_hint(logits, "act_vocab")
+    return ForwardResult(logits,
+                         new_cache if use_cache else None,
+                         new_ssm if use_ssm else None,
+                         aux_total)
+
+
+# --------------------------------------------------------------------------- #
+# Losses
+# --------------------------------------------------------------------------- #
+def lm_loss(cfg: ModelConfig, logits: jnp.ndarray, labels: jnp.ndarray,
+            loss_mask: Optional[jnp.ndarray] = None,
+            aux_loss: jnp.ndarray = 0.0, aux_coef: float = 0.01) -> jnp.ndarray:
+    """Teacher-forcing cross entropy with padded-vocab masking, f32 logsumexp."""
+    lg = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = cfg.padded_vocab - cfg.vocab_size
+        neg = jnp.full(lg.shape[:-1] + (pad,), -1e30, jnp.float32)
+        lg = jnp.concatenate([lg[..., :cfg.vocab_size], neg], axis=-1)
+    if cfg.logit_softcap > 0:
+        lg = cfg.logit_softcap * jnp.tanh(lg / cfg.logit_softcap)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if loss_mask is not None:
+        m = loss_mask.astype(jnp.float32)
+        loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    return loss + aux_coef * jnp.asarray(aux_loss, jnp.float32)
+
+
+def train_loss_fn(cfg: ModelConfig):
+    """(params, batch) -> scalar loss.  batch: {"tokens"|"embeds", "labels",
+    optional "loss_mask"}.  This is the function MeZO's two forward passes
+    evaluate."""
+    def loss_fn(params, batch):
+        r = forward(cfg, params, tokens=batch.get("tokens"),
+                    embeds=batch.get("embeds"))
+        return lm_loss(cfg, r.logits, batch["labels"], batch.get("loss_mask"),
+                       r.aux_loss)
+    return loss_fn

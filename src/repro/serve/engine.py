@@ -1,0 +1,187 @@
+"""Batched serving engine: continuous-batching prefill + decode.
+
+A slot-based engine in the vLLM mold, adapted to what ZO fine-tuning
+produces (a model whose checkpoints are tiny seed-chains — see
+checkpoint/manager.py):
+
+  * fixed number of SLOTS (the decode batch); each slot holds one request's
+    cache row and generation state;
+  * ``submit`` queues requests; ``step`` runs one decode for every live slot
+    (one jitted serve_step, all slots in lockstep);
+  * prefill runs per-request (padded to the slot width) and writes that
+    slot's cache row;
+  * greedy or temperature sampling; EOS or max-token termination frees the
+    slot for the next queued request.
+
+Family dispatch (cache / recurrent state / cross-attention) reuses
+models.registry's prefill/decode fns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import bundle as make_bundle
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_ids: list
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_ids: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_len: int = 256, eos_id: Optional[int] = None, seed: int = 0):
+        assert cfg.family in ("dense", "moe", "hybrid", "ssm"), cfg.family
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.bundle = make_bundle(cfg)
+        self.key = jax.random.PRNGKey(seed)
+
+        from repro.models import attention as attn_lib
+        from repro.models import ssm as ssm_lib
+        from repro.models import rwkv6 as rwkv_lib
+        if cfg.family != "ssm":
+            self.cache = attn_lib.init_cache(cfg, slots, max_len,
+                                             cfg.param_dtype, per_slot=True)
+        else:
+            self.cache = None
+        if cfg.family == "hybrid":
+            self.state = ssm_lib.init_ssm_state(cfg, slots)
+        elif cfg.family == "ssm":
+            self.state = rwkv_lib.init_rwkv_state(cfg, slots)
+        else:
+            self.state = None
+
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * slots
+        self.pos = np.zeros((slots,), np.int32)       # next position per slot
+
+        self._decode = jax.jit(self.bundle.decode_fn())
+        self._prefill_len = 64                         # padded prefill width
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("plen",))
+
+    # ------------------------------------------------------------------ #
+    def _prefill_impl(self, params, tokens, plen):
+        """Single-request prefill on a width-``plen`` padded prompt; returns
+        (last_logits, per-layer kv (L,plen,KV,hd) pair, ssm/rwkv state)."""
+        cfg = self.cfg
+        from repro.models import attention as attn_lib, ssm as ssm_lib
+        from repro.models import rwkv6 as rwkv_lib
+        from repro.models import transformer
+        if cfg.family == "ssm":
+            logits, st = rwkv_lib.forward(cfg, params, tokens=tokens,
+                                          state=rwkv_lib.init_rwkv_state(cfg, 1))
+            return logits, None, st
+        cache = attn_lib.init_cache(cfg, 1, plen, cfg.param_dtype)
+        ssm_state = ssm_lib.init_ssm_state(cfg, 1) if cfg.family == "hybrid" else None
+        r = transformer.forward(cfg, params, tokens=tokens, cache=cache,
+                                cache_pos=None, ssm_state=ssm_state)
+        return r.logits, r.cache, r.ssm_state
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            if self.cfg.family in ("ssm", "hybrid"):
+                # recurrent state integrates every token it sees: prefill
+                # EXACT length (padding after the prompt would corrupt the
+                # carried state); jit buckets by prompt length.
+                plen = len(req.prompt_ids)
+            else:
+                plen = self._prefill_len
+                while plen < len(req.prompt_ids):
+                    plen *= 2
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, :len(req.prompt_ids)] = req.prompt_ids
+            logits, kv, state = self._prefill(self.params, jnp.asarray(toks),
+                                              plen=plen)
+            npr = len(req.prompt_ids)
+            # write this request's prefix into the engine-wide slot caches
+            if self.cache is not None and kv is not None:
+                span = min(npr, self.cache["k"].shape[2])
+                self.cache["k"] = self.cache["k"].at[:, slot, :span].set(
+                    kv["k"][:, 0, :span])
+                self.cache["v"] = self.cache["v"].at[:, slot, :span].set(
+                    kv["v"][:, 0, :span])
+                self.cache["pos"] = self.cache["pos"].at[:, slot, :span].set(
+                    jnp.arange(span, dtype=jnp.int32)[None])
+                self.cache["pos"] = self.cache["pos"].at[:, slot, span:].set(-1)
+            if self.state is not None and state is not None:
+                self.state = jax.tree_util.tree_map(
+                    lambda full, one: full.at[:, slot].set(one[:, 0]),
+                    self.state, state)
+            # first generated token from the last prompt logit
+            last = logits[0, npr - 1, :self.cfg.vocab_size]
+            tok = self._sample(last, req.temperature)
+            req.out_ids.append(int(tok))
+            self.active[slot] = req
+            self.pos[slot] = npr
+
+    def _sample(self, logits: jnp.ndarray, temperature: float):
+        if temperature <= 0:
+            return jnp.argmax(logits)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature)
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """One lockstep decode over all live slots; returns #live slots."""
+        self._admit()
+        live = [s for s, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            toks[s, 0] = self.active[s].out_ids[-1]
+        # per-slot positions: every row decodes at its own absolute position
+        # (continuous batching); inactive rows write masked junk that the
+        # next admission overwrites.
+        batch = {"token": jnp.asarray(toks),
+                 "cache_pos": jnp.asarray(self.pos, jnp.int32)}
+        if self.cfg.family == "ssm":
+            batch["state"] = self.state
+            logits, self.state = self._decode(self.params, batch)
+        elif self.cfg.family == "hybrid":
+            batch["cache"], batch["state"] = self.cache, self.state
+            logits, (self.cache, self.state) = self._decode(self.params, batch)
+        else:
+            batch["cache"] = self.cache
+            logits, self.cache = self._decode(self.params, batch)
+        for s in live:
+            req = self.active[s]
+            tok = int(self._sample(logits[s, 0, :self.cfg.vocab_size],
+                                   req.temperature))
+            req.out_ids.append(tok)
+            self.pos[s] += 1
+            if ((self.eos_id is not None and tok == self.eos_id)
+                    or len(req.out_ids) >= req.max_new_tokens
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                self.active[s] = None
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.step()

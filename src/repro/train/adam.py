@@ -1,0 +1,108 @@
+"""Backprop baselines in pure JAX: Adam (the paper's FT) and SGD (App. F.1).
+
+These exist because the paper's central comparisons are MeZO-vs-FT quality
+(Tables 1/18), memory (Fig. 3/4), and wall-clock (Tab. 23).  The train step
+is ``value_and_grad`` + moment updates; activation rematerialization
+(``cfg.remat``) applies ``jax.checkpoint`` over the layer scan — the
+gradient-checkpointing lever the paper cites [18].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules
+from repro.tree_utils import PyTree, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-5
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    lr_schedule: str = "linear"     # the paper's FT convention
+    total_steps: int = 1000
+    warmup_steps: int = 0
+    sgd: bool = False               # True -> plain SGD (paper App. F.1)
+    momentum: float = 0.0           # SGD momentum
+
+    def lr_at(self, step):
+        return schedules.lr_at(self.lr_schedule, self.lr, step,
+                               self.total_steps, self.warmup_steps)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+class Adam:
+    def __init__(self, config: AdamConfig):
+        self.config = config
+
+    def init(self, params: PyTree) -> AdamState:
+        c = self.config
+        m = tree_zeros_like(params) if (not c.sgd or c.momentum) else ()
+        v = tree_zeros_like(params) if not c.sgd else ()
+        return AdamState(jnp.int32(0), m, v)
+
+    def step_fn(self, loss_fn: Callable):
+        c = self.config
+
+        def step(params: PyTree, state: AdamState, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if c.grad_clip > 0:
+                gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                     for g in jax.tree_util.tree_leaves(grads)))
+                scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9))
+                grads = jax.tree_util.tree_map(
+                    lambda g: (g.astype(jnp.float32) * scale), grads)
+            else:
+                gnorm = jnp.float32(0)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32), grads)
+            lr = c.lr_at(state.step)
+            t = (state.step + 1).astype(jnp.float32)
+
+            if c.sgd:
+                if c.momentum:
+                    m = jax.tree_util.tree_map(
+                        lambda mm, g: c.momentum * mm + g, state.m, grads)
+                    upd = m
+                else:
+                    m, upd = (), grads
+                new_params = jax.tree_util.tree_map(
+                    lambda p, u: (p.astype(jnp.float32) - lr * u
+                                  - lr * c.weight_decay * p.astype(jnp.float32)
+                                  ).astype(p.dtype), params, upd)
+                new_state = AdamState(state.step + 1, m, ())
+                return new_params, new_state, {"loss": loss, "lr": lr,
+                                               "grad_norm": gnorm}
+
+            m = jax.tree_util.tree_map(
+                lambda mm, g: c.beta1 * mm + (1 - c.beta1) * g, state.m, grads)
+            v = jax.tree_util.tree_map(
+                lambda vv, g: c.beta2 * vv + (1 - c.beta2) * g * g,
+                state.v, grads)
+            bc1 = 1.0 - c.beta1 ** t
+            bc2 = 1.0 - c.beta2 ** t
+
+            def upd(p, mm, vv):
+                delta = (mm / bc1) / (jnp.sqrt(vv / bc2) + c.eps)
+                return (p.astype(jnp.float32) - lr * delta
+                        - lr * c.weight_decay * p.astype(jnp.float32)
+                        ).astype(p.dtype)
+
+            new_params = jax.tree_util.tree_map(upd, params, m, v)
+            new_state = AdamState(state.step + 1, m, v)
+            return new_params, new_state, {"loss": loss, "lr": lr,
+                                           "grad_norm": gnorm}
+
+        return step

@@ -1,0 +1,80 @@
+"""Pytree helpers shared across the framework.
+
+Leaf indexing must be *stable* (same tree structure -> same leaf order) because
+MeZO regenerates the perturbation z for each leaf from ``fold_in(key, leaf_idx)``;
+a reordering would silently change the sampled direction.  ``jax.tree_util``
+flattening order is deterministic for a fixed structure, which is what we rely
+on (and test in tests/test_perturb.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_map_with_index(fn: Callable[[int, jnp.ndarray], jnp.ndarray], tree: PyTree) -> PyTree:
+    """Map ``fn(leaf_index, leaf)`` over a pytree with a stable leaf index."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return jax.tree_util.tree_unflatten(treedef, [fn(i, x) for i, x in enumerate(leaves)])
+
+
+def tree_map_with_path_str(fn: Callable[[str, jnp.ndarray], jnp.ndarray], tree: PyTree) -> PyTree:
+    """Map ``fn(path_string, leaf)``; path strings are stable and human readable."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [fn(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar parameters in the tree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jnp.ndarray:
+    """Global dot product of two same-structure trees (f32 accumulation)."""
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.float32(0))
+
+
+def tree_sq_norm(tree: PyTree) -> jnp.ndarray:
+    return tree_dot(tree, tree)
+
+
+def tree_add_scaled(a: PyTree, b: PyTree, scale) -> PyTree:
+    """a + scale * b, elementwise over matching trees (in a's dtype)."""
+    return jax.tree_util.tree_map(
+        lambda x, y: (x + scale * y.astype(x.dtype)).astype(x.dtype), a, b
+    )
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_allclose(a: PyTree, b: PyTree, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree_util.tree_map(
+        lambda x, y: bool(jnp.allclose(x, y, rtol=rtol, atol=atol)), a, b
+    )
+    return all(jax.tree_util.tree_leaves(oks))
+
+
+def tree_max_abs_diff(a: PyTree, b: PyTree) -> float:
+    ds = jax.tree_util.tree_map(
+        lambda x, y: jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))), a, b
+    )
+    return float(jax.tree_util.tree_reduce(jnp.maximum, ds, jnp.float32(0)))

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device; ONLY launch/dryrun.py forces the
+# 512 placeholder devices (see the system design notes).  Multi-device tests
+# spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,78 @@
+"""Roofline machinery unit tests: collective HLO parsing, model-FLOPs
+accounting, report generation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import flops as flops_lib
+from repro.analysis.roofline import (Roofline, _shape_bytes,
+                                     collective_stats)
+from repro.models import all_archs
+from repro.models.config import DECODE_32K, PREFILL_32K, TRAIN_4K
+
+HLO = """
+  %all-reduce = f32[16,4096,512]{2,1,0} all-reduce(%add), channel_id=1, replica_groups=[2,4]<=[8]
+  %ag = bf16[128,256]{1,0} all-gather(%p0), dimensions={0}
+  %rs.1 = f32[64]{0} reduce-scatter(%x), dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%y), dimensions={0}
+  %cp = u32[4]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ar-start = f32[32]{0} all-reduce-start(%w), channel_id=2
+  %ar-done = f32[32]{0} all-reduce-done(%ar-start)
+  %not-a-collective = f32[9]{0} add(%a, %b)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,4096,512]") == 16 * 4096 * 512 * 4
+    assert _shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _shape_bytes("(f32[8], bf16[4])") == 8 * 4 + 4 * 2
+
+
+def test_collective_stats_parsing():
+    st = collective_stats(HLO)
+    assert st["all-reduce"]["count"] == 2          # plain + -start (not -done)
+    assert st["all-reduce"]["bytes"] == 2 * (16 * 4096 * 512 * 4) + 2 * 32 * 4
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 128 * 256 * 2
+    assert st["reduce-scatter"]["count"] == 1
+    assert st["all-to-all"]["count"] == 1
+    assert st["collective-permute"]["count"] == 1
+    assert st["total_count"] == 6
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="x", cell="train_4k", mesh="single", chips=256,
+                 flops_per_chip=197e12,          # exactly 1s of compute
+                 hbm_bytes_per_chip=819e9 * 2,   # 2s of memory
+                 link_bytes_per_chip=50e9 * 0.5, # 0.5s of collectives
+                 model_flops=int(197e12 * 256), model_flops_6nd=0).finalize()
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.bottleneck == "memory"
+    assert r.step_s == pytest.approx(2.0)
+    assert r.roofline_fraction == pytest.approx(0.5)
+    assert r.useful_ratio == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-7b", "mixtral-8x7b", "rwkv6-3b",
+                                     "whisper-large-v3", "hymba-1.5b"])
+def test_model_flops_scaling(arch_id):
+    """Train cell counts ~2 forwards; MoE uses active params; decode is
+    per-token."""
+    cfg = all_archs()[arch_id].cfg
+    tr = flops_lib.model_flops(cfg, TRAIN_4K, "mezo")
+    pf = flops_lib.model_flops(cfg, PREFILL_32K, "mezo")
+    de = flops_lib.model_flops(cfg, DECODE_32K, "mezo")
+    assert tr["model_flops"] > 0 and de["model_flops"] > 0
+    # two forwards vs one at equal token counts
+    tr1 = flops_lib.model_flops(cfg, TRAIN_4K, "ft")
+    assert tr1["model_flops"] > tr["model_flops"]   # fwd+bwd > 2 fwd? (3 vs 2)
+    # decode flops are ~B/(B*S) of prefill flops (same params term)
+    assert de["model_flops"] < pf["model_flops"] / 100
+    if cfg.n_experts:
+        assert tr["backbone_params_active"] < cfg.n_params()
+
+
+def test_moe_active_params():
+    cfg = all_archs()["mixtral-8x7b"].cfg
+    assert cfg.n_active_params() < 0.35 * cfg.n_params()

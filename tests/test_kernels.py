@@ -1,0 +1,175 @@
+"""Per-kernel validation (interpret=True on CPU): shape/dtype sweeps against
+the pure-jnp ref oracles, plus hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6 import ops as wkv_ops
+from repro.kernels.rwkv6.ref import wkv6_ref
+from repro.kernels.zo_fused import ops as zo_ops
+from repro.kernels.zo_fused import ref as zo_ref
+
+
+# --------------------------------------------------------------------------- #
+# zo_fused
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("shape", [(8,), (100,), (33, 65), (4, 7, 9), (512, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_zo_affine_sweep(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    got = zo_ops.zo_affine(x, 13, 0.9, 0.05)
+    want = zo_ref.zo_affine_ref(x, 13, 0.9, 0.05)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_zo_gaussianity():
+    x = jnp.zeros((256, 1024))
+    z = np.asarray(zo_ops.zo_affine(x, 5, 0.0, 1.0))
+    assert abs(z.mean()) < 0.01
+    assert abs(z.std() - 1.0) < 0.01
+    assert abs(float((z ** 3).mean())) < 0.05      # symmetry
+
+
+def test_zo_perturb_update_cycle():
+    """kernel-backed MeZO chain: perturb/unperturb restores; update is the
+    expected rank-1 step."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(1), (70, 70)),
+              "b": jnp.ones((31,))}
+    p1 = zo_ops.perturb_tree(params, 3, 1e-3)
+    p2 = zo_ops.perturb_tree(p1, 3, -1e-3)
+    for a, b in zip(jax.tree_util.tree_leaves(p2),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    upd = zo_ops.update_tree(params, 3, 2.0, 0.01)
+    z0 = zo_ref.z_for(params["b"].shape, zo_ops.leaf_seed(3, 0))
+    np.testing.assert_allclose(np.asarray(upd["b"]),
+                               np.asarray(params["b"] - 0.01 * 2.0 * z0),
+                               atol=1e-5)
+
+
+def test_zo_mezo_step_kernel_descends():
+    t = jax.random.normal(jax.random.PRNGKey(2), (64,))
+    loss_fn = lambda p, b: 0.5 * jnp.sum((p["w"] - t) ** 2)
+    params = {"w": jnp.zeros((64,))}
+    for s in range(200):
+        params, g, loss = zo_ops.mezo_step_kernel(loss_fn, params, None,
+                                                  seed=s, eps=1e-3, lr=5e-3)
+    assert float(loss_fn(params, None)) < 0.25 * 0.5 * float(jnp.sum(t ** 2))
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("S,H,KV,hd,bq,bk", [
+    (128, 4, 4, 64, 64, 64),     # MHA
+    (128, 4, 2, 64, 32, 64),     # GQA 2x
+    (96, 6, 2, 32, 32, 32),      # non-pow2 seq (padding path)
+    (256, 2, 1, 128, 128, 128),  # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, KV, hd, bq, bk, dtype):
+    key = jax.random.PRNGKey(0)
+    B = 2
+    q = jax.random.normal(key, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd), dtype)
+    got = flash_ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [1, 17, 64])
+def test_flash_attention_sliding_window(window):
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 128, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 32))
+    got = flash_ops.flash_attention(q, k, v, window=window, block_q=32,
+                                    block_k=32)
+    want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3),
+                         window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_matches_chunked_xla_twin():
+    """The Pallas kernel and the XLA-level chunked attention are numerically
+    the same algorithm."""
+    from repro.models.attention import attend_chunked
+    key = jax.random.PRNGKey(4)
+    B, S, H, KV, hd = 1, 128, 4, 2, 32
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    a = flash_ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    b = attend_chunked(q, k, v, q_pos=pos, k_pos=pos, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# rwkv6 chunked WKV
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("S,H,hd,chunk", [
+    (64, 2, 32, 16), (128, 3, 64, 16), (48, 1, 16, 16), (64, 2, 32, 8),
+])  # chunk <= 16 is the supported envelope: exponent range rate*C <= 43.5
+def test_wkv6_sweep(S, H, hd, chunk):
+    key = jax.random.PRNGKey(0)
+    B = 2
+    shp = (B, S, H, hd)
+    r = jax.random.normal(key, shp)
+    k = jax.random.normal(jax.random.fold_in(key, 1), shp)
+    v = jax.random.normal(jax.random.fold_in(key, 2), shp)
+    lw = -jnp.exp(jnp.clip(jax.random.normal(jax.random.fold_in(key, 3), shp),
+                           -8, 1))
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, hd))
+    s0 = jax.random.normal(jax.random.fold_in(key, 5), (B, H, hd, hd))
+    y_k, s_k = wkv_ops.wkv6(r, k, v, lw, u, s0, chunk=chunk)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    y_r, s_r = wkv6_ref(fold(r), fold(k), fold(v), fold(lw),
+                        jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd),
+                        s0.reshape(B * H, hd, hd))
+    np.testing.assert_allclose(
+        np.asarray(y_k), np.asarray(y_r.reshape(B, H, S, hd).transpose(0, 2, 1, 3)),
+        atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_k),
+                               np.asarray(s_r.reshape(B, H, hd, hd)),
+                               atol=5e-4, rtol=1e-3)
+
+
+@hypothesis.given(seed=st.integers(0, 10_000), decay=st.floats(0.05, 2.5))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_wkv6_property_decay_regimes(seed, decay):
+    """Kernel == oracle across decay strengths (the numerically hard axis)."""
+    key = jax.random.PRNGKey(seed)
+    B, S, H, hd = 1, 32, 1, 16
+    shp = (B, S, H, hd)
+    r = jax.random.normal(key, shp)
+    k = jax.random.normal(jax.random.fold_in(key, 1), shp)
+    v = jax.random.normal(jax.random.fold_in(key, 2), shp)
+    lw = jnp.full(shp, -decay)
+    u = jnp.zeros((H, hd))
+    s0 = jnp.zeros((B, H, hd, hd))
+    y_k, _ = wkv_ops.wkv6(r, k, v, lw, u, s0, chunk=16)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    y_r, _ = wkv6_ref(fold(r), fold(k), fold(v), fold(lw),
+                      jnp.zeros((B * H, 1, hd)), s0.reshape(B * H, hd, hd))
+    np.testing.assert_allclose(
+        np.asarray(y_k),
+        np.asarray(y_r.reshape(B, H, S, hd).transpose(0, 2, 1, 3)),
+        atol=1e-4, rtol=1e-3)

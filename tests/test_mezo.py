@@ -1,0 +1,173 @@
+"""MeZO optimizer behaviour: convergence, in-place chain equivalence,
+n-SPSA, schedules, estimators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MeZO, MeZOConfig
+from repro.core.mezo import apply_projected_update
+from repro.core.perturb import perturb, step_key
+from repro.tree_utils import tree_max_abs_diff
+
+
+def target_tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (12,)),
+            "b": jax.random.normal(k2, (3, 5))}
+
+
+def make_quad(t):
+    def loss(p, batch):
+        return 0.5 * sum(jnp.sum((x - y) ** 2) for x, y in
+                         zip(jax.tree_util.tree_leaves(p),
+                             jax.tree_util.tree_leaves(t)))
+    return loss
+
+
+def test_mezo_converges_quadratic():
+    t = target_tree(jax.random.PRNGKey(0))
+    loss_fn = make_quad(t)
+    params = jax.tree_util.tree_map(jnp.zeros_like, t)
+    opt = MeZO(MeZOConfig(lr=5e-3, eps=1e-3))
+    state = opt.init(0)
+    step = jax.jit(opt.step_fn(loss_fn), donate_argnums=(0,))
+    l0 = float(loss_fn(params, None))
+    for _ in range(2500):
+        params, state, m = step(params, state, None)
+    lT = float(loss_fn(params, None))
+    assert lT < 1e-3 * l0, (l0, lT)
+
+
+def test_sequential_equals_center_perturb():
+    """sequential in-place chain (paper) == center-perturb variant up to the
+    fp error of the extra additions."""
+    t = target_tree(jax.random.PRNGKey(1))
+    loss_fn = make_quad(t)
+    p0 = jax.tree_util.tree_map(jnp.zeros_like, t)
+    outs = []
+    for seq in (True, False):
+        opt = MeZO(MeZOConfig(lr=1e-3, eps=1e-3, sequential_perturb=seq))
+        state = opt.init(42)
+        step = jax.jit(opt.step_fn(loss_fn))
+        p = p0
+        for _ in range(20):
+            p, state, _ = step(p, state, None)
+        outs.append(p)
+    assert tree_max_abs_diff(outs[0], outs[1]) < 1e-4
+
+
+def test_update_matches_manual_rank1():
+    """θ' − θ == −η·g·z with z regenerated from the step seed."""
+    t = target_tree(jax.random.PRNGKey(2))
+    loss_fn = make_quad(t)
+    p0 = jax.tree_util.tree_map(jnp.ones_like, t)
+    cfg = MeZOConfig(lr=1e-3, eps=1e-3)
+    opt = MeZO(cfg)
+    state = opt.init(3)
+    p1, state1, m = jax.jit(opt.step_fn(loss_fn))(p0, state, None)
+    skey = step_key(opt.init(3).base_key, jnp.int32(0))
+    manual = apply_projected_update(p0, skey, m["projected_grad"], cfg.lr)
+    assert tree_max_abs_diff(p1, manual) < 1e-5
+
+
+def test_nspsa_reduces_direction_variance():
+    """n-SPSA direction correlates better with the true gradient."""
+    t = target_tree(jax.random.PRNGKey(3))
+    loss_fn = make_quad(t)
+    p0 = jax.tree_util.tree_map(jnp.zeros_like, t)
+    true_g = jax.grad(lambda p: loss_fn(p, None))(p0)
+
+    def mean_cos(n, trials=40):
+        opt = MeZO(MeZOConfig(lr=1e-3, eps=1e-3, n=n))
+        cs = []
+        for s in range(trials):
+            state = opt.init(s)
+            p1, _, _ = jax.jit(opt.step_fn(loss_fn))(p0, state, None)
+            delta = jax.tree_util.tree_map(lambda a, b: a - b, p0, p1)
+            num = sum(jnp.sum(d * g) for d, g in
+                      zip(jax.tree_util.tree_leaves(delta),
+                          jax.tree_util.tree_leaves(true_g)))
+            den = jnp.sqrt(sum(jnp.sum(d * d) for d in jax.tree_util.tree_leaves(delta))) * \
+                jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(true_g)))
+            cs.append(float(num / den))
+        return np.mean(cs)
+
+    assert mean_cos(8) > mean_cos(1) + 0.1
+
+
+def test_one_point_estimator_runs_and_descends():
+    t = target_tree(jax.random.PRNGKey(4))
+    loss_fn = make_quad(t)
+    params = jax.tree_util.tree_map(jnp.zeros_like, t)
+    opt = MeZO(MeZOConfig(lr=2e-4, eps=1e-2, estimator="one_point"))
+    state = opt.init(0)
+    step = jax.jit(opt.step_fn(loss_fn))
+    l0 = float(loss_fn(params, None))
+    for _ in range(3000):
+        params, state, m = step(params, state, None)
+    assert float(loss_fn(params, None)) < 0.7 * l0
+
+
+def test_lr_schedules():
+    cfg = MeZOConfig(lr=1.0, lr_schedule="linear", total_steps=100)
+    assert float(cfg.lr_at(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(cfg.lr_at(jnp.int32(50))) == pytest.approx(0.5)
+    cfg = MeZOConfig(lr=1.0, lr_schedule="constant", warmup_steps=10)
+    assert float(cfg.lr_at(jnp.int32(0))) == pytest.approx(0.1)
+
+
+def test_weight_decay_applied():
+    loss_fn = lambda p, b: jnp.float32(0.0) * jnp.sum(p["w"])  # zero gradient
+    p0 = {"w": jnp.ones((8,))}
+    opt = MeZO(MeZOConfig(lr=0.1, eps=1e-3, weight_decay=0.5))
+    state = opt.init(0)
+    p1, _, _ = jax.jit(opt.step_fn(loss_fn))(p0, state, None)
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               0.95 * np.ones(8), rtol=1e-3)
+
+
+def test_projected_grad_clipping():
+    loss_fn = lambda p, b: 1e6 * jnp.sum(p["w"])
+    p0 = {"w": jnp.zeros((8,))}
+    opt = MeZO(MeZOConfig(lr=1e-3, eps=1e-3, clip_projected_grad=1.0))
+    state = opt.init(0)
+    _, _, m = jax.jit(opt.step_fn(loss_fn))(p0, state, None)
+    assert abs(float(m["projected_grad"])) <= 1.0
+
+
+def test_variance_modified_variant_descends():
+    """App. B.3 optimizer (D = parameter norms) optimizes the quadratic."""
+    from repro.core.mezo_variants import MeZOVariant, MeZOVariantConfig
+    t = target_tree(jax.random.PRNGKey(9))
+    loss_fn = make_quad(t)
+    params = jax.tree_util.tree_map(jnp.ones_like, t)
+    opt = MeZOVariant(MeZOVariantConfig(lr=5e-3, eps=1e-3,
+                                        d_source="param_norm"))
+    state = opt.init(params)
+    step = jax.jit(opt.step_fn(loss_fn))
+    l0 = float(loss_fn(params, None))
+    for _ in range(1500):
+        params, state, m = step(params, state, None)
+    assert float(loss_fn(params, None)) < 0.1 * l0
+
+
+def test_variance_modified_unbiased_same_expectation():
+    """Definition 6 keeps E[update direction] ∝ ∇L: one step from a clean
+    quadratic moves downhill on average."""
+    from repro.core.mezo_variants import MeZOVariant, MeZOVariantConfig
+    t = {"w": jnp.ones((16,))}
+    loss_fn = make_quad(t)
+    p0 = {"w": jnp.zeros((16,))}
+    opt = MeZOVariant(MeZOVariantConfig(lr=1e-2, eps=1e-3,
+                                        d_source="param_norm"))
+    deltas = jnp.zeros((16,))
+    for s in range(300):
+        state = opt.init(p0)
+        state = state._replace(base_key=jax.random.PRNGKey(s))
+        p1, _, _ = jax.jit(opt.step_fn(loss_fn))(p0, state, None)
+        deltas = deltas + (p1["w"] - p0["w"]) / 300
+    true_dir = -jax.grad(lambda p: loss_fn(p, None))(p0)["w"]
+    cos = jnp.dot(deltas, true_dir) / (jnp.linalg.norm(deltas)
+                                       * jnp.linalg.norm(true_dir))
+    assert float(cos) > 0.8, float(cos)

@@ -1,0 +1,112 @@
+"""Seeded perturbation machinery: determinism, restore cycles, distributions.
+Includes hypothesis property tests on the system's core invariant (z is a
+pure function of (key, leaf, shape) and the perturb chain is reversible)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.perturb as P
+from repro.tree_utils import tree_allclose, tree_max_abs_diff, tree_size
+
+
+def make_tree(key, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"a": jax.random.normal(k1, (17, 33), dtype),
+            "b": {"w": jax.random.normal(k2, (8,), dtype),
+                  "v": jax.random.normal(k3, (4, 4, 4), dtype)}}
+
+
+def test_z_is_deterministic():
+    params = make_tree(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    z1 = P.sample_z_tree(params, key)
+    z2 = P.sample_z_tree(params, key)
+    assert tree_allclose(z1, z2, rtol=0, atol=0)
+
+
+def test_z_differs_across_leaves_and_keys():
+    params = {"a": jnp.zeros((16,)), "b": jnp.zeros((16,))}
+    z = P.sample_z_tree(params, jax.random.PRNGKey(1))
+    assert not np.allclose(z["a"], z["b"])
+    z2 = P.sample_z_tree(params, jax.random.PRNGKey(2))
+    assert not np.allclose(z["a"], z2["a"])
+
+
+def test_perturb_cycle_restores():
+    """θ +εz −2εz +εz == θ (the paper's in-place chain) to fp tolerance."""
+    params = make_tree(jax.random.PRNGKey(3))
+    key = jax.random.PRNGKey(11)
+    eps = 1e-3
+    p = P.perturb(params, key, eps)
+    p = P.perturb(p, key, -2 * eps)
+    p = P.perturb(p, key, eps)
+    assert tree_max_abs_diff(p, params) < 1e-5
+
+
+def test_fused_restore_update_matches_two_step():
+    params = make_tree(jax.random.PRNGKey(4))
+    key = jax.random.PRNGKey(12)
+    eps, lr_g = 1e-3, 2.5e-4
+    p_minus = P.perturb(P.perturb(params, key, eps), key, -2 * eps)
+    fused = P.fused_restore_update(p_minus, key, eps, lr_g)
+    restored = P.perturb(p_minus, key, eps)
+    z = P.sample_z_tree(params, key)
+    manual = jax.tree_util.tree_map(lambda p, zz: p - lr_g * zz, restored, z)
+    assert tree_max_abs_diff(fused, manual) < 1e-6
+
+
+def test_sphere_norm():
+    params = {"a": jnp.zeros((64, 64)), "b": jnp.zeros((128,))}
+    z = P.sample_z_tree(params, jax.random.PRNGKey(5), dist="sphere")
+    d = tree_size(params)
+    norm = float(jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(z))))
+    assert abs(norm - np.sqrt(d)) / np.sqrt(d) < 1e-4
+
+
+def test_rademacher():
+    params = {"a": jnp.zeros((64, 64))}
+    z = P.sample_z_tree(params, jax.random.PRNGKey(6), dist="rademacher")
+    assert set(np.unique(np.asarray(z["a"]))) <= {-1.0, 1.0}
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    eps=st.floats(1e-5, 1e-1),
+    rows=st.integers(1, 9),
+    cols=st.integers(1, 9),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_perturb_reversible(seed, eps, rows, cols):
+    params = {"w": jnp.ones((rows, cols)) * 0.5}
+    key = jax.random.PRNGKey(seed)
+    p = P.perturb(P.perturb(params, key, eps), key, -eps)
+    assert tree_max_abs_diff(p, params) < 1e-4
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_scale_linearity(seed):
+    """perturb(θ, a) − θ == a·z exactly reconstructible for two scales."""
+    params = {"w": jnp.zeros((8, 8))}
+    key = jax.random.PRNGKey(seed)
+    d1 = P.perturb(params, key, 1.0)["w"]
+    d3 = P.perturb(params, key, 3.0)["w"]
+    np.testing.assert_allclose(np.asarray(3.0 * d1), np.asarray(d3),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bf16_leaves_perturb():
+    params = {"w": jnp.ones((32, 32), jnp.bfloat16)}
+    p = P.perturb(params, jax.random.PRNGKey(0), 0.01)
+    assert p["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(p["w"].astype(jnp.float32))))
+
+
+def test_int_leaves_passthrough():
+    params = {"w": jnp.ones((4,)), "steps": jnp.int32(3)}
+    from repro.core.mezo import apply_projected_update
+    out = apply_projected_update(params, jax.random.PRNGKey(0), 1.0, 0.1)
+    assert out["steps"] == params["steps"]
