@@ -26,7 +26,7 @@ BATCH = 32
 
 def _train(loss_fn, params, opt, task, steps, donate=True):
     params = jax.tree_util.tree_map(jnp.copy, params)   # donation-safe
-    state = opt.init(params) if isinstance(opt, Adam) else opt.init(0)
+    state = opt.init(params, seed=0)   # uniform protocol: no dispatch
     step = jax.jit(opt.step_fn(loss_fn),
                    donate_argnums=(0,) if donate else ())
     for s in range(steps):

@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, note, tiny_lm
-from repro.core import MeZO, MeZOConfig
-from repro.core.mezo_variants import MeZOVariant, MeZOVariantConfig
+from repro import zo
 from repro.data.synthetic import PromptClassification
 from repro.models import bundle, transformer
 from repro.train.adam import Adam, AdamConfig
@@ -44,28 +43,26 @@ def run():
         return p
 
     # plain MeZO reference
-    mezo = MeZO(MeZOConfig(lr=2e-4, eps=1e-3))
-    a_plain = acc(train(mezo, mezo.init(0)))
+    mezo = zo.mezo(lr=2e-4, eps=1e-3)
+    a_plain = acc(train(mezo, mezo.init(params0, seed=0)))
     emit("variants/mezo_plain", 0.0, f"{a_plain:.3f}")
 
     # Table 9: D = parameter norms
-    vcfg = MeZOVariantConfig(lr=2e-4, eps=1e-3, d_source="param_norm")
-    vopt = MeZOVariant(vcfg)
-    a_pn = acc(train(vopt, vopt.init(params0)))
+    vopt = zo.mezo_rescaled(lr=2e-4, eps=1e-3, d_source="param_norm")
+    a_pn = acc(train(vopt, vopt.init(params0, seed=0)))
     emit("variants/d_param_norm", 0.0, f"{a_pn:.3f}")
 
     # Table 8: D = ZO-estimated gradient norms (Proposition 1 probes)
-    vcfg = MeZOVariantConfig(lr=2e-4, eps=1e-3, d_source="grad_norm_zo")
-    vopt = MeZOVariant(vcfg)
-    a_gn = acc(train(vopt, vopt.init(params0, loss_fn,
-                                     task.batch_for_step(0, BATCH))))
+    vopt = zo.mezo_rescaled(lr=2e-4, eps=1e-3, d_source="grad_norm_zo",
+                            probe_loss_fn=loss_fn,
+                            probe_batch=task.batch_for_step(0, BATCH))
+    a_gn = acc(train(vopt, vopt.init(params0, seed=0)))
     emit("variants/d_grad_norm_zo", 0.0, f"{a_gn:.3f}")
 
     # Table 10: expectation-modified (normalized-gradient estimate)
-    vcfg = MeZOVariantConfig(lr=2e-4, eps=1e-3, d_source="param_norm",
-                             modify_expectation=True)
-    vopt = MeZOVariant(vcfg)
-    a_em = acc(train(vopt, vopt.init(params0)))
+    vopt = zo.mezo_rescaled(lr=2e-4, eps=1e-3, d_source="param_norm",
+                            modify_expectation=True)
+    a_em = acc(train(vopt, vopt.init(params0, seed=0)))
     emit("variants/expectation_modified", 0.0, f"{a_em:.3f}")
     note(f"Tables 8/9/10 proxy: plain {a_plain:.3f} | D=param-norm {a_pn:.3f}"
          f" | D=ZO-grad-norm {a_gn:.3f} | expectation-mod {a_em:.3f} "
@@ -91,10 +88,10 @@ def run():
     a_lp = acc(lp_params)
     emit("variants/linear_probe", 0.0, f"{a_lp:.3f}")
 
-    mezo2 = MeZO(MeZOConfig(lr=2e-4, eps=1e-3))
+    mezo2 = zo.mezo(lr=2e-4, eps=1e-3)
     p = jax.tree_util.tree_map(jnp.copy, lp_params)
     step = jax.jit(mezo2.step_fn(loss_fn), donate_argnums=(0,))
-    state = mezo2.init(0)
+    state = mezo2.init(lp_params, seed=0)
     for s in range(STEPS):
         p, state, _ = step(p, state, task.batch_for_step(s, BATCH))
     a_lpmezo = acc(p)

@@ -9,7 +9,7 @@ prefix), supporting the effective-rank theory.
 """
 import jax
 
-from repro.core import MeZO, MeZOConfig
+from repro import zo
 from repro.data.synthetic import PromptClassification
 from repro.models import bundle, peft
 from repro.models.config import ModelConfig
@@ -20,8 +20,8 @@ BATCH = 32
 
 
 def run_variant(name, loss_fn, tree0, lr, eps):
-    opt = MeZO(MeZOConfig(lr=lr, eps=eps))
-    state = opt.init(0)
+    opt = zo.mezo(lr=lr, eps=eps)
+    state = opt.init(tree0, seed=0)
     step = jax.jit(opt.step_fn(loss_fn))
     t = tree0
     losses = []

@@ -7,7 +7,7 @@ backpropagation cannot optimize.
 import jax
 import jax.numpy as jnp
 
-from repro.core import MeZO, MeZOConfig
+from repro import zo
 from repro.core.nondiff import negative_accuracy, negative_f1
 from repro.data.synthetic import PromptClassification, SpanExtraction
 from repro.models import bundle, transformer
@@ -40,8 +40,8 @@ def main():
 
     print(f"zero-shot accuracy: {accuracy(params):.3f}")
     print("optimizing ACCURACY directly (backprop would see zero gradient):")
-    opt = MeZO(MeZOConfig(lr=5e-4, eps=2e-2))
-    state = opt.init(0)
+    opt = zo.mezo(lr=5e-4, eps=2e-2)
+    state = opt.init(params, seed=0)
     step = jax.jit(opt.step_fn(objective), donate_argnums=(0,))
     for s in range(STEPS):
         params, state, m = step(params, state, task.batch_for_step(s, BATCH))

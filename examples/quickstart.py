@@ -9,7 +9,7 @@ import argparse
 
 import jax
 
-from repro.core import MeZO, MeZOConfig
+from repro import zo
 from repro.data.synthetic import PromptClassification
 from repro.models import bundle, transformer
 from repro.models.config import ModelConfig
@@ -39,10 +39,12 @@ def main():
     print(f"zero-shot accuracy: {accuracy(params):.3f}")
 
     # ---- MeZO: Algorithm 1, in-place via buffer donation ----------------- #
-    opt = MeZO(MeZOConfig(lr=2e-4, eps=1e-3))
-    state = opt.init(seed=0)
+    # zo.mezo composes spsa(eps) with the scalar transform chain; swap in
+    # zo.mezo_adam / zo.mezo_rescaled (or your own estimator) freely.
+    opt = zo.mezo(lr=2e-4, eps=1e-3)
+    state = opt.init(params, seed=0)
     step = jax.jit(opt.step_fn(loss_fn), donate_argnums=(0,))
-    p = params
+    p = jax.tree_util.tree_map(lambda x: x.copy(), params)  # params donated
     for s in range(args.steps):
         batch = task.batch_for_step(s, args.batch)
         p, state, m = step(p, state, batch)

@@ -6,7 +6,8 @@ storage story end to end (train -> 0.3 KB artifact -> serve).
 """
 import jax
 
-from repro.core import MeZO, MeZOConfig, TrajectoryLedger, replay
+from repro import zo
+from repro.core import TrajectoryLedger, replay
 from repro.data.synthetic import PromptClassification
 from repro.models import bundle
 from repro.models.config import ModelConfig
@@ -22,8 +23,8 @@ def main():
 
     # --- "fine-tune" briefly, record ONLY the scalar ledger ---------------- #
     task = PromptClassification(vocab=cfg.vocab_size, seed=0)
-    opt = MeZO(MeZOConfig(lr=2e-4, eps=1e-3))
-    state = opt.init(0)
+    opt = zo.mezo(lr=2e-4, eps=1e-3)
+    state = opt.init(params0, seed=0)
     ledger = TrajectoryLedger(base_seed=0, grad_dtype="float32")
     step = jax.jit(opt.step_fn(b.loss_fn()))
     p = params0
@@ -35,7 +36,7 @@ def main():
 
     # --- a 'serving node' reconstructs the tuned params from the blob ----- #
     led2 = TrajectoryLedger.from_bytes(blob)
-    tuned = replay(params0, led2, opt.config)
+    tuned = replay(params0, led2, opt)       # the optimizer IS the replayer
 
     engine = ServeEngine(cfg, tuned, slots=3, max_len=96)
     prompts = [[10, 20, 30], [40, 50], [60, 70, 80, 90], [11, 12], [13]]

@@ -13,8 +13,9 @@ import os
 
 import jax
 
+from repro import zo
 from repro.checkpoint.manager import CheckpointManager
-from repro.core import MeZO, MeZOConfig, TrajectoryLedger
+from repro.core import TrajectoryLedger
 from repro.data.pipeline import DataSpec, Pipeline
 from repro.models import bundle
 from repro.models.config import ModelConfig
@@ -49,7 +50,7 @@ def main():
 
     pipe = Pipeline(DataSpec("lm", batch=args.batch, seq=args.seq,
                              vocab=cfg.vocab_size, seed=0))
-    opt = MeZO(MeZOConfig(lr=1e-5, eps=1e-3))
+    opt = zo.mezo(lr=1e-5, eps=1e-3)
     ckpt = CheckpointManager(args.ckpt_dir, interval=50, keep=2)
     ledger = TrajectoryLedger(base_seed=0, grad_dtype="float32")
 

@@ -21,7 +21,6 @@ from typing import Any, Optional
 import jax
 
 from repro.checkpoint.io import load_meta, load_tree, save_tree
-from repro.core.mezo import MeZOConfig
 from repro.core.trajectory import TrajectoryLedger, replay
 from repro.tree_utils import PyTree
 
@@ -90,13 +89,15 @@ class CheckpointManager:
             return TrajectoryLedger.from_bytes(f.read())
 
     def recover_via_ledger(self, params_at_ckpt: PyTree, ckpt_step: int,
-                           config: MeZOConfig) -> tuple[PyTree, int]:
+                           optimizer) -> tuple[PyTree, int]:
         """Full ckpt at ``ckpt_step`` + ledger tail -> params at ledger head.
-        No data access, no forward passes (paper §2.1)."""
+        No data access, no forward passes (paper §2.1).  ``optimizer`` is any
+        ``repro.zo`` protocol conformer (or, for backward compatibility, a
+        legacy config object) — its ``replay_update`` applies the tail."""
         ledger = self.load_ledger()
         if ledger is None or len(ledger) == 0:
             return params_at_ckpt, ckpt_step
         tail_start = next((i for i, s in enumerate(ledger.steps)
                            if s >= ckpt_step), len(ledger))
-        params = replay(params_at_ckpt, ledger, config, from_idx=tail_start)
+        params = replay(params_at_ckpt, ledger, optimizer, from_idx=tail_start)
         return params, (ledger.steps[-1] + 1 if len(ledger) else ckpt_step)

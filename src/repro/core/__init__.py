@@ -1,20 +1,58 @@
 # The paper's primary contribution: MeZO — in-place zeroth-order optimization
 # with seed-replayed perturbations (NeurIPS 2023, Malladi et al.).
-from repro.core.mezo import MeZO, MeZOConfig, MeZOState, apply_projected_update
-from repro.core.mezo_adam import MeZOAdam, MeZOAdamConfig, MeZOAdamState
-from repro.core.perturb import (fused_restore_update, leaf_key,
-                                sample_leaf_z, sample_z_tree, step_key)
-from repro.core.perturb import perturb as perturb_params  # `perturb` is the submodule
-from repro.core.spsa import (SPSAResult, one_point_projected_grad,
-                             spsa_full_gradient_oracle, spsa_projected_grad,
-                             zo_grad_norm)
-from repro.core.trajectory import TrajectoryLedger, replay, storage_report
+#
+# The optimizer surface is now the composable ``repro.zo`` layer (estimator ×
+# transform chains behind one protocol); ``MeZO`` / ``MeZOAdam`` /
+# ``MeZOVariant`` are deprecated shims over those compositions, re-exported
+# here together with the new surface.
+#
+# Exports resolve lazily (PEP 562): the shims import ``repro.zo``, which
+# imports the primitive submodules ``repro.core.perturb`` / ``core.schedules``
+# — lazy resolution lets either package be imported first without a cycle.
+from __future__ import annotations
 
-__all__ = [
-    "MeZO", "MeZOConfig", "MeZOState", "MeZOAdam", "MeZOAdamConfig",
-    "MeZOAdamState", "apply_projected_update", "perturb_params",
-    "fused_restore_update", "sample_leaf_z", "sample_z_tree", "leaf_key",
-    "step_key", "SPSAResult", "spsa_projected_grad",
-    "spsa_full_gradient_oracle", "one_point_projected_grad", "zo_grad_norm",
-    "TrajectoryLedger", "replay", "storage_report",
-]
+import importlib
+
+_EXPORTS = {
+    # primitives -------------------------------------------------------------
+    "repro.core.perturb": ["fused_restore_update", "leaf_key", "sample_leaf_z",
+                           "sample_z_tree", "step_key"],
+    "repro.core.spsa": ["SPSAResult", "one_point_projected_grad",
+                        "spsa_full_gradient_oracle", "spsa_projected_grad",
+                        "zo_grad_norm"],
+    # deprecated optimizer shims --------------------------------------------
+    "repro.core.mezo": ["MeZO", "MeZOConfig", "MeZOState",
+                        "apply_projected_update"],
+    "repro.core.mezo_adam": ["MeZOAdam", "MeZOAdamConfig", "MeZOAdamState"],
+    "repro.core.mezo_variants": ["MeZOVariant", "MeZOVariantConfig",
+                                 "MeZOVariantState"],
+    # trajectory ledger ------------------------------------------------------
+    "repro.core.trajectory": ["TrajectoryLedger", "replay", "storage_report"],
+    # the composable surface (estimator × transforms behind one protocol) ----
+    "repro.zo": ["Optimizer", "ZOOptimizer", "ZOState", "ZOEstimator",
+                 "ZOTransform", "apply_rank1", "as_zo_optimizer", "chain"],
+}
+_LOOKUP = {name: module for module, names in _EXPORTS.items() for name in names}
+_ALIASES = {"perturb_params": ("repro.core.perturb", "perturb")}
+
+__all__ = sorted(_LOOKUP) + sorted(_ALIASES)
+
+
+def __getattr__(name: str):
+    if name in _LOOKUP:
+        value = getattr(importlib.import_module(_LOOKUP[name]), name)
+    elif name in _ALIASES:
+        module, attr = _ALIASES[name]
+        value = getattr(importlib.import_module(module), attr)
+    else:
+        try:  # plain submodule access: ``repro.core.mezo`` after ``import repro.core``
+            value = importlib.import_module(f"{__name__}.{name}")
+        except ModuleNotFoundError:
+            raise AttributeError(
+                f"module {__name__!r} has no attribute {name!r}") from None
+    globals()[name] = value            # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(__all__))

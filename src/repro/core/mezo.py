@@ -1,13 +1,25 @@
-"""MeZO: memory-efficient ZO-SGD (paper Algorithm 1), as a pure-JAX step.
+"""MeZO: memory-efficient ZO-SGD (paper Algorithm 1).
 
-Usage:
+.. deprecated::
+    ``MeZO`` is a thin shim over the composable API in :mod:`repro.zo` —
+    ``zo.mezo(lr=..., eps=...)`` builds the identical optimizer (bitwise-equal
+    steps, enforced by tests/test_zo_api.py) as::
+
+        ZOOptimizer(estimators.spsa(eps),
+                    chain(clip_projected_grad?, scale_by_schedule(lr),
+                          add_weight_decay(λ)))
+
+    New code should use ``repro.zo`` directly; new estimators and update
+    rules plug in as components there instead of new optimizer classes.
+
+Usage (unchanged):
     opt = MeZO(MeZOConfig(lr=1e-6, eps=1e-3))
     state = opt.init(seed=0)
     step = jax.jit(opt.step_fn(loss_fn), donate_argnums=(0,))
     params, state, metrics = step(params, state, batch)
 
-Design notes
-------------
+Design notes (now implemented by ``repro.zo.estimators.spsa``)
+--------------------------------------------------------------
 * The *whole step* is one jitted function with ``params`` donated: XLA reuses
   the parameter buffers across the perturb/forward/perturb/forward/update
   chain, so the live set is params + one forward pass — the paper's
@@ -18,25 +30,25 @@ Design notes
   descent loops into one, see ``perturb.fused_restore_update``).
 * The projected gradient is a *scalar*; under data parallelism the only
   cross-replica communication is the mean of ℓ± over the batch — already
-  performed by the loss reduction itself, so a sharded-batch MeZO step
-  all-reduces exactly two partial scalars per seed.
+  performed by the loss reduction itself.
 * ``n > 1`` runs n-SPSA sequentially (Algorithm 2).  The seed-parallel
   variant lives in ``repro.distributed.collectives``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import schedules
-from repro.core.perturb import (Distribution, fused_restore_update, leaf_key,
-                                perturb, sample_leaf_z, step_key)
-from repro.core.spsa import (LossFn, OnePointState, one_point_init,
-                             one_point_projected_grad)
-from repro.tree_utils import PyTree, tree_map_with_index
+from repro.core.perturb import Distribution
+from repro.tree_utils import PyTree
+from repro.zo.base import ZOOptimizer, ZOState
+from repro.zo.presets import mezo as _mezo_preset
+from repro.zo.updates import apply_rank1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,96 +70,34 @@ class MeZOConfig:
                                self.total_steps, self.warmup_steps)
 
 
-class MeZOState(NamedTuple):
-    step: jnp.ndarray                 # int32 scalar
-    base_key: jax.Array               # the single run seed (paper §2.1)
-    one_point: OnePointState          # only used when estimator == one_point
-    last_projected_grad: jnp.ndarray  # for the trajectory ledger / logging
+# Uniform optimizer state (deprecated alias — kept for old imports; the
+# estimator/transform carries replaced the one-point-specific field).
+MeZOState = ZOState
 
 
-class MeZO:
-    """ZO-SGD with in-place seed-replay perturbations (paper Algorithm 1)."""
+class MeZO(ZOOptimizer):
+    """Deprecated shim: ZO-SGD as the ``repro.zo`` composition above."""
 
     def __init__(self, config: MeZOConfig):
         self.config = config
+        composed = _mezo_preset(
+            lr=config.lr, eps=config.eps, n=config.n, dist=config.dist,
+            weight_decay=config.weight_decay, estimator=config.estimator,
+            lr_schedule=config.lr_schedule, total_steps=config.total_steps,
+            warmup_steps=config.warmup_steps,
+            sequential_perturb=config.sequential_perturb,
+            clip_projected_grad=config.clip_projected_grad)
+        super().__init__(composed.estimator, composed.transform, name="mezo")
 
-    def init(self, seed: int = 0) -> MeZOState:
-        return MeZOState(
-            step=jnp.int32(0),
-            base_key=jax.random.PRNGKey(seed),
-            one_point=one_point_init(),
-            last_projected_grad=jnp.float32(0.0),
-        )
-
-    def _one_seed(self, loss_fn: LossFn, params: PyTree, batch, skey: jax.Array,
-                  lr_eff, weight_decay_eff) -> tuple[PyTree, jnp.ndarray, jnp.ndarray]:
-        """One SPSA seed: perturb → ℓ+ → perturb → ℓ− → fused restore+update.
-
-        Written as a single sequential chain over ONE live parameter tree so
-        that, with the step's ``donate_argnums``, XLA keeps exactly one
-        parameter-sized buffer alive (the paper's in-place property).
-        """
-        c = self.config
-        if c.sequential_perturb:
-            p_plus = perturb(params, skey, c.eps, c.dist)
-            l_plus = loss_fn(p_plus, batch)
-            p_minus = perturb(p_plus, skey, -2.0 * c.eps, c.dist)
-            l_minus = loss_fn(p_minus, batch)
-            g = (l_plus - l_minus) / (2.0 * c.eps)
-            if c.clip_projected_grad > 0:
-                g = jnp.clip(g, -c.clip_projected_grad, c.clip_projected_grad)
-            new_params = fused_restore_update(p_minus, skey, c.eps, lr_eff * g,
-                                              weight_decay=weight_decay_eff,
-                                              dist=c.dist)
-        else:
-            l_plus = loss_fn(perturb(params, skey, c.eps, c.dist), batch)
-            l_minus = loss_fn(perturb(params, skey, -c.eps, c.dist), batch)
-            g = (l_plus - l_minus) / (2.0 * c.eps)
-            if c.clip_projected_grad > 0:
-                g = jnp.clip(g, -c.clip_projected_grad, c.clip_projected_grad)
-            new_params = apply_projected_update(params, skey, g, lr_eff,
-                                                weight_decay_eff, c.dist)
-        return new_params, g, 0.5 * (l_plus + l_minus)
-
-    def step_fn(self, loss_fn: LossFn) -> Callable[[PyTree, MeZOState, Any],
-                                                   tuple[PyTree, MeZOState, dict]]:
-        c = self.config
-
-        def step(params: PyTree, state: MeZOState, batch):
-            skey0 = step_key(state.base_key, state.step)
-            lr = c.lr_at(state.step)
-
-            if c.estimator == "one_point":
-                g, l_pert, op_state = one_point_projected_grad(
-                    loss_fn, params, batch, skey0, c.eps, state.one_point, c.dist)
-                if c.clip_projected_grad > 0:
-                    g = jnp.clip(g, -c.clip_projected_grad, c.clip_projected_grad)
-                new_params = apply_projected_update(params, skey0, g, lr,
-                                                    c.weight_decay, c.dist)
-                new_state = MeZOState(state.step + 1, state.base_key, op_state, g)
-                return new_params, new_state, {"loss": l_pert,
-                                               "projected_grad": g, "lr": lr}
-
-            # n-SPSA, sequential over seeds (Algorithm 2); n == 1 is the
-            # paper default.  lr/n per seed; weight decay applied once.
-            p = params
-            gs, losses = [], []
-            for j in range(c.n):
-                skey = jax.random.fold_in(skey0, j) if c.n > 1 else skey0
-                wd = c.weight_decay if j == 0 else 0.0
-                p, g, loss = self._one_seed(loss_fn, p, batch, skey,
-                                            lr / c.n, lr * wd)
-                gs.append(g)
-                losses.append(loss)
-
-            g_mean = jnp.mean(jnp.stack(gs))
-            loss = jnp.mean(jnp.stack(losses))
-            new_state = MeZOState(state.step + 1, state.base_key,
-                                  state.one_point, g_mean)
-            return p, new_state, {"loss": loss, "projected_grad": g_mean,
-                                  "lr": lr}
-
-        return step
+    def init(self, seed_or_params=0, *, seed: Optional[int] = None,
+             params: Optional[PyTree] = None) -> ZOState:
+        """Accepts both the legacy form ``init(seed)`` and the protocol form
+        ``init(params, seed=...)`` (ints are seeds, pytrees are params)."""
+        if seed is None and isinstance(seed_or_params, (int, np.integer)):
+            return ZOOptimizer.init(self, params, seed=int(seed_or_params))
+        if not isinstance(seed_or_params, (int, np.integer)):
+            params = seed_or_params
+        return ZOOptimizer.init(self, params, seed=int(seed or 0))
 
 
 def apply_projected_update(params: PyTree, skey: jax.Array, projected_grad,
@@ -156,21 +106,10 @@ def apply_projected_update(params: PyTree, skey: jax.Array, projected_grad,
                            d_tree: Optional[PyTree] = None) -> PyTree:
     """θ ← (1 − η·λ)·θ − η·g·z(skey)   (Algorithm 1's descent loop).
 
-    Shared by: the center-perturb step variant, the one-point estimator, the
-    trajectory replayer (``core.trajectory``), and the async/straggler path
-    (``distributed.async_zo``) — all of which apply updates from ``(seed, g)``
-    scalars alone.  ``d_tree`` rescales z per-leaf (Definitions 6/7).
+    Deprecated alias for :func:`repro.zo.updates.apply_rank1` with the
+    (g, η) factorization pre-multiplied; kept because the trajectory
+    replayer, async path, and tests address updates as (seed, g, lr) triples.
+    ``d_tree`` rescales z per-leaf (Definitions 6/7).
     """
-    d_leaves = jax.tree_util.tree_leaves(d_tree) if d_tree is not None else None
-
-    def one(i, p):
-        if not jnp.issubdtype(p.dtype, jnp.floating):
-            return p
-        z = sample_leaf_z(leaf_key(skey, i), p, dist)
-        if d_leaves is not None:
-            z = z * jnp.asarray(d_leaves[i], p.dtype)
-        step_ = jnp.asarray(lr * projected_grad, p.dtype)
-        decay = jnp.asarray(1.0 - lr * weight_decay, p.dtype)
-        return decay * p - step_ * z
-
-    return tree_map_with_index(one, params)
+    return apply_rank1(params, skey, lr * projected_grad, lr * weight_decay,
+                       dist, d_tree=d_tree)

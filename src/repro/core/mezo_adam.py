@@ -1,9 +1,17 @@
 """MeZO-Adam / MeZO-momentum (paper §2.2 + Appendix B.2).
 
+.. deprecated::
+    ``MeZOAdam`` is a thin shim over the composable API — ``zo.mezo_adam``
+    builds the identical optimizer (bitwise-equal steps) as::
+
+        ZOOptimizer(estimators.spsa(eps),
+                    chain(clip_projected_grad?, scale_by_schedule(lr),
+                          scale_by_zo_adam(β1, β2, materialized, window)))
+
 The SPSA gradient at step τ is the rank-1 tensor g_τ·z_τ with z_τ a pure
 function of (base_key, τ).  Therefore *any* moving average of gradients is a
 pure function of the scalar history {g_τ} — it can be recomputed instead of
-stored.  Two modes:
+stored.  Two modes (see ``repro.zo.transforms.scale_by_zo_adam``):
 
 * ``materialized=True``  — conventional Adam: m, v stored as full trees
   (2× parameter memory; the thing the paper avoids).  Used as the oracle.
@@ -14,22 +22,18 @@ stored.  Two modes:
       v_t ≈ (1−β2) Σ_{j<W} β2^j · g_{t−j}² · z_{t−j}²
 
   Each leaf's accumulators are transient (freed after that leaf's update), so
-  the extra live memory is O(largest leaf) + W scalars, matching the paper's
-  "perturb an entire weight matrix at a time" memory note.  Truncation error
+  the extra live memory is O(largest leaf) + W scalars.  Truncation error
   decays as β^W; tests compare against the materialized oracle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
-
-import jax
-import jax.numpy as jnp
+from typing import Optional
 
 from repro.core.mezo import MeZOConfig
-from repro.core.perturb import leaf_key, perturb, sample_leaf_z, step_key, fused_restore_update
-from repro.core.spsa import LossFn
-from repro.tree_utils import PyTree, tree_map_with_index, tree_zeros_like
+from repro.tree_utils import PyTree
+from repro.zo.base import ZOOptimizer, ZOState
+from repro.zo.presets import mezo_adam as _mezo_adam_preset
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,130 +46,27 @@ class MeZOAdamConfig(MeZOConfig):
     momentum_only: bool = False     # True -> SGD+momentum (no v, no bias corr on v)
 
 
-class MeZOAdamState(NamedTuple):
-    step: jnp.ndarray
-    base_key: jax.Array
-    g_history: jnp.ndarray          # (window,) most-recent-first scalar ledger
-    m: Any                          # trees (materialized mode) or () sentinel
-    v: Any
-    last_projected_grad: jnp.ndarray
+# Deprecated alias: the g-history ring buffer and m/v trees now live inside
+# the uniform ``ZOState``'s transform carry.
+MeZOAdamState = ZOState
 
 
-class MeZOAdam:
+class MeZOAdam(ZOOptimizer):
+    """Deprecated shim: ZO-Adam as the ``repro.zo`` composition above."""
+
     def __init__(self, config: MeZOAdamConfig):
         self.config = config
+        composed = _mezo_adam_preset(
+            lr=config.lr, eps=config.eps, beta1=config.beta1,
+            beta2=config.beta2, adam_eps=config.adam_eps,
+            materialized=config.materialized, window=config.window,
+            momentum_only=config.momentum_only, dist=config.dist,
+            weight_decay=config.weight_decay, lr_schedule=config.lr_schedule,
+            total_steps=config.total_steps, warmup_steps=config.warmup_steps,
+            clip_projected_grad=config.clip_projected_grad)
+        super().__init__(composed.estimator, composed.transform,
+                         name="mezo_adam")
 
-    def init(self, params: PyTree, seed: int = 0) -> MeZOAdamState:
-        c = self.config
-        if c.materialized:
-            m, v = tree_zeros_like(params), tree_zeros_like(params)
-        else:
-            m, v = (), ()
-        return MeZOAdamState(jnp.int32(0), jax.random.PRNGKey(seed),
-                             jnp.zeros((c.window,), jnp.float32), m, v,
-                             jnp.float32(0.0))
-
-    def step_fn(self, loss_fn: LossFn):
-        c = self.config
-
-        def step(params: PyTree, state: MeZOAdamState, batch):
-            skey = step_key(state.base_key, state.step)
-            lr = c.lr_at(state.step)
-
-            # --- SPSA forward passes (identical to MeZO) -------------------
-            p_plus = perturb(params, skey, c.eps, c.dist)
-            l_plus = loss_fn(p_plus, batch)
-            p_minus = perturb(p_plus, skey, -2.0 * c.eps, c.dist)
-            l_minus = loss_fn(p_minus, batch)
-            g = (l_plus - l_minus) / (2.0 * c.eps)
-            if c.clip_projected_grad > 0:
-                g = jnp.clip(g, -c.clip_projected_grad, c.clip_projected_grad)
-            # restore θ (scalar-scale zero update) — one fused pass
-            params0 = fused_restore_update(p_minus, skey, c.eps, 0.0, 0.0, c.dist)
-
-            g_hist = jnp.concatenate([jnp.reshape(g, (1,)),
-                                      state.g_history[:-1]])
-            t = state.step + 1  # Adam bias-correction time index
-
-            if c.materialized:
-                new_params, m, v = self._materialized_update(
-                    params0, state, skey, g, lr, t)
-            else:
-                new_params = self._recomputed_update(
-                    params0, state.base_key, state.step, g_hist, lr, t)
-                m, v = (), ()
-
-            new_state = MeZOAdamState(state.step + 1, state.base_key, g_hist,
-                                      m, v, g)
-            return new_params, new_state, {"loss": 0.5 * (l_plus + l_minus),
-                                           "projected_grad": g, "lr": lr}
-
-        return step
-
-    # ------------------------------------------------------------------ #
-    def _materialized_update(self, params: PyTree, state: MeZOAdamState,
-                             skey: jax.Array, g, lr, t):
-        c = self.config
-
-        def upd(i, p, m, v):
-            z = sample_leaf_z(leaf_key(skey, i), p, c.dist).astype(jnp.float32)
-            ghat = g.astype(jnp.float32) * z
-            m_new = c.beta1 * m + (1.0 - c.beta1) * ghat
-            if c.momentum_only:
-                delta = m_new
-            else:
-                v_new = c.beta2 * v + (1.0 - c.beta2) * ghat * ghat
-                m_hat = m_new / (1.0 - c.beta1 ** t.astype(jnp.float32))
-                v_hat = v_new / (1.0 - c.beta2 ** t.astype(jnp.float32))
-                delta = m_hat / (jnp.sqrt(v_hat) + c.adam_eps)
-            p_new = (p.astype(jnp.float32) - lr * delta
-                     - lr * c.weight_decay * p.astype(jnp.float32)).astype(p.dtype)
-            return p_new, m_new, (m_new * 0 if c.momentum_only else v_new)
-
-        leaves_p, treedef = jax.tree_util.tree_flatten(params)
-        leaves_m = jax.tree_util.tree_leaves(state.m)
-        leaves_v = jax.tree_util.tree_leaves(state.v)
-        new_p, new_m, new_v = [], [], []
-        for i, (p, m, v) in enumerate(zip(leaves_p, leaves_m, leaves_v)):
-            a, b, cc = upd(i, p, m, v)
-            new_p.append(a); new_m.append(b); new_v.append(cc)
-        unf = jax.tree_util.tree_unflatten
-        return unf(treedef, new_p), unf(treedef, new_m), unf(treedef, new_v)
-
-    # ------------------------------------------------------------------ #
-    def _recomputed_update(self, params: PyTree, base_key: jax.Array,
-                           cur_step, g_hist: jnp.ndarray, lr, t):
-        """Paper App. B.2: rebuild m (and v) from the scalar ledger, one leaf
-        at a time, by replaying the window's z's.  O(W) forward-free tree
-        passes of compute, O(largest leaf) extra memory."""
-        c = self.config
-        W = c.window
-        j_idx = jnp.arange(W, dtype=jnp.float32)           # 0 = most recent
-        valid = (cur_step.astype(jnp.float32) - j_idx) >= 0  # steps < 0 never happened
-        cm = jnp.where(valid, (1.0 - c.beta1) * c.beta1 ** j_idx * g_hist, 0.0)
-        cv = jnp.where(valid, (1.0 - c.beta2) * c.beta2 ** j_idx * g_hist ** 2, 0.0)
-
-        def upd(i, p):
-            if not jnp.issubdtype(p.dtype, jnp.floating):
-                return p
-
-            def body(j, acc):
-                m_acc, v_acc = acc
-                skey_j = step_key(base_key, cur_step - j)
-                z = sample_leaf_z(leaf_key(skey_j, i), p, c.dist).astype(jnp.float32)
-                m_acc = m_acc + cm[j] * z
-                v_acc = v_acc + cv[j] * z * z
-                return (m_acc, v_acc)
-
-            zero = jnp.zeros(p.shape, jnp.float32)
-            m, v = jax.lax.fori_loop(0, W, body, (zero, zero))
-            if c.momentum_only:
-                delta = m
-            else:
-                m_hat = m / (1.0 - c.beta1 ** t.astype(jnp.float32))
-                v_hat = v / (1.0 - c.beta2 ** t.astype(jnp.float32))
-                delta = m_hat / (jnp.sqrt(v_hat) + c.adam_eps)
-            return (p.astype(jnp.float32) - lr * delta
-                    - lr * c.weight_decay * p.astype(jnp.float32)).astype(p.dtype)
-
-        return tree_map_with_index(upd, params)
+    def init(self, params: Optional[PyTree] = None, seed: int = 0) -> ZOState:
+        # legacy positional order preserved: init(params, seed)
+        return ZOOptimizer.init(self, params, seed=seed)

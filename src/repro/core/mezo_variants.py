@@ -2,9 +2,16 @@
 modified SPSA with a block-diagonal rescaling D (one scalar per parameter
 group/leaf).
 
+.. deprecated::
+    ``MeZOVariant`` is a thin shim over the composable API —
+    ``zo.mezo_rescaled`` builds the identical optimizer as::
+
+        ZOOptimizer(estimators.rescaled_spsa(eps, d_source, ...),
+                    chain(clip?, scale_by_schedule(lr), add_weight_decay(λ)))
+
 * D = parameter norms  -> layerwise-adaptive-style rescaling (Table 9).
 * D = gradient norms   -> control-variate rescaling; norms estimated with
-  Proposition 1's ZO probe (no backprop) or recomputed per epoch (Table 8).
+  Proposition 1's ZO probe (no backprop) (Table 8).
 * ``modify_expectation=True`` multiplies the update by z (not D·z): the
   biased normalized-gradient estimate of Definition 7 (Table 10).
 
@@ -15,15 +22,12 @@ they demonstrate how cheaply the estimator family extends.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.mezo import MeZOConfig, apply_projected_update
-from repro.core.perturb import leaf_key, perturb, sample_leaf_z, step_key
-from repro.core.spsa import zo_grad_norm
-from repro.tree_utils import PyTree, tree_map_with_index
+from repro.core.mezo import MeZOConfig
+from repro.tree_utils import PyTree
+from repro.zo.base import ZOOptimizer, ZOState
+from repro.zo.presets import mezo_rescaled as _mezo_rescaled_preset
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,91 +38,39 @@ class MeZOVariantConfig(MeZOConfig):
     d_probe_eps: float = 1e-4
 
 
-class MeZOVariantState(NamedTuple):
-    step: jnp.ndarray
-    base_key: jax.Array
-    d_tree: PyTree                      # one positive scalar per leaf
-    last_projected_grad: jnp.ndarray
+# Deprecated alias: the D-tree now lives in the estimator carry of ``ZOState``.
+MeZOVariantState = ZOState
 
 
-def _leaf_norms(params: PyTree) -> PyTree:
-    """RMS per leaf (size-free, unlike the raw norm) with a floor so that
-    zero-initialized leaves (norm scales, biases) don't poison the geometric
-    mean and starve every other leaf's perturbation."""
-    return jax.tree_util.tree_map(
-        lambda p: jnp.maximum(
-            jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2)), 1e-2), params)
-
-
-def _grad_norms_zo(loss_fn, params, batch, key, eps, n_probe: int = 4) -> PyTree:
-    """Proposition 1 per-leaf gradient-norm estimates (no backprop): RMS over
-    n_probe single-leaf probes."""
-    leaves, treedef = jax.tree_util.tree_flatten(params)
-    out = []
-    for i in range(len(leaves)):
-        acc = 0.0
-        for j in range(n_probe):
-            k = jax.random.fold_in(jax.random.fold_in(key, i), j)
-            g = zo_grad_norm(loss_fn, params, batch, k, eps, leaf_indices=[i])
-            acc = acc + g.astype(jnp.float32) ** 2
-        out.append(jnp.maximum(jnp.sqrt(acc / n_probe), 1e-6))
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-class MeZOVariant:
+class MeZOVariant(ZOOptimizer):
     """Definition 6/7 optimizer: perturb by ε·(d⁻¹ ⊙ z), update along
-    (D or I)·z with the same regenerated z."""
+    (D or I)·z with the same regenerated z.  Deprecated shim over
+    ``zo.mezo_rescaled``."""
 
     def __init__(self, config: MeZOVariantConfig):
         self.config = config
+        composed = self._compose(None, None)
+        super().__init__(composed.estimator, composed.transform,
+                         name="mezo_rescaled")
 
-    def init(self, params: PyTree, loss_fn: Callable = None, batch=None,
-             seed: int = 0) -> MeZOVariantState:
+    def _compose(self, probe_loss_fn, probe_batch) -> ZOOptimizer:
         c = self.config
-        key = jax.random.PRNGKey(seed)
-        if c.d_source == "param_norm":
-            d = _leaf_norms(params)
-        elif c.d_source == "grad_norm_zo":
+        return _mezo_rescaled_preset(
+            lr=c.lr, eps=c.eps, dist=c.dist, d_source=c.d_source,
+            modify_expectation=c.modify_expectation,
+            probe_loss_fn=probe_loss_fn, probe_batch=probe_batch,
+            probe_eps=c.d_probe_eps, weight_decay=c.weight_decay,
+            lr_schedule=c.lr_schedule, total_steps=c.total_steps,
+            warmup_steps=c.warmup_steps,
+            clip_projected_grad=c.clip_projected_grad)
+
+    def init(self, params: PyTree, loss_fn: Optional[Callable] = None,
+             batch=None, *, seed: int = 0) -> ZOState:
+        """Legacy signature: ``d_source='grad_norm_zo'`` estimates D with
+        Proposition-1 probes, which need the loss and a batch at init time.
+        The composable API passes these to the estimator factory instead
+        (``zo.estimators.rescaled_spsa(probe_loss_fn=..., probe_batch=...)``)."""
+        if self.config.d_source == "grad_norm_zo":
             assert loss_fn is not None and batch is not None
-            d = _grad_norms_zo(loss_fn, params, batch, key, c.d_probe_eps)
-        else:
-            d = jax.tree_util.tree_map(lambda p: jnp.float32(1.0), params)
-        # normalize D to unit geometric mean so the global lr keeps its scale
-        logs = jnp.stack([jnp.log(x) for x in jax.tree_util.tree_leaves(d)])
-        scale = jnp.exp(jnp.mean(logs))
-        d = jax.tree_util.tree_map(lambda x: x / scale, d)
-        return MeZOVariantState(jnp.int32(0), key, d, jnp.float32(0.0))
-
-    def step_fn(self, loss_fn: Callable):
-        c = self.config
-
-        def step(params: PyTree, state: MeZOVariantState, batch):
-            skey = step_key(state.base_key, state.step)
-            lr = c.lr_at(state.step)
-            d_leaves = jax.tree_util.tree_leaves(state.d_tree)
-
-            def pert(i, p, sign):
-                if not jnp.issubdtype(p.dtype, jnp.floating):
-                    return p
-                z = sample_leaf_z(leaf_key(skey, i), p, c.dist)
-                dinv = (1.0 / d_leaves[i]).astype(p.dtype)
-                return p + sign * jnp.asarray(c.eps, p.dtype) * dinv * z
-
-            p_plus = tree_map_with_index(lambda i, p: pert(i, p, 1.0), params)
-            l_plus = loss_fn(p_plus, batch)
-            p_minus = tree_map_with_index(lambda i, p: pert(i, p, -2.0), p_plus)
-            l_minus = loss_fn(p_minus, batch)
-            g = (l_plus - l_minus) / (2.0 * c.eps)
-            if c.clip_projected_grad > 0:
-                g = jnp.clip(g, -c.clip_projected_grad, c.clip_projected_grad)
-            restored = tree_map_with_index(lambda i, p: pert(i, p, 1.0), p_minus)
-            d_for_update = (None if c.modify_expectation else state.d_tree)
-            new_params = apply_projected_update(
-                restored, skey, g, lr, c.weight_decay, c.dist,
-                d_tree=d_for_update)
-            new_state = MeZOVariantState(state.step + 1, state.base_key,
-                                         state.d_tree, g)
-            return new_params, new_state, {"loss": 0.5 * (l_plus + l_minus),
-                                           "projected_grad": g, "lr": lr}
-
-        return step
+            self.estimator = self._compose(loss_fn, batch).estimator
+        return ZOOptimizer.init(self, params, seed=seed)

@@ -23,9 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mezo import MeZOConfig, apply_projected_update
 from repro.core.perturb import step_key
 from repro.tree_utils import PyTree
+from repro.zo.presets import as_zo_optimizer
 
 _MAGIC = b"MZOL1\x00"
 
@@ -80,20 +80,25 @@ class TrajectoryLedger:
         return len(self.to_bytes())
 
 
-def replay(params0: PyTree, ledger: TrajectoryLedger, config: MeZOConfig,
+def replay(params0: PyTree, ledger: TrajectoryLedger, optimizer,
            from_idx: int = 0, to_idx: Optional[int] = None) -> PyTree:
     """Reconstruct θ_T from θ_0 (or a mid-run checkpoint) by replaying the
-    scalar ledger.  Uses the exact same update function as training, so the
-    reconstruction is bitwise when grad_dtype='float32' and the training loop
-    records the quantized g it actually applied."""
+    scalar ledger through the optimizer protocol's ``replay_update``.  Uses
+    the exact same update primitive as training, so the reconstruction is
+    bitwise when grad_dtype='float32' and the training loop records the
+    quantized g it actually applied.
+
+    ``optimizer`` is anything conforming to the ``repro.zo`` protocol (a
+    ``ZOOptimizer``, a shim, or — for backward compatibility — a legacy
+    ``MeZOConfig``-like object, converted via ``as_zo_optimizer``)."""
+    opt = as_zo_optimizer(optimizer)
     base_key = jax.random.PRNGKey(ledger.base_seed)
     to_idx = len(ledger) if to_idx is None else to_idx
 
     @jax.jit
     def one(params, step, g, lr):
         skey = step_key(base_key, step)
-        return apply_projected_update(params, skey, g, lr,
-                                      config.weight_decay, config.dist)
+        return opt.replay_update(params, skey, g, lr)
 
     p = params0
     for i in range(from_idx, to_idx):

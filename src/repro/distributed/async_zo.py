@@ -1,10 +1,15 @@
 """Bounded-staleness asynchronous MeZO — straggler mitigation (beyond-paper).
 
-Because a MeZO update is the rank-1 tensor −η·g·z(seed) with a SCALAR
+Because a ZO update is the rank-1 tensor −η·g·z(seed) with a SCALAR
 coefficient, updates commute cheaply and can be applied late: a straggling
 worker's (step, seed-id, g) contribution can reach peers a few steps after
 the fact, and every worker folds it in whenever it arrives.  Workers never
 exchange tensors — the wire format is 16 bytes per contribution.
+
+The worker consumes the ``repro.zo`` facade: its local evaluation is the
+optimizer's *estimator* (the same sequential SPSA chain as a training step)
+and remote application is the shared ``apply_rank1`` primitive — so a late
+contribution performs arithmetic identical to a live step.
 
 Model (synchronous-equivalent at staleness 0):
   * each worker w at step t evaluates seed (t, w) on its batch shard and
@@ -22,14 +27,15 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.mezo import MeZOConfig, apply_projected_update
-from repro.core.perturb import perturb, step_key
+from repro.core.perturb import step_key
 from repro.tree_utils import PyTree
+from repro.zo.presets import as_zo_optimizer
+from repro.zo.updates import apply_rank1
 
 
 @dataclasses.dataclass
@@ -47,40 +53,61 @@ def worker_seed_key(base_key: jax.Array, step: int, worker: int) -> jax.Array:
 class AsyncZOWorker:
     """One logical worker of the gossip ring (driven in-process by tests and
     by the simulated-cluster example; a deployment pushes Contribution
-    records over its own transport)."""
+    records over its own transport).
+
+    ``optimizer`` is a ``repro.zo`` protocol conformer (``zo.mezo(...)``) or,
+    for backward compatibility, a legacy ``MeZOConfig``."""
 
     def __init__(self, worker_id: int, n_workers: int, params: PyTree,
-                 loss_fn: Callable, config: MeZOConfig, base_seed: int = 0,
+                 loss_fn: Callable, optimizer, base_seed: int = 0,
                  max_staleness: int = 4):
         self.w = worker_id
         self.n = n_workers
         self.params = params
         self.loss_fn = loss_fn
-        self.c = config
+        self.opt = as_zo_optimizer(optimizer)
         self.base_key = jax.random.PRNGKey(base_seed)
         self.max_staleness = max_staleness
         self.outbox: deque[Contribution] = deque()
         self.applied: set = set()
         self.step = 0
+        self._est_state = self.opt.estimator.init(params, self.base_key)
+        if jax.tree_util.tree_leaves(self._est_state) and \
+                self.opt.estimator.name != "rescaled_spsa":
+            # A carried estimator state (e.g. one_point's residual) would be
+            # frozen into the jitted closure below and never advance; the
+            # async path supports stateless-per-step estimators only.  (The
+            # rescaled D-tree is constant after init, so it is fine.)
+            raise ValueError(
+                f"AsyncZOWorker needs a stateless estimator; "
+                f"{self.opt.estimator.name!r} carries per-step state")
+        if not self.opt.estimator.replayable:
+            # _apply is the plain rank-1 primitive; a Definition-6 estimator
+            # updates along D·z, so remote application would perform
+            # different arithmetic than the producing worker's live step.
+            raise ValueError(
+                f"AsyncZOWorker contributions apply as plain rank-1 updates; "
+                f"{self.opt.estimator.name!r} (Definition 6, D-scaled) is "
+                "not wire-replayable")
         self._jit_eval = jax.jit(self._eval)
         self._jit_apply = jax.jit(self._apply)
 
-    # ---- local SPSA evaluation ------------------------------------------ #
+    # ---- local estimation (the optimizer's own estimator chain) ---------- #
     def _eval(self, params, skey, batch):
-        p_plus = perturb(params, skey, self.c.eps, self.c.dist)
-        l_plus = self.loss_fn(p_plus, batch)
-        p_minus = perturb(p_plus, skey, -2.0 * self.c.eps, self.c.dist)
-        l_minus = self.loss_fn(p_minus, batch)
-        return (l_plus - l_minus) / (2.0 * self.c.eps), 0.5 * (l_plus + l_minus)
+        e = self.opt.estimator.estimate(self.loss_fn, params, batch, skey,
+                                        self._est_state)
+        return e.projected_grad, e.loss
 
     def _apply(self, params, skey, g, lr):
-        return apply_projected_update(params, skey, g, lr / self.n,
-                                      self.c.weight_decay, self.c.dist)
+        lr_w = lr / self.n
+        return apply_rank1(params, skey, lr_w * g,
+                           lr_w * self.opt.weight_decay,
+                           self.opt.estimator.dist)
 
     def produce(self, batch) -> Contribution:
         """Evaluate this worker's seed for its current step."""
         skey = worker_seed_key(self.base_key, self.step, self.w)
-        lr = float(self.c.lr_at(jnp.int32(self.step)))
+        lr = float(self.opt.lr_at(jnp.int32(self.step)))
         g, _ = self._jit_eval(self.params, skey, batch)
         contrib = Contribution(self.step, self.w, float(g), lr)
         self.outbox.append(contrib)

@@ -14,6 +14,12 @@ to the devices holding it, so the step costs the same wall-clock and FLOPs
 as plain 1-SPSA on the full batch while averaging n independent rank-1
 directions — n× direction-variance reduction for free.  The cross-device
 traffic is the 2n loss scalars.
+
+This module consumes the ``repro.zo`` facade: hyperparameters (ε, dist, the
+lr schedule, λ) come from the optimizer protocol — pass ``zo.mezo(...)`` (or,
+for backward compatibility, a legacy ``MeZOConfig``) — and every parameter
+write goes through the shared ``apply_rank1`` primitive, the same arithmetic
+a ledger replay performs.
 """
 from __future__ import annotations
 
@@ -22,9 +28,10 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mezo import MeZOConfig, apply_projected_update
 from repro.core.perturb import perturb, step_key
 from repro.tree_utils import PyTree
+from repro.zo.presets import as_zo_optimizer
+from repro.zo.updates import apply_rank1
 
 
 def psum_scalar(x: jnp.ndarray, axis_name) -> jnp.ndarray:
@@ -41,18 +48,21 @@ def seed_parallel_init(seed: int = 0) -> SeedParallelState:
     return SeedParallelState(jnp.int32(0), jax.random.PRNGKey(seed))
 
 
-def seed_parallel_step_fn(loss_fn: Callable, config: MeZOConfig, n_groups: int):
+def seed_parallel_step_fn(loss_fn: Callable, optimizer, n_groups: int):
     """Build ``step(params, state, batch) -> (params, state, metrics)``.
 
+    ``optimizer`` is a ``repro.zo`` protocol conformer (or legacy config).
     ``batch`` leaves must have leading dim divisible by ``n_groups``; slice g
     is evaluated under seed g.  jit with batch sharded over 'data' makes each
     slice's evaluation group-local (see module docstring).
     """
-    c = config
+    opt = as_zo_optimizer(optimizer)
+    eps, dist = opt.estimator.eps, opt.estimator.dist
+    weight_decay = opt.weight_decay
 
     def step(params: PyTree, state: SeedParallelState, batch):
         skey0 = step_key(state.base_key, state.step)
-        lr = c.lr_at(state.step)
+        lr = opt.lr_at(state.step)
 
         def slice_g(tree, g):
             def cut(x):
@@ -64,21 +74,18 @@ def seed_parallel_step_fn(loss_fn: Callable, config: MeZOConfig, n_groups: int):
         for g in range(n_groups):
             skey = jax.random.fold_in(skey0, g)
             bg = slice_g(batch, g)
-            p_plus = perturb(params, skey, c.eps, c.dist)
+            p_plus = perturb(params, skey, eps, dist)
             l_plus = loss_fn(p_plus, bg)
-            p_minus = perturb(p_plus, skey, -2.0 * c.eps, c.dist)
+            p_minus = perturb(p_plus, skey, -2.0 * eps, dist)
             l_minus = loss_fn(p_minus, bg)
             # restore to center before the next group's perturbation
-            params = perturb(p_minus, skey, c.eps, c.dist)
-            gs.append((l_plus - l_minus) / (2.0 * c.eps))
+            params = perturb(p_minus, skey, eps, dist)
+            gs.append((l_plus - l_minus) / (2.0 * eps))
             losses.append(0.5 * (l_plus + l_minus))
 
-        p = params
-        for g in range(n_groups):
-            skey = jax.random.fold_in(skey0, g)
-            wd = c.weight_decay if g == 0 else 0.0
-            p = apply_projected_update(p, skey, gs[g], lr / n_groups, wd, c.dist)
-
+        p = apply_seed_parallel_update(params, state.base_key, state.step,
+                                       jnp.stack(gs), lr, n_groups,
+                                       weight_decay, dist)
         new_state = SeedParallelState(state.step + 1, state.base_key)
         return p, new_state, {"loss": jnp.mean(jnp.stack(losses)),
                               "projected_grads": jnp.stack(gs), "lr": lr}
@@ -108,11 +115,13 @@ def apply_seed_parallel_update(params: PyTree, base_key, step_idx,
                                grads: jnp.ndarray, lr, n_groups: int,
                                weight_decay: float = 0.0,
                                dist: str = "gaussian") -> PyTree:
-    """θ ← θ − (η/n) Σ_g g_g · z_g  (identical on every replica)."""
+    """θ ← θ − (η/n) Σ_g g_g · z_g  (identical on every replica), via the
+    shared rank-1 primitive; decay applied once, on the first group."""
     skey0 = step_key(base_key, step_idx)
+    lr_g = lr / n_groups
     p = params
     for g in range(n_groups):
         skey = jax.random.fold_in(skey0, g)
         wd = weight_decay if g == 0 else 0.0
-        p = apply_projected_update(p, skey, grads[g], lr / n_groups, wd, dist)
+        p = apply_rank1(p, skey, lr_g * grads[g], lr_g * wd, dist)
     return p

@@ -28,7 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import flops as flops_lib
 from repro.analysis import roofline as roofline_lib
-from repro.core import MeZO, MeZOConfig
+from repro import zo
 from repro.distributed.sharding import (infer_batch_spec,
                                         make_activation_resolver,
                                         param_shardings)
@@ -91,8 +91,8 @@ def _compile_case(cfg, b, cell, mesh, donate: bool = True):
         if resolver_p(logical, shape) is not None else None)
 
     if cell.kind == "train":
-        opt = MeZO(MeZOConfig(lr=1e-6, eps=1e-3))
-        state_sds = jax.eval_shape(lambda: opt.init(0))
+        opt = zo.mezo(lr=1e-6, eps=1e-3)
+        state_sds = jax.eval_shape(lambda: opt.init(seed=0))
         sshard = replicated_tree(state_sds, mesh)
         step = opt.step_fn(b.loss_fn())
         jitted = jax.jit(step, in_shardings=(pshard, sshard, bshard),

@@ -12,7 +12,8 @@ import time
 
 import jax
 
-from repro.core import MeZOConfig, TrajectoryLedger, replay
+from repro import zo
+from repro.core import TrajectoryLedger, replay
 from repro.models import all_archs, bundle
 from repro.serve.engine import Request, ServeEngine
 
@@ -37,7 +38,7 @@ def main():
     if args.ledger and os.path.exists(args.ledger):
         with open(args.ledger, "rb") as f:
             led = TrajectoryLedger.from_bytes(f.read())
-        params = replay(params, led, MeZOConfig())
+        params = replay(params, led, zo.mezo())
         print(f"[serve] replayed {len(led)} ledger steps "
               f"({os.path.getsize(args.ledger)} bytes)")
 

@@ -13,9 +13,9 @@ import argparse
 
 import jax
 
+from repro import zo
 from repro.checkpoint.manager import CheckpointManager
-from repro.core import MeZO, MeZOConfig, TrajectoryLedger
-from repro.core.mezo_adam import MeZOAdam, MeZOAdamConfig
+from repro.core import TrajectoryLedger
 from repro.data.pipeline import DataSpec, Pipeline
 from repro.models import all_archs, bundle
 from repro.train.adam import Adam, AdamConfig
@@ -51,10 +51,10 @@ def main():
                              vocab=cfg.vocab_size, seed=args.seed))
     ledger = None
     if args.optimizer == "mezo":
-        opt = MeZO(MeZOConfig(lr=args.lr or 1e-5, eps=args.eps))
+        opt = zo.mezo(lr=args.lr or 1e-5, eps=args.eps)
         ledger = TrajectoryLedger(base_seed=args.seed, grad_dtype="float32")
     elif args.optimizer == "mezo-adam":
-        opt = MeZOAdam(MeZOAdamConfig(lr=args.lr or 1e-4, eps=args.eps))
+        opt = zo.mezo_adam(lr=args.lr or 1e-4, eps=args.eps)
     elif args.optimizer == "adam":
         opt = Adam(AdamConfig(lr=args.lr or 1e-4, total_steps=args.steps))
     else:
@@ -65,7 +65,8 @@ def main():
             if args.ckpt_dir else None)
     res = train(b.loss_fn(), params, opt, pipe, total_steps=args.steps,
                 ckpt=ckpt, ledger=ledger, monitor=HeartbeatMonitor(),
-                log_every=max(args.steps // 10, 1), verbose=True)
+                log_every=max(args.steps // 10, 1), verbose=True,
+                seed=args.seed)
     print(f"[train] done: {res.steps_run} steps "
           f"(resumed from {res.resumed_from}); "
           f"final loss {res.losses[-1][1]:.4f}")

@@ -44,14 +44,23 @@ class AdamState(NamedTuple):
 
 
 class Adam:
+    """Backprop Adam/SGD behind the same uniform optimizer protocol as the
+    ZO compositions (``repro.zo.Optimizer``): init / step_fn / restore."""
+
     def __init__(self, config: AdamConfig):
         self.config = config
 
-    def init(self, params: PyTree) -> AdamState:
+    def init(self, params: PyTree, *, seed: int = 0) -> AdamState:
+        del seed  # deterministic init; accepted for protocol uniformity
         c = self.config
         m = tree_zeros_like(params) if (not c.sgd or c.momentum) else ()
         v = tree_zeros_like(params) if not c.sgd else ()
         return AdamState(jnp.int32(0), m, v)
+
+    def restore(self, state: AdamState, step: int) -> AdamState:
+        """Resume bookkeeping: realign the step counter (lr index and bias
+        correction) after a checkpoint restore."""
+        return state._replace(step=jnp.int32(step))
 
     def step_fn(self, loss_fn: Callable):
         c = self.config

@@ -1,13 +1,23 @@
 """Checkpointed training loop with fault-tolerance hooks.
 
 Responsibilities:
-  * jit + donate the optimizer step (MeZO or backprop) once;
+  * jit + donate the optimizer step once;
   * pure step-indexed data (restart-exact);
-  * full checkpoints every K steps + per-step MeZO scalar ledger;
+  * full checkpoints every K steps + per-step ZO scalar ledger;
   * resume: newest full ckpt, then *ledger replay* of the tail — the
     replacement worker rejoins bitwise-identically without data access;
   * straggler/failure hooks: a HeartbeatMonitor ABC the launcher wires to
     its process manager; ``FailureInjector`` drives the chaos tests.
+
+The loop is optimizer-agnostic: ``optimizer`` is anything conforming to the
+``repro.zo.Optimizer`` protocol — ``init(params, *, seed)`` /
+``step_fn(loss_fn)`` / ``restore(state, step)`` — which covers the ZO
+compositions (``zo.mezo(...)``, ``zo.mezo_adam(...)``, the deprecated
+``MeZO``/``MeZOAdam``/``MeZOVariant`` shims) and the backprop baselines
+(``train.adam.Adam``) alike.  There is no optimizer-type dispatch here:
+resume bookkeeping goes through the protocol's ``restore``, and ledger
+recording/recovery is enabled purely by passing a ``ledger`` (which requires
+an optimizer whose metrics expose ``projected_grad``/``lr`` — i.e. a ZO one).
 """
 from __future__ import annotations
 
@@ -19,7 +29,6 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.mezo import MeZO, MeZOConfig
 from repro.core.trajectory import TrajectoryLedger
 from repro.data.pipeline import Pipeline
 from repro.tree_utils import PyTree
@@ -69,20 +78,10 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
           injector: Optional[FailureInjector] = None,
           log_every: int = 50, donate: bool = True,
           eval_fn: Optional[Callable] = None, eval_every: int = 0,
-          verbose: bool = False) -> TrainResult:
-    """Run (or resume) a training job.  ``optimizer`` is MeZO / MeZOAdam /
-    Adam — anything exposing init/step_fn."""
-    is_mezo = isinstance(optimizer, MeZO) or isinstance(
-        getattr(optimizer, "config", None), MeZOConfig)
-
-    if isinstance(optimizer, MeZO):
-        opt_state = optimizer.init()                 # seed-only state
-    elif is_mezo:
-        opt_state = optimizer.init(params)           # MeZOAdam(params, seed)
-    elif hasattr(optimizer, "init"):
-        opt_state = optimizer.init(params)           # backprop optimizers
-    else:
-        raise ValueError("optimizer must expose init()")
+          verbose: bool = False, seed: int = 0) -> TrainResult:
+    """Run (or resume) a training job.  ``optimizer`` is any
+    ``repro.zo.Optimizer`` protocol conformer."""
+    opt_state = optimizer.init(params, seed=seed)
 
     start_step = 0
     # ---- resume ---------------------------------------------------------- #
@@ -92,19 +91,19 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             params = restored["params"]
             opt_state = restored["opt_state"] if restored["opt_state"] is not None else opt_state
             start_step = restored["step"]
-            if is_mezo and ledger is not None:
+            if ledger is not None:
                 saved = ckpt.load_ledger()
                 if saved is not None and len(saved) and saved.steps[-1] >= start_step:
+                    # ledger replay advances params past the tensor ckpt;
+                    # recovery consumes the optimizer protocol directly
                     params, start_step = ckpt.recover_via_ledger(
-                        params, start_step, optimizer.config)
+                        params, start_step, optimizer)
                     ledger.steps = saved.steps
                     ledger.grads = saved.grads
                     ledger.lrs = saved.lrs
-            if is_mezo and hasattr(opt_state, "_replace"):
-                # the ledger advanced params past the tensor checkpoint: the
-                # optimizer's step counter (seed source + lr index) must follow
-                import jax.numpy as jnp
-                opt_state = opt_state._replace(step=jnp.int32(start_step))
+            # realign the optimizer's step counter (seed source + lr index)
+            # with wherever resume landed — the protocol's resume hook
+            opt_state = optimizer.restore(opt_state, start_step)
 
     step_fn = jax.jit(optimizer.step_fn(loss_fn),
                       donate_argnums=(0,) if donate else ())
@@ -115,7 +114,12 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             injector.check(step)
         batch = pipeline.batch(step)
         params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if is_mezo and ledger is not None:
+        if ledger is not None:
+            if "projected_grad" not in metrics:
+                raise ValueError(
+                    "ledger recording requires a ZO optimizer whose step "
+                    "metrics expose 'projected_grad'/'lr'; "
+                    f"{type(optimizer).__name__} does not")
             ledger.append(step, float(metrics["projected_grad"]),
                           float(metrics["lr"]))
             if ckpt is not None:

@@ -1,0 +1,224 @@
+"""ZO estimator implementations behind the ``ZOEstimator`` protocol.
+
+Each factory returns a ``ZOEstimator`` whose ``estimate`` preserves the
+donation-friendly sequential perturbation chain of ``core/mezo.py``: with the
+whole step jitted and ``params`` donated, XLA keeps exactly one
+parameter-sized buffer alive across perturb → ℓ+ → perturb → ℓ− → fused
+restore+update (the paper's inference-memory property).
+
+* ``spsa``          — two-point SPSA (Definition 1 / Algorithm 1 lines 3–8).
+* ``n_spsa``        — n independent seeds, interleaved updates (Algorithm 2);
+                      the facade folds the step key once per seed.
+* ``one_point``     — residual-feedback single-forward estimator
+                      (Definition 8); carries the previous perturbed loss.
+* ``rescaled_spsa`` — block-diagonal rescaled SPSA (Definitions 6/7): perturb
+                      by ε·(d⁻¹⊙z), update along (D or I)·z.  The D-tree is
+                      one positive scalar per leaf, computed at ``init`` from
+                      parameter norms or Proposition-1 ZO gradient-norm
+                      probes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perturb import (Distribution, fused_restore_update, leaf_key,
+                                perturb, sample_leaf_z)
+from repro.core.spsa import OnePointState, one_point_init, zo_grad_norm
+from repro.tree_utils import PyTree, tree_map_with_index
+from repro.zo.base import ZOEstimate, ZOEstimator
+from repro.zo.updates import apply_rank1
+
+
+# --------------------------------------------------------------------------- #
+# SPSA (Definition 1) and n-SPSA (Algorithm 2)
+# --------------------------------------------------------------------------- #
+def spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
+         sequential: bool = True) -> ZOEstimator:
+    """Two-point SPSA.  ``sequential=True`` is the paper-faithful in-place
+    chain θ → θ+εz → θ−εz with a fused restore+descent pass; ``False``
+    perturbs from the center twice (one more live buffer, numerically
+    cleaner — θ itself is never touched)."""
+
+    def init(params, key):
+        del params, key
+        return ()
+
+    def estimate(loss_fn, params, batch, key, est_state):
+        if sequential:
+            p_plus = perturb(params, key, eps, dist)
+            l_plus = loss_fn(p_plus, batch)
+            p_minus = perturb(p_plus, key, -2.0 * eps, dist)
+            l_minus = loss_fn(p_minus, batch)
+            g = (l_plus - l_minus) / (2.0 * eps)
+
+            def apply_update(coeff, decay_term):
+                return fused_restore_update(p_minus, key, eps, coeff,
+                                            weight_decay=decay_term, dist=dist)
+
+            def restore():
+                return fused_restore_update(p_minus, key, eps, 0.0, 0.0, dist)
+        else:
+            l_plus = loss_fn(perturb(params, key, eps, dist), batch)
+            l_minus = loss_fn(perturb(params, key, -eps, dist), batch)
+            g = (l_plus - l_minus) / (2.0 * eps)
+
+            def apply_update(coeff, decay_term):
+                return apply_rank1(params, key, coeff, decay_term, dist)
+
+            def restore():
+                return params
+
+        return ZOEstimate(projected_grad=g, loss=0.5 * (l_plus + l_minus),
+                          apply_update=apply_update, restore=restore,
+                          est_state=est_state, aux={})
+
+    return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
+                       dist=dist, name="spsa")
+
+
+def n_spsa(n: int, eps: float = 1e-3, dist: Distribution = "gaussian",
+           sequential: bool = True) -> ZOEstimator:
+    """n-SPSA, sequential over seeds (Algorithm 2): the facade runs the
+    two-point estimate once per folded seed key and applies each seed's
+    update (η/n per seed) before the next seed's perturbation — the same
+    one-live-buffer chain as n=1.  The seed-parallel variant that trades this
+    for batch slicing lives in ``repro.distributed.collectives``."""
+    base = spsa(eps=eps, dist=dist, sequential=sequential)
+    return base._replace(n_seeds=int(n), name="n_spsa")
+
+
+# --------------------------------------------------------------------------- #
+# One-point residual feedback (Definition 8)
+# --------------------------------------------------------------------------- #
+def one_point(eps: float = 1e-3, dist: Distribution = "gaussian") -> ZOEstimator:
+    """g_t = (L(θ_t + εz_t) − L_prev) / ε — one forward pass per step, the
+    previous perturbed loss carried as estimator state.  Twice as fast per
+    step as SPSA but far less query-efficient (paper Table 11)."""
+
+    def init(params, key):
+        del params, key
+        return one_point_init()
+
+    def estimate(loss_fn, params, batch, key, est_state: OnePointState):
+        l_pert = loss_fn(perturb(params, key, eps, dist), batch)
+        g = (l_pert - est_state.prev_perturbed_loss) / eps
+
+        def apply_update(coeff, decay_term):
+            return apply_rank1(params, key, coeff, decay_term, dist)
+
+        def restore():
+            return params
+
+        return ZOEstimate(projected_grad=g, loss=l_pert,
+                          apply_update=apply_update, restore=restore,
+                          est_state=OnePointState(l_pert), aux={})
+
+    return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
+                       dist=dist, name="one_point")
+
+
+# --------------------------------------------------------------------------- #
+# Rescaled SPSA (Definitions 6/7) — block-diagonal D-trees
+# --------------------------------------------------------------------------- #
+def _leaf_norms(params: PyTree) -> PyTree:
+    """RMS per leaf (size-free) with a floor so zero-initialized leaves don't
+    poison the geometric-mean normalization."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.maximum(
+            jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2)), 1e-2), params)
+
+
+def _grad_norms_zo(loss_fn, params, batch, key, eps, n_probe: int = 4) -> PyTree:
+    """Proposition 1 per-leaf gradient-norm estimates (no backprop): RMS over
+    ``n_probe`` single-leaf probes."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for i in range(len(leaves)):
+        acc = 0.0
+        for j in range(n_probe):
+            k = jax.random.fold_in(jax.random.fold_in(key, i), j)
+            g = zo_grad_norm(loss_fn, params, batch, k, eps, leaf_indices=[i])
+            acc = acc + g.astype(jnp.float32) ** 2
+        out.append(jnp.maximum(jnp.sqrt(acc / n_probe), 1e-6))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def compute_d_tree(params: PyTree, key: jax.Array, d_source: str = "param_norm",
+                   probe_loss_fn: Optional[Callable] = None,
+                   probe_batch: Any = None, probe_eps: float = 1e-4) -> PyTree:
+    """Build the block-diagonal D (one positive scalar per leaf), normalized
+    to unit geometric mean so the global lr keeps its scale."""
+    if d_source == "param_norm":
+        d = _leaf_norms(params)
+    elif d_source == "grad_norm_zo":
+        if probe_loss_fn is None or probe_batch is None:
+            raise ValueError("d_source='grad_norm_zo' needs probe_loss_fn and "
+                             "probe_batch at init time (Proposition 1 probes)")
+        d = _grad_norms_zo(probe_loss_fn, params, probe_batch, key, probe_eps)
+    elif d_source == "ones":
+        d = jax.tree_util.tree_map(lambda p: jnp.float32(1.0), params)
+    else:
+        raise ValueError(f"unknown d_source {d_source!r}")
+    logs = jnp.stack([jnp.log(x) for x in jax.tree_util.tree_leaves(d)])
+    scale = jnp.exp(jnp.mean(logs))
+    return jax.tree_util.tree_map(lambda x: x / scale, d)
+
+
+def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
+                  d_source: str = "param_norm",
+                  modify_expectation: bool = False,
+                  probe_loss_fn: Optional[Callable] = None,
+                  probe_batch: Any = None,
+                  probe_eps: float = 1e-4,
+                  d_tree: Optional[PyTree] = None) -> ZOEstimator:
+    """Definition 6 (unbiased, update along D·z) / Definition 7
+    (``modify_expectation=True``: biased normalized-gradient estimate, update
+    along z).  The D-tree lives in the estimator state, so it rides through
+    checkpoints like any other scalar carry.  Pass ``d_tree`` to skip the
+    init-time computation entirely."""
+
+    def init(params, key):
+        if d_tree is not None:
+            return d_tree
+        if params is None:
+            raise ValueError("rescaled_spsa.init needs params to build D")
+        return compute_d_tree(params, key, d_source, probe_loss_fn,
+                              probe_batch, probe_eps)
+
+    def estimate(loss_fn, params, batch, key, est_state):
+        d = est_state
+        d_leaves = jax.tree_util.tree_leaves(d)
+
+        def pert(i, p, sign):
+            if not jnp.issubdtype(p.dtype, jnp.floating):
+                return p
+            z = sample_leaf_z(leaf_key(key, i), p, dist)
+            dinv = (1.0 / d_leaves[i]).astype(p.dtype)
+            return p + sign * jnp.asarray(eps, p.dtype) * dinv * z
+
+        p_plus = tree_map_with_index(lambda i, p: pert(i, p, 1.0), params)
+        l_plus = loss_fn(p_plus, batch)
+        p_minus = tree_map_with_index(lambda i, p: pert(i, p, -2.0), p_plus)
+        l_minus = loss_fn(p_minus, batch)
+        g = (l_plus - l_minus) / (2.0 * eps)
+        d_for_update = None if modify_expectation else d
+
+        def restore():
+            return tree_map_with_index(lambda i, p: pert(i, p, 1.0), p_minus)
+
+        def apply_update(coeff, decay_term):
+            return apply_rank1(restore(), key, coeff, decay_term, dist,
+                               d_tree=d_for_update)
+
+        return ZOEstimate(projected_grad=g, loss=0.5 * (l_plus + l_minus),
+                          apply_update=apply_update, restore=restore,
+                          est_state=est_state, aux={})
+
+    # Definition 7 updates along plain z — a ledger triple reproduces it;
+    # Definition 6 updates along D·z, which only the live est_state carries.
+    return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
+                       dist=dist, name="rescaled_spsa",
+                       replayable=bool(modify_expectation))

@@ -1,0 +1,209 @@
+"""Scalar-ledger transforms for the ``ZOTransform`` chain.
+
+Because the SPSA gradient at step τ is the rank-1 tensor g_τ·z_τ with z_τ a
+pure function of ``(base_key, τ)``, every transform here operates on (or is
+reconstructed from) the *scalar* g-history — state stays O(window) scalars,
+never O(parameters), except in the explicitly-materialized oracle modes.
+
+Ordering is significant, exactly as in optax:
+
+    chain(clip_projected_grad(c),      # on the raw scalar g
+          scale_by_schedule(lr, ...),  # sets Updates.lr and η-scales coeff
+          add_weight_decay(λ))         # reads Updates.lr
+
+Applier transforms (``scale_by_zo_adam`` / ``trace``) materialize the whole
+update themselves and ignore the scalar decay slot — give them their own
+``weight_decay=`` instead of chaining ``add_weight_decay`` (the facade
+rejects that combination):
+
+    chain(clip_projected_grad(c),
+          scale_by_schedule(lr, ...),
+          scale_by_zo_adam(..., weight_decay=λ))
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules
+from repro.core.perturb import leaf_key, sample_leaf_z, step_key
+from repro.tree_utils import PyTree, tree_map_with_index, tree_zeros_like
+from repro.zo.base import TransformCtx, Updates, ZOTransform
+
+
+# --------------------------------------------------------------------------- #
+# Scalar transforms
+# --------------------------------------------------------------------------- #
+def clip_projected_grad(clip: float) -> ZOTransform:
+    """|g| ← min(|g|, clip) — the stability clamp on the raw projected
+    gradient.  Place before ``scale_by_schedule``."""
+    if clip <= 0:
+        raise ValueError("clip must be positive; omit the transform to disable")
+
+    def update(u: Updates, state, ctx: TransformCtx):
+        return u._replace(g=jnp.clip(u.g, -clip, clip)), state
+
+    return ZOTransform(lambda params: (), update,
+                       {"clip_projected_grad": clip})
+
+
+def scale_by_schedule(lr: float, schedule: str = "constant",
+                      total_steps: int = 0,
+                      warmup_steps: int = 0) -> ZOTransform:
+    """coeff ← (η_t / n_seeds)·g and record η_t for downstream transforms.
+    Each of the n interleaved SPSA seeds carries η_t/n, matching
+    Algorithm 2's averaging."""
+
+    def lr_at(step):
+        return schedules.lr_at(schedule, lr, step, total_steps, warmup_steps)
+
+    def update(u: Updates, state, ctx: TransformCtx):
+        lr_t = lr_at(ctx.step)
+        return u._replace(coeff=(lr_t / ctx.n_seeds) * u.g, lr=lr_t), state
+
+    return ZOTransform(lambda params: (), update, {"lr_at": lr_at})
+
+
+def add_weight_decay(weight_decay: float) -> ZOTransform:
+    """Decoupled weight decay: decay term η_t·λ, applied once per step (on
+    the first seed under n-SPSA, matching Algorithm 2).  Must follow
+    ``scale_by_schedule`` so ``Updates.lr`` is populated.  Incompatible with
+    applier transforms, which bypass the scalar decay slot — pass
+    ``weight_decay=`` to ``scale_by_zo_adam`` instead."""
+
+    def update(u: Updates, state, ctx: TransformCtx):
+        lr_t = u.lr if u.lr is not None else jnp.float32(1.0)
+        # The η·λ product is formed even when λ == 0 so the update graph is
+        # identical whether decay is on or off (λ enters as η·λ, never as a
+        # foldable constant): bitwise parity with the legacy optimizers.
+        wd_j = weight_decay if ctx.seed_index == 0 else 0.0
+        return u._replace(decay=lr_t * wd_j), state
+
+    return ZOTransform(lambda params: (), update,
+                       {"weight_decay": weight_decay,
+                        "scalar_decay": True})
+
+
+# --------------------------------------------------------------------------- #
+# ZO-Adam / momentum (paper §2.2 + Appendix B.2)
+# --------------------------------------------------------------------------- #
+def scale_by_zo_adam(beta1: float = 0.9, beta2: float = 0.999,
+                     adam_eps: float = 1e-8, materialized: bool = False,
+                     window: int = 32, momentum_only: bool = False,
+                     weight_decay: float = 0.0) -> ZOTransform:
+    """Adam (or momentum) preconditioning of the rank-1 ZO gradient.
+
+    Any moving average of g_τ·z_τ is a pure function of the scalar history
+    {g_τ}, so two modes share one formula:
+
+    * ``materialized=True``  — conventional Adam: m, v stored as full trees
+      (2× parameter memory — the thing the paper avoids).  The oracle.
+    * ``materialized=False`` — the paper's trick: a ring buffer of W scalars;
+      at update time m, v are recomputed leaf by leaf by replaying the
+      window's z's:  m_t ≈ (1−β1) Σ_{j<W} β1^j g_{t−j} z_{t−j}  (App. B.2).
+      Extra live memory is O(largest leaf) + W scalars; truncation error
+      decays as β^W.
+
+    This transform materializes its own update (sets ``final_params``), so it
+    keeps one ledger entry per step and must be the last applier in a chain.
+    """
+
+    def init(params):
+        g_hist = jnp.zeros((window,), jnp.float32)
+        if materialized:
+            if params is None:
+                raise ValueError("materialized scale_by_zo_adam needs params "
+                                 "at init")
+            return (g_hist, tree_zeros_like(params), tree_zeros_like(params))
+        return (g_hist, (), ())
+
+    def _materialized_update(params, m_tree, v_tree, skey, g, lr, t, dist):
+        def upd(i, p, m, v):
+            z = sample_leaf_z(leaf_key(skey, i), p, dist).astype(jnp.float32)
+            ghat = g.astype(jnp.float32) * z
+            m_new = beta1 * m + (1.0 - beta1) * ghat
+            if momentum_only:
+                delta = m_new
+            else:
+                v_new = beta2 * v + (1.0 - beta2) * ghat * ghat
+                m_hat = m_new / (1.0 - beta1 ** t.astype(jnp.float32))
+                v_hat = v_new / (1.0 - beta2 ** t.astype(jnp.float32))
+                delta = m_hat / (jnp.sqrt(v_hat) + adam_eps)
+            p_new = (p.astype(jnp.float32) - lr * delta
+                     - lr * weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+            return p_new, m_new, (m_new * 0 if momentum_only else v_new)
+
+        leaves_p, treedef = jax.tree_util.tree_flatten(params)
+        leaves_m = jax.tree_util.tree_leaves(m_tree)
+        leaves_v = jax.tree_util.tree_leaves(v_tree)
+        new_p, new_m, new_v = [], [], []
+        for i, (p, m, v) in enumerate(zip(leaves_p, leaves_m, leaves_v)):
+            a, b, c = upd(i, p, m, v)
+            new_p.append(a); new_m.append(b); new_v.append(c)
+        unf = jax.tree_util.tree_unflatten
+        return unf(treedef, new_p), unf(treedef, new_m), unf(treedef, new_v)
+
+    def _recomputed_update(params, base_key, cur_step, g_hist, lr, t, dist):
+        """App. B.2: rebuild m (and v) from the scalar ledger, one leaf at a
+        time, by replaying the window's z's.  O(W) forward-free tree passes
+        of compute, O(largest leaf) extra memory."""
+        W = window
+        j_idx = jnp.arange(W, dtype=jnp.float32)            # 0 = most recent
+        valid = (cur_step.astype(jnp.float32) - j_idx) >= 0
+        cm = jnp.where(valid, (1.0 - beta1) * beta1 ** j_idx * g_hist, 0.0)
+        cv = jnp.where(valid, (1.0 - beta2) * beta2 ** j_idx * g_hist ** 2, 0.0)
+
+        def upd(i, p):
+            if not jnp.issubdtype(p.dtype, jnp.floating):
+                return p
+
+            def body(j, acc):
+                m_acc, v_acc = acc
+                skey_j = step_key(base_key, cur_step - j)
+                z = sample_leaf_z(leaf_key(skey_j, i), p, dist).astype(jnp.float32)
+                m_acc = m_acc + cm[j] * z
+                v_acc = v_acc + cv[j] * z * z
+                return (m_acc, v_acc)
+
+            zero = jnp.zeros(p.shape, jnp.float32)
+            m, v = jax.lax.fori_loop(0, W, body, (zero, zero))
+            if momentum_only:
+                delta = m
+            else:
+                m_hat = m / (1.0 - beta1 ** t.astype(jnp.float32))
+                v_hat = v / (1.0 - beta2 ** t.astype(jnp.float32))
+                delta = m_hat / (jnp.sqrt(v_hat) + adam_eps)
+            return (p.astype(jnp.float32) - lr * delta
+                    - lr * weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+
+        return tree_map_with_index(upd, params)
+
+    def update(u: Updates, state, ctx: TransformCtx):
+        g_hist, m, v = state
+        g_hist = jnp.concatenate([jnp.reshape(u.g, (1,)), g_hist[:-1]])
+        t = ctx.step + 1                      # Adam bias-correction index
+        lr = u.lr if u.lr is not None else jnp.float32(1.0)
+        params0 = ctx.restore()
+        if materialized:
+            new_params, m, v = _materialized_update(
+                params0, m, v, ctx.key, u.g, lr, t, ctx.dist)
+        else:
+            new_params = _recomputed_update(
+                params0, ctx.base_key, ctx.step, g_hist, lr, t, ctx.dist)
+            m, v = (), ()
+        return u._replace(final_params=new_params), (g_hist, m, v)
+
+    return ZOTransform(init, update,
+                       {"applier": True, "window": window,
+                        "weight_decay": weight_decay})
+
+
+def trace(decay: float = 0.9, window: int = 32,
+          materialized: bool = False) -> ZOTransform:
+    """SGD-momentum on the rank-1 ZO gradient: m_t = β·m_{t−1} + (1−β)·g_t·z_t,
+    reconstructed from the scalar ring buffer exactly like ZO-Adam's first
+    moment (no second moment, no bias correction)."""
+    return scale_by_zo_adam(beta1=decay, materialized=materialized,
+                            window=window, momentum_only=True)

@@ -1,0 +1,49 @@
+"""The one primitive every ZO consumer shares: the seeded rank-1 update.
+
+A zeroth-order step is fully described by scalars — ``(key, coeff, decay)``
+with ``coeff = η·g`` — because the direction z is a pure function of the PRNG
+key (paper §2.1).  ``apply_rank1`` is therefore the single code path through
+which the optimizer facade, the trajectory-ledger replayer, the async
+straggler path, and the seed-parallel collective all write parameters:
+
+    θ ← (1 − decay) · θ − coeff · z(key)        [z optionally ⊙ d per leaf]
+
+Keeping one implementation means a ledger replay, a late async contribution,
+and a live training step are guaranteed to perform the identical arithmetic —
+the property the bitwise crash-recovery tests rely on.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perturb import Distribution, leaf_key, sample_leaf_z
+from repro.tree_utils import PyTree, tree_map_with_index
+
+
+def apply_rank1(params: PyTree, key: jax.Array, coeff, decay_term=0.0,
+                dist: Distribution = "gaussian",
+                d_tree: Optional[PyTree] = None) -> PyTree:
+    """θ ← (1 − decay_term)·θ − coeff·z(key), regenerating z leaf by leaf.
+
+    ``coeff`` is the full η-scaled scalar (η·g, or η/n·g per seed);
+    ``decay_term`` is the decoupled weight-decay coefficient η·λ.  ``d_tree``
+    holds one positive scalar per leaf and rescales z (Definition 6's
+    block-diagonal D); ``None`` leaves z unscaled (Definition 7 / plain SPSA).
+    Non-floating leaves pass through untouched.
+    """
+    d_leaves = jax.tree_util.tree_leaves(d_tree) if d_tree is not None else None
+
+    def one(i, p):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p
+        z = sample_leaf_z(leaf_key(key, i), p, dist)
+        if d_leaves is not None:
+            z = z * jnp.asarray(d_leaves[i], p.dtype)
+        coeff_ = jnp.asarray(coeff, p.dtype)
+        decay = jnp.asarray(1.0 - decay_term, p.dtype)
+        return decay * p - coeff_ * z
+
+    return tree_map_with_index(one, params)

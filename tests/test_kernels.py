@@ -1,11 +1,13 @@
 """Per-kernel validation (interpret=True on CPU): shape/dtype sweeps against
 the pure-jnp ref oracles, plus hypothesis property tests."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels.flash_attention import ops as flash_ops
 from repro.kernels.flash_attention.ref import attention_ref

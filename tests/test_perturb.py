@@ -1,12 +1,14 @@
 """Seeded perturbation machinery: determinism, restore cycles, distributions.
 Includes hypothesis property tests on the system's core invariant (z is a
 pure function of (key, leaf, shape) and the perturb chain is reversible)."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.core.perturb as P
 from repro.tree_utils import tree_allclose, tree_max_abs_diff, tree_size

@@ -1,0 +1,374 @@
+"""Protocol conformance for the composable ZO API (repro.zo).
+
+Every optimizer — composed (zo.mezo / zo.mezo_adam / zo.mezo_rescaled), the
+deprecated shims (MeZO / MeZOAdam / MeZOVariant), and the backprop baseline
+(Adam) — must speak the same protocol: ``init(params, *, seed)`` /
+``step_fn(loss_fn)`` / ``restore(state, step)``.  Beyond conformance:
+
+* checkpoint-resume step-counter correctness — the bug class the old
+  ``opt_state._replace(step=...)`` hack in train/loop.py papered over;
+* bitwise equivalence of the shims vs. their explicit compositions
+  (the acceptance bar for the deprecation);
+* transform-chain semantics (clip / schedule / weight decay / trace).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import zo
+from repro.core import MeZO, MeZOAdam, MeZOConfig, MeZOAdamConfig
+from repro.core.mezo_variants import MeZOVariant, MeZOVariantConfig
+from repro.train.adam import Adam, AdamConfig
+from repro.tree_utils import tree_max_abs_diff
+
+
+def target_tree(key=jax.random.PRNGKey(0)):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (12,)),
+            "b": jax.random.normal(k2, (3, 5))}
+
+
+TARGET = target_tree()
+
+
+def loss_fn(p, batch):
+    return 0.5 * sum(jnp.sum((x - y) ** 2) for x, y in
+                     zip(jax.tree_util.tree_leaves(p),
+                         jax.tree_util.tree_leaves(TARGET)))
+
+
+def start_params():
+    return jax.tree_util.tree_map(jnp.ones_like, TARGET)
+
+
+# One factory per optimizer family, all constructed the protocol way.
+OPTIMIZERS = {
+    "zo_mezo": lambda: zo.mezo(lr=1e-3, eps=1e-3, weight_decay=0.01),
+    "zo_mezo_clip_sched": lambda: zo.mezo(
+        lr=1e-3, eps=1e-3, clip_projected_grad=1.0, lr_schedule="linear",
+        total_steps=100, warmup_steps=3),
+    "zo_n_spsa": lambda: zo.mezo(lr=1e-3, eps=1e-3, n=3),
+    "zo_one_point": lambda: zo.mezo(lr=2e-4, eps=1e-2, estimator="one_point"),
+    "zo_mezo_adam": lambda: zo.mezo_adam(lr=1e-2, eps=1e-3, window=8),
+    "zo_mezo_adam_mat": lambda: zo.mezo_adam(lr=1e-2, eps=1e-3,
+                                             materialized=True),
+    "zo_rescaled": lambda: zo.mezo_rescaled(lr=1e-3, eps=1e-3,
+                                            d_source="param_norm"),
+    "shim_mezo": lambda: MeZO(MeZOConfig(lr=1e-3, eps=1e-3)),
+    "shim_mezo_adam": lambda: MeZOAdam(MeZOAdamConfig(lr=1e-2, eps=1e-3)),
+    "shim_variant": lambda: MeZOVariant(MeZOVariantConfig(lr=1e-3, eps=1e-3)),
+    "backprop_adam": lambda: Adam(AdamConfig(lr=1e-2, total_steps=100)),
+}
+
+
+@pytest.fixture(params=sorted(OPTIMIZERS), ids=sorted(OPTIMIZERS))
+def optimizer(request):
+    return OPTIMIZERS[request.param]()
+
+
+# --------------------------------------------------------------------------- #
+# Protocol conformance
+# --------------------------------------------------------------------------- #
+def test_protocol_init_step_restore_roundtrip(optimizer):
+    """Uniform surface: init(params, seed=)/step_fn/restore, a step counter
+    that counts, and restore() that realigns it without touching params."""
+    assert isinstance(optimizer, zo.Optimizer)   # structural (Protocol) check
+    params = start_params()
+    state = optimizer.init(params, seed=0)
+    assert int(state.step) == 0
+    step = jax.jit(optimizer.step_fn(loss_fn))
+    for k in range(3):
+        params, state, metrics = step(params, state, None)
+        assert int(state.step) == k + 1
+        assert "loss" in metrics and "lr" in metrics
+    restored = optimizer.restore(state, 11)
+    assert int(restored.step) == 11
+    # restore is bookkeeping only: everything else unchanged
+    for a, b in zip(jax.tree_util.tree_leaves(state)[1:],
+                    jax.tree_util.tree_leaves(restored)[1:]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # restored state still steps
+    p2, s2, _ = step(params, restored, None)
+    assert int(s2.step) == 12
+
+
+def test_step_counter_drives_seed_and_lr():
+    """Two states at different step counters must produce different
+    perturbation seeds — the resume-correctness property."""
+    opt = zo.mezo(lr=1e-3, eps=1e-3)
+    params = start_params()
+    step = jax.jit(opt.step_fn(loss_fn))
+    s0 = opt.init(params, seed=0)
+    p_a, _, m_a = step(params, s0, None)
+    p_b, _, m_b = step(params, opt.restore(s0, 5), None)
+    assert float(m_a["projected_grad"]) != float(m_b["projected_grad"])
+    assert tree_max_abs_diff(p_a, p_b) > 0
+
+
+# --------------------------------------------------------------------------- #
+# Checkpoint-resume step-counter correctness (the old _replace bug class)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("make_opt,use_ledger", [
+    (lambda: MeZO(MeZOConfig(lr=1e-3, eps=1e-3)), True),
+    (lambda: zo.mezo(lr=1e-3, eps=1e-3), True),
+    # Adam-preconditioned updates are not rank-1 in (g, lr), so its resume
+    # path is the full state checkpoint (no scalar-ledger tail replay).
+    (lambda: MeZOAdam(MeZOAdamConfig(lr=5e-3, eps=1e-3, window=8)), False),
+], ids=["shim_mezo", "zo_mezo", "shim_mezo_adam"])
+def test_crash_resume_realigns_step_counter(tmp_path, make_opt, use_ledger):
+    """Resume via full ckpt (+ ledger tail for rank-1 optimizers) must leave
+    the optimizer's step counter at the resume point (seed source + lr
+    index), and the continued run must match an uninterrupted one."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import TrajectoryLedger
+    from repro.data.pipeline import DataSpec, Pipeline
+    from repro.train.loop import FailureInjector, train
+
+    pipe = Pipeline(DataSpec("lm", batch=2, seq=4, vocab=11, seed=1))
+
+    def lm_loss(p, batch):
+        del batch
+        return loss_fn(p, None)
+
+    T = 10
+    params = start_params()
+    ref = train(lm_loss, params, make_opt(), pipe, total_steps=T, donate=False)
+    assert int(ref.opt_state.step) == T
+
+    ck = CheckpointManager(str(tmp_path / "run"), interval=4)
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32") if use_ledger else None
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train(lm_loss, params, make_opt(), pipe, total_steps=T, ckpt=ck,
+              ledger=led, injector=FailureInjector(fail_at_step=7),
+              donate=False)
+
+    led2 = TrajectoryLedger(base_seed=0, grad_dtype="float32") if use_ledger else None
+    res = train(lm_loss, params, make_opt(), pipe, total_steps=T, ckpt=ck,
+                ledger=led2, donate=False)
+    # ledger resumes at the crash point; ckpt-only resumes at the last save
+    assert res.resumed_from == (7 if use_ledger else 4)
+    assert int(res.opt_state.step) == T           # counter realigned + run out
+    assert tree_max_abs_diff(res.params, ref.params) < 1e-5
+
+
+# --------------------------------------------------------------------------- #
+# Shim vs. composition equivalence (the deprecation acceptance bar)
+# --------------------------------------------------------------------------- #
+def _run(opt, state, steps):
+    p = start_params()
+    step = jax.jit(opt.step_fn(loss_fn))
+    for _ in range(steps):
+        p, state, m = step(p, state, None)
+    return p, m
+
+
+def _assert_bitwise(pa, pb):
+    for x, y in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_composed_mezo_bitwise_equals_shim_25_steps():
+    """zo.mezo(...) and the MeZO shim must take bitwise-identical steps over
+    >= 20 steps on a fixed seed (clip + schedule + weight decay engaged)."""
+    cfg = dict(lr=1e-3, eps=1e-3, weight_decay=0.01, clip_projected_grad=2.0,
+               lr_schedule="linear", total_steps=200, warmup_steps=5)
+    shim = MeZO(MeZOConfig(**cfg))
+    composed = zo.mezo(**cfg)
+    pa, ma = _run(shim, shim.init(7), 25)
+    pb, mb = _run(composed, composed.init(start_params(), seed=7), 25)
+    _assert_bitwise(pa, pb)
+    assert float(ma["projected_grad"]) == float(mb["projected_grad"])
+    assert float(ma["lr"]) == float(mb["lr"])
+
+
+@pytest.mark.parametrize("n", [1, 4], ids=["n1", "n4"])
+def test_composed_nspsa_bitwise_equals_shim(n):
+    shim = MeZO(MeZOConfig(lr=1e-3, eps=1e-3, n=n))
+    composed = zo.mezo(lr=1e-3, eps=1e-3, n=n)
+    pa, _ = _run(shim, shim.init(3), 20)
+    pb, _ = _run(composed, composed.init(None, seed=3), 20)
+    _assert_bitwise(pa, pb)
+
+
+def test_composed_one_point_bitwise_equals_shim():
+    shim = MeZO(MeZOConfig(lr=2e-4, eps=1e-2, estimator="one_point"))
+    composed = zo.mezo(lr=2e-4, eps=1e-2, estimator="one_point")
+    pa, _ = _run(shim, shim.init(5), 20)
+    pb, _ = _run(composed, composed.init(None, seed=5), 20)
+    _assert_bitwise(pa, pb)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(materialized=False, window=16),
+    dict(materialized=True),
+    dict(materialized=False, window=16, momentum_only=True),
+], ids=["ring", "materialized", "momentum"])
+def test_mezo_adam_shim_matches_composition(kw):
+    """Shim trajectories must match the composition within fp tolerance
+    (they are bitwise today; the tolerance is the contract)."""
+    shim = MeZOAdam(MeZOAdamConfig(lr=1e-2, eps=1e-3, beta2=0.95, **kw))
+    composed = zo.mezo_adam(lr=1e-2, eps=1e-3, beta2=0.95, **kw)
+    pa, _ = _run(shim, shim.init(start_params(), seed=9), 20)
+    pb, _ = _run(composed, composed.init(start_params(), seed=9), 20)
+    assert tree_max_abs_diff(pa, pb) < 1e-6
+
+
+@pytest.mark.parametrize("modify_expectation", [False, True],
+                         ids=["def6", "def7"])
+def test_variant_shim_matches_composition(modify_expectation):
+    shim = MeZOVariant(MeZOVariantConfig(
+        lr=1e-3, eps=1e-3, d_source="param_norm",
+        modify_expectation=modify_expectation))
+    composed = zo.mezo_rescaled(lr=1e-3, eps=1e-3, d_source="param_norm",
+                                modify_expectation=modify_expectation)
+    pa, _ = _run(shim, shim.init(start_params(), seed=11), 20)
+    pb, _ = _run(composed, composed.init(start_params(), seed=11), 20)
+    assert tree_max_abs_diff(pa, pb) < 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# Transform-chain semantics
+# --------------------------------------------------------------------------- #
+def test_clip_transform_bounds_ledger_scalar():
+    explode = lambda p, b: 1e6 * jnp.sum(p["a"]) + 0.0 * jnp.sum(p["b"])
+    opt = zo.ZOOptimizer(zo.estimators.spsa(eps=1e-3),
+                         zo.chain(zo.transforms.clip_projected_grad(1.0),
+                                  zo.transforms.scale_by_schedule(1e-3)))
+    state = opt.init(None, seed=0)
+    _, _, m = jax.jit(opt.step_fn(explode))(start_params(), state, None)
+    assert abs(float(m["projected_grad"])) <= 1.0
+
+
+def test_weight_decay_transform_decays_params():
+    zero_loss = lambda p, b: 0.0 * sum(jnp.sum(x) for x in
+                                       jax.tree_util.tree_leaves(p))
+    opt = zo.ZOOptimizer(zo.estimators.spsa(eps=1e-3),
+                         zo.chain(zo.transforms.scale_by_schedule(0.1),
+                                  zo.transforms.add_weight_decay(0.5)))
+    state = opt.init(None, seed=0)
+    p1, _, _ = jax.jit(opt.step_fn(zero_loss))(start_params(), state, None)
+    np.testing.assert_allclose(np.asarray(p1["a"]), 0.95 * np.ones(12),
+                               rtol=1e-3)
+
+
+def test_trace_momentum_descends():
+    opt = zo.ZOOptimizer(zo.estimators.spsa(eps=1e-3),
+                         zo.chain(zo.transforms.scale_by_schedule(5e-3),
+                                  zo.transforms.trace(0.9, window=16)))
+    params = start_params()
+    state = opt.init(params, seed=0)
+    step = jax.jit(opt.step_fn(loss_fn))
+    l0 = float(loss_fn(params, None))
+    for _ in range(300):
+        params, state, _ = step(params, state, None)
+    assert float(loss_fn(params, None)) < 0.5 * l0
+
+
+def test_applier_transform_rejects_interleaved_nspsa():
+    with pytest.raises(ValueError, match="n-SPSA"):
+        zo.ZOOptimizer(zo.estimators.n_spsa(4, eps=1e-3),
+                       zo.chain(zo.transforms.scale_by_schedule(1e-3),
+                                zo.transforms.scale_by_zo_adam()))
+
+
+def test_applier_transform_rejects_scalar_weight_decay():
+    """add_weight_decay's decay slot is bypassed by applier transforms; the
+    facade must reject the silent-no-op combination."""
+    with pytest.raises(ValueError, match="weight_decay"):
+        zo.ZOOptimizer(zo.estimators.spsa(eps=1e-3),
+                       zo.chain(zo.transforms.scale_by_schedule(1e-3),
+                                zo.transforms.add_weight_decay(0.01),
+                                zo.transforms.scale_by_zo_adam()))
+
+
+def test_replay_update_rejects_applier_compositions():
+    """A (seed, g, lr) triple cannot reconstruct an Adam-preconditioned step
+    (it also depends on the g-history window): replay must refuse rather
+    than silently misreconstruct."""
+    opt = zo.mezo_adam(lr=1e-3, eps=1e-3)
+    skey = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="ledger replay"):
+        opt.replay_update(start_params(), skey, jnp.float32(0.5),
+                          jnp.float32(1e-3))
+
+
+def test_async_worker_rejects_stateful_estimator():
+    from repro.distributed.async_zo import AsyncZOWorker
+    with pytest.raises(ValueError, match="stateless"):
+        AsyncZOWorker(0, 2, start_params(), loss_fn,
+                      zo.mezo(lr=1e-3, eps=1e-2, estimator="one_point"))
+
+
+def test_replay_and_async_reject_definition6_rescaled():
+    """Definition-6 updates run along D·z; a (seed, g, lr) ledger entry (and
+    the async wire format) can only reproduce plain rank-1 updates."""
+    from repro.distributed.async_zo import AsyncZOWorker
+    opt6 = zo.mezo_rescaled(lr=1e-3, eps=1e-3, d_source="param_norm")
+    with pytest.raises(ValueError, match="Definition 6"):
+        opt6.replay_update(start_params(), jax.random.PRNGKey(0),
+                           jnp.float32(0.5), jnp.float32(1e-3))
+    with pytest.raises(ValueError, match="Definition 6"):
+        AsyncZOWorker(0, 2, start_params(), loss_fn, opt6)
+    # Definition 7 (modify_expectation) updates along plain z: replayable.
+    opt7 = zo.mezo_rescaled(lr=1e-3, eps=1e-3, d_source="param_norm",
+                            modify_expectation=True)
+    opt7.replay_update(start_params(), jax.random.PRNGKey(0),
+                       jnp.float32(0.5), jnp.float32(1e-3))
+
+
+def test_ledger_with_non_zo_optimizer_fails_clearly():
+    from repro.core import TrajectoryLedger
+    from repro.data.pipeline import DataSpec, Pipeline
+    from repro.train.loop import train
+    pipe = Pipeline(DataSpec("lm", batch=2, seq=4, vocab=11, seed=1))
+    with pytest.raises(ValueError, match="ledger recording requires"):
+        train(lambda p, b: loss_fn(p, None), start_params(),
+              Adam(AdamConfig(lr=1e-3)), pipe, total_steps=2,
+              ledger=TrajectoryLedger(base_seed=0), donate=False)
+
+
+def test_replay_update_matches_live_step_arithmetic():
+    """The protocol's replay_update applies the identical rank-1 arithmetic a
+    live (center-perturb) step applies — the ledger-recovery invariant."""
+    opt = zo.mezo(lr=1e-3, eps=1e-3, weight_decay=0.01)
+    params = start_params()
+    state = opt.init(params, seed=4)
+    p1, _, m = jax.jit(opt.step_fn(loss_fn))(params, state, None)
+    from repro.core.perturb import step_key
+    skey = step_key(opt.init(params, seed=4).base_key, jnp.int32(0))
+    p_replayed = opt.replay_update(params, skey, m["projected_grad"], m["lr"])
+    assert tree_max_abs_diff(p1, p_replayed) < 1e-6
+
+
+def test_custom_estimator_plugs_in():
+    """The extension point the redesign buys: a new estimator is one factory,
+    not a new optimizer class.  Forward-difference two-point as a demo."""
+    def forward_diff(eps=1e-3, dist="gaussian"):
+        from repro.core.perturb import perturb
+
+        def init(params, key):
+            return ()
+
+        def estimate(loss, params, batch, key, est_state):
+            l0 = loss(params, batch)
+            lp = loss(perturb(params, key, eps, dist), batch)
+            g = (lp - l0) / eps
+            return zo.ZOEstimate(
+                projected_grad=g, loss=l0,
+                apply_update=lambda c, d: zo.apply_rank1(params, key, c, d, dist),
+                restore=lambda: params, est_state=est_state, aux={})
+
+        return zo.ZOEstimator(init=init, estimate=estimate, n_seeds=1,
+                              eps=eps, dist=dist, name="forward_diff")
+
+    opt = zo.ZOOptimizer(forward_diff(eps=1e-3),
+                         zo.chain(zo.transforms.scale_by_schedule(2e-3)))
+    params = start_params()
+    state = opt.init(params, seed=0)
+    step = jax.jit(opt.step_fn(loss_fn))
+    l0 = float(loss_fn(params, None))
+    for _ in range(400):
+        params, state, _ = step(params, state, None)
+    assert float(loss_fn(params, None)) < 0.5 * l0
