@@ -18,6 +18,7 @@ import traceback
 
 BENCHES = [
     ("storage", "benchmarks.bench_storage"),
+    ("perturb", "benchmarks.bench_perturb"),
     ("wallclock", "benchmarks.bench_wallclock"),
     ("memory", "benchmarks.bench_memory"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -10,6 +10,12 @@ Two artifact kinds per run directory:
 Recovery = newest full checkpoint + replay of the ledger tail: a node can
 rejoin from a ~0.1 MB object at any step (paper §2.1 promoted to fault
 tolerance; bitwise-equality tested).
+
+Both artifacts record the perturbation backend (``repro.perturb``) that
+generated the run's z streams — checkpoint meta carries ``perturb_backend``,
+the ledger its ``backend`` field — and recovery refuses a mismatched backend
+(``BackendMismatchError``) instead of silently reconstructing different
+parameters from a different z stream.
 """
 from __future__ import annotations
 
@@ -93,7 +99,9 @@ class CheckpointManager:
         """Full ckpt at ``ckpt_step`` + ledger tail -> params at ledger head.
         No data access, no forward passes (paper §2.1).  ``optimizer`` is any
         ``repro.zo`` protocol conformer (or, for backward compatibility, a
-        legacy config object) — its ``replay_update`` applies the tail."""
+        legacy config object) — its ``replay_update`` applies the tail.
+        Raises ``BackendMismatchError`` if the ledger was recorded under a
+        different perturbation backend than the optimizer's."""
         ledger = self.load_ledger()
         if ledger is None or len(ledger) == 0:
             return params_at_ckpt, ckpt_step

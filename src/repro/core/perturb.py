@@ -1,129 +1,25 @@
-"""Seeded, never-materialized parameter perturbations (the heart of MeZO).
+"""Compatibility shim — the seeded-perturbation machinery moved to
+``repro.perturb`` (the pluggable backend layer).
 
-The paper's in-place trick — "reset the RNG with seed s and resample z at each
-of its four uses" — maps onto JAX as: *z for any parameter leaf is a pure
-function of (key, leaf_index)*.  Threefry is counter-based, so regenerating z
-is exact, cheap, requires no storage and no cross-host communication, and under
-``pjit`` each shard generates exactly its slice of the same global z regardless
-of the mesh (XLA partitions the iota+hash lowering of ``jax.random.normal``).
+This module re-exports the threefry (``xla`` backend) primitives so legacy
+imports keep working; new code should go through ``repro.perturb``:
 
-Memory: under ``jax.jit(..., donate_argnums=(params,))`` the sequential
-perturb -> loss -> perturb -> loss -> update chain lets XLA reuse the parameter
-buffers, and each leaf's z is a short-lived temporary.  The Pallas kernel in
-``repro.kernels.zo_fused`` pushes this one level further down the memory
-hierarchy: z tiles are generated inside VMEM and never exist in HBM.
+    from repro.perturb import StreamRef, get_backend
+    backend = get_backend("xla")          # or "pallas" — VMEM z generation
+    p_plus = backend.perturb(params, StreamRef(key), eps)
+
+Everything here is the *same object* as in ``repro.perturb.xla`` (moved, not
+copied), so arithmetic — and therefore every existing ledger and checkpoint —
+is bit-identical.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Literal
+from repro.perturb.xla import (Distribution, fused_restore_update, leaf_key,
+                               perturb, perturb_jit, sample_leaf_z,
+                               sample_z_tree, step_key, _sphere_scale)
 
-import jax
-import jax.numpy as jnp
-
-from repro.tree_utils import PyTree, tree_map_with_index, tree_sq_norm, tree_size
-
-Distribution = Literal["gaussian", "rademacher", "sphere"]
-
-
-def leaf_key(key: jax.Array, leaf_idx: int) -> jax.Array:
-    """Stable per-leaf PRNG key."""
-    return jax.random.fold_in(key, leaf_idx)
-
-
-def step_key(base_key: jax.Array, step) -> jax.Array:
-    """Per-step key: the paper's 'sample random seed s' for step t."""
-    return jax.random.fold_in(base_key, step)
-
-
-def sample_leaf_z(key: jax.Array, leaf: jnp.ndarray, dist: Distribution = "gaussian",
-                  zo_dtype=None) -> jnp.ndarray:
-    """Sample the perturbation direction for one leaf.
-
-    ``zo_dtype`` controls the dtype z is *sampled* in (defaults to the leaf
-    dtype); the result is cast back to the leaf dtype so perturbation is a
-    same-dtype add, as in the paper's in-place implementation.
-    """
-    sdtype = zo_dtype or (leaf.dtype if jnp.issubdtype(leaf.dtype, jnp.floating) else jnp.float32)
-    if dist == "gaussian":
-        z = jax.random.normal(key, leaf.shape, sdtype)
-    elif dist == "rademacher":
-        z = jax.random.rademacher(key, leaf.shape, sdtype)
-    elif dist == "sphere":
-        # Direction only; the global sqrt(d)/||z|| rescale is applied by the
-        # caller (it needs the full-tree norm).
-        z = jax.random.normal(key, leaf.shape, sdtype)
-    else:
-        raise ValueError(f"unknown distribution {dist!r}")
-    return z.astype(leaf.dtype)
-
-
-def sample_z_tree(params: PyTree, key: jax.Array, dist: Distribution = "gaussian") -> PyTree:
-    """Materialize the whole z tree.  Used by tests/oracles only — the actual
-    optimizer never calls this (that is the point of the paper)."""
-    z = tree_map_with_index(lambda i, p: sample_leaf_z(leaf_key(key, i), p, dist), params)
-    if dist == "sphere":
-        d = tree_size(params)
-        scale = jnp.sqrt(d / tree_sq_norm(z))
-        z = jax.tree_util.tree_map(lambda x: (x * scale.astype(x.dtype)), z)
-    return z
-
-
-def _sphere_scale(params: PyTree, key: jax.Array) -> jnp.ndarray:
-    """sqrt(d)/||z|| for sphere sampling, computed by regenerating z leaf-wise
-    (two-pass; still never stores the tree)."""
-    d = tree_size(params)
-    sq = jnp.float32(0)
-    leaves = jax.tree_util.tree_leaves(params)
-    for i, p in enumerate(leaves):
-        z = sample_leaf_z(leaf_key(key, i), p, "gaussian")
-        sq = sq + jnp.sum(z.astype(jnp.float32) ** 2)
-    return jnp.sqrt(d / sq)
-
-
-def perturb(params: PyTree, key: jax.Array, scale, dist: Distribution = "gaussian") -> PyTree:
-    """θ + scale · z(key)  — the paper's ``PerturbParameters(θ, scale, s)``.
-
-    ``scale`` may be a traced scalar (used for the fused restore+update).
-    Regenerating with the same ``key`` always yields the same z.
-    """
-    if dist == "sphere":
-        sph = _sphere_scale(params, key)
-    def one(i: int, p: jnp.ndarray) -> jnp.ndarray:
-        z = sample_leaf_z(leaf_key(key, i), p, dist)
-        if dist == "sphere":
-            z = z * sph.astype(z.dtype)
-        s = jnp.asarray(scale, p.dtype) if jnp.issubdtype(p.dtype, jnp.floating) else scale
-        return p + s * z
-    return tree_map_with_index(one, params)
-
-
-def fused_restore_update(params_minus: PyTree, key: jax.Array, eps, lr_g, weight_decay=0.0,
-                         dist: Distribution = "gaussian") -> PyTree:
-    """Given θ − εz (the state after the second perturbation), produce the
-    post-step parameters in ONE pass over the tree:
-
-        θ_new = (1 − η·λ) · (θ − εz + εz) − η·g·z
-               = (1 − η·λ) · θ  − η·g·z        (decoupled weight decay)
-
-    regenerating each leaf's z exactly once.  This fuses the paper's
-    'reset parameters' and 'descent' loops and halves the number of z
-    regenerations per step (4 -> 3).
-    """
-    if dist == "sphere":
-        sph = _sphere_scale(params_minus, key)
-    decay = 1.0 - weight_decay
-    def one(i: int, p: jnp.ndarray) -> jnp.ndarray:
-        z = sample_leaf_z(leaf_key(key, i), p, dist)
-        if dist == "sphere":
-            z = z * sph.astype(z.dtype)
-        eps_ = jnp.asarray(eps, p.dtype)
-        lr_g_ = jnp.asarray(lr_g, p.dtype)
-        restored = p + eps_ * z
-        return jnp.asarray(decay, p.dtype) * restored - lr_g_ * z
-    return tree_map_with_index(one, params_minus)
-
-
-@functools.partial(jax.jit, static_argnames=("dist",))
-def perturb_jit(params: PyTree, key: jax.Array, scale, dist: Distribution = "gaussian") -> PyTree:
-    return perturb(params, key, scale, dist)
+__all__ = [
+    "Distribution", "fused_restore_update", "leaf_key", "perturb",
+    "perturb_jit", "sample_leaf_z", "sample_z_tree", "step_key",
+    "_sphere_scale",
+]

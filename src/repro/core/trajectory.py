@@ -24,17 +24,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.perturb import step_key
+from repro.perturb import check_replay_backend
 from repro.tree_utils import PyTree
 from repro.zo.presets import as_zo_optimizer
 
-_MAGIC = b"MZOL1\x00"
+_MAGIC = b"MZOL1\x00"          # legacy format: no backend record (implies xla)
+_MAGIC2 = b"MZOL2\x00"         # adds the perturbation-backend name
 
 
 @dataclasses.dataclass
 class TrajectoryLedger:
-    """Append-only scalar record of a MeZO run."""
+    """Append-only scalar record of a MeZO run.
+
+    ``backend`` records which perturbation backend generated the run's z
+    streams (``repro.perturb``); replay refuses a mismatched backend because
+    the streams differ (``BackendMismatchError``).  Legacy ``MZOL1`` files
+    deserialize with ``backend="xla"`` (the only backend that existed)."""
     base_seed: int
     grad_dtype: str = "float16"       # the paper's 2-bytes-per-step accounting
+    backend: str = "xla"              # perturbation backend of the run
     steps: list = dataclasses.field(default_factory=list)    # step indices
     grads: list = dataclasses.field(default_factory=list)    # projected grads
     lrs: list = dataclasses.field(default_factory=list)      # lr actually used
@@ -51,9 +59,12 @@ class TrajectoryLedger:
     # -- serialization ----------------------------------------------------- #
     def to_bytes(self) -> bytes:
         buf = io.BytesIO()
-        buf.write(_MAGIC)
+        buf.write(_MAGIC2)
         buf.write(struct.pack("<qi", self.base_seed,
                               1 if self.grad_dtype == "float16" else 4))
+        bname = self.backend.encode("utf-8")
+        buf.write(struct.pack("<i", len(bname)))
+        buf.write(bname)
         buf.write(struct.pack("<q", len(self.steps)))
         buf.write(np.asarray(self.steps, np.int64).tobytes())
         buf.write(np.asarray(self.grads, self.grad_dtype).tobytes())
@@ -63,14 +74,19 @@ class TrajectoryLedger:
     @classmethod
     def from_bytes(cls, raw: bytes) -> "TrajectoryLedger":
         buf = io.BytesIO(raw)
-        assert buf.read(len(_MAGIC)) == _MAGIC, "not a MeZO ledger"
+        magic = buf.read(len(_MAGIC))
+        assert magic in (_MAGIC, _MAGIC2), "not a MeZO ledger"
         seed, dcode = struct.unpack("<qi", buf.read(12))
+        backend = "xla"                       # MZOL1 predates backend choice
+        if magic == _MAGIC2:
+            blen, = struct.unpack("<i", buf.read(4))
+            backend = buf.read(blen).decode("utf-8")
         n, = struct.unpack("<q", buf.read(8))
         dtype = "float16" if dcode == 1 else "float32"
         steps = np.frombuffer(buf.read(8 * n), np.int64)
         grads = np.frombuffer(buf.read(np.dtype(dtype).itemsize * n), dtype)
         lrs = np.frombuffer(buf.read(4 * n), np.float32)
-        led = cls(base_seed=seed, grad_dtype=dtype)
+        led = cls(base_seed=seed, grad_dtype=dtype, backend=backend)
         led.steps = [int(s) for s in steps]
         led.grads = [float(g) for g in grads]
         led.lrs = [float(l) for l in lrs]
@@ -90,8 +106,13 @@ def replay(params0: PyTree, ledger: TrajectoryLedger, optimizer,
 
     ``optimizer`` is anything conforming to the ``repro.zo`` protocol (a
     ``ZOOptimizer``, a shim, or — for backward compatibility — a legacy
-    ``MeZOConfig``-like object, converted via ``as_zo_optimizer``)."""
+    ``MeZOConfig``-like object, converted via ``as_zo_optimizer``).  If the
+    ledger records a perturbation backend different from the optimizer's,
+    replay raises ``BackendMismatchError`` — the z streams differ, so the
+    reconstruction would silently diverge."""
     opt = as_zo_optimizer(optimizer)
+    check_replay_backend(ledger.backend,
+                         getattr(opt, "backend_name", None), "trajectory ledger")
     base_key = jax.random.PRNGKey(ledger.base_seed)
     to_idx = len(ledger) if to_idx is None else to_idx
 

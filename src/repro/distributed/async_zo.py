@@ -8,8 +8,10 @@ exchange tensors — the wire format is 16 bytes per contribution.
 
 The worker consumes the ``repro.zo`` facade: its local evaluation is the
 optimizer's *estimator* (the same sequential SPSA chain as a training step)
-and remote application is the shared ``apply_rank1`` primitive — so a late
-contribution performs arithmetic identical to a live step.
+and remote application is the optimizer's perturbation backend's
+``apply_rank1`` primitive — so a late contribution regenerates the identical
+z (same backend, same ``StreamRef``) and performs arithmetic identical to a
+live step.
 
 Model (synchronous-equivalent at staleness 0):
   * each worker w at step t evaluates seed (t, w) on its batch shard and
@@ -33,9 +35,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.perturb import step_key
+from repro.perturb import StreamRef
 from repro.tree_utils import PyTree
 from repro.zo.presets import as_zo_optimizer
-from repro.zo.updates import apply_rank1
 
 
 @dataclasses.dataclass
@@ -99,10 +101,12 @@ class AsyncZOWorker:
         return e.projected_grad, e.loss
 
     def _apply(self, params, skey, g, lr):
+        # the optimizer's own backend: a late remote application performs the
+        # identical z regeneration + arithmetic as the producer's live step
         lr_w = lr / self.n
-        return apply_rank1(params, skey, lr_w * g,
-                           lr_w * self.opt.weight_decay,
-                           self.opt.estimator.dist)
+        return self.opt.backend.apply_rank1(params, StreamRef(skey), lr_w * g,
+                                            lr_w * self.opt.weight_decay,
+                                            self.opt.estimator.dist)
 
     def produce(self, batch) -> Contribution:
         """Evaluate this worker's seed for its current step."""

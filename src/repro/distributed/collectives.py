@@ -28,10 +28,10 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.perturb import perturb, step_key
+from repro.core.perturb import step_key
+from repro.perturb import StreamRef, get_backend
 from repro.tree_utils import PyTree
 from repro.zo.presets import as_zo_optimizer
-from repro.zo.updates import apply_rank1
 
 
 def psum_scalar(x: jnp.ndarray, axis_name) -> jnp.ndarray:
@@ -59,6 +59,7 @@ def seed_parallel_step_fn(loss_fn: Callable, optimizer, n_groups: int):
     opt = as_zo_optimizer(optimizer)
     eps, dist = opt.estimator.eps, opt.estimator.dist
     weight_decay = opt.weight_decay
+    backend = opt.backend
 
     def step(params: PyTree, state: SeedParallelState, batch):
         skey0 = step_key(state.base_key, state.step)
@@ -72,20 +73,20 @@ def seed_parallel_step_fn(loss_fn: Callable, optimizer, n_groups: int):
 
         gs, losses = [], []
         for g in range(n_groups):
-            skey = jax.random.fold_in(skey0, g)
+            ref = StreamRef(jax.random.fold_in(skey0, g))
             bg = slice_g(batch, g)
-            p_plus = perturb(params, skey, eps, dist)
+            p_plus = backend.perturb(params, ref, eps, dist)
             l_plus = loss_fn(p_plus, bg)
-            p_minus = perturb(p_plus, skey, -2.0 * eps, dist)
+            p_minus = backend.perturb(p_plus, ref, -2.0 * eps, dist)
             l_minus = loss_fn(p_minus, bg)
             # restore to center before the next group's perturbation
-            params = perturb(p_minus, skey, eps, dist)
+            params = backend.perturb(p_minus, ref, eps, dist)
             gs.append((l_plus - l_minus) / (2.0 * eps))
             losses.append(0.5 * (l_plus + l_minus))
 
         p = apply_seed_parallel_update(params, state.base_key, state.step,
                                        jnp.stack(gs), lr, n_groups,
-                                       weight_decay, dist)
+                                       weight_decay, dist, backend=backend)
         new_state = SeedParallelState(state.step + 1, state.base_key)
         return p, new_state, {"loss": jnp.mean(jnp.stack(losses)),
                               "projected_grads": jnp.stack(gs), "lr": lr}
@@ -95,17 +96,18 @@ def seed_parallel_step_fn(loss_fn: Callable, optimizer, n_groups: int):
 
 def seed_parallel_grads(loss_fn: Callable, params: PyTree, batches: PyTree,
                         base_key, step_idx, eps: float, n_groups: int,
-                        dist: str = "gaussian") -> jnp.ndarray:
+                        dist: str = "gaussian", backend=None) -> jnp.ndarray:
     """Pure estimator form (used by tests): group g evaluates seed g on
     ``batches[g]``; returns the n projected-grad scalars."""
+    be = get_backend(backend)
     skey0 = step_key(base_key, step_idx)
     gs = []
     for g in range(n_groups):
-        skey = jax.random.fold_in(skey0, g)
+        ref = StreamRef(jax.random.fold_in(skey0, g))
         bg = jax.tree_util.tree_map(lambda x: x[g], batches)
-        p_plus = perturb(params, skey, eps, dist)
+        p_plus = be.perturb(params, ref, eps, dist)
         l_plus = loss_fn(p_plus, bg)
-        p_minus = perturb(p_plus, skey, -2.0 * eps, dist)
+        p_minus = be.perturb(p_plus, ref, -2.0 * eps, dist)
         l_minus = loss_fn(p_minus, bg)
         gs.append((l_plus - l_minus) / (2.0 * eps))
     return jnp.stack(gs)
@@ -114,14 +116,16 @@ def seed_parallel_grads(loss_fn: Callable, params: PyTree, batches: PyTree,
 def apply_seed_parallel_update(params: PyTree, base_key, step_idx,
                                grads: jnp.ndarray, lr, n_groups: int,
                                weight_decay: float = 0.0,
-                               dist: str = "gaussian") -> PyTree:
+                               dist: str = "gaussian",
+                               backend=None) -> PyTree:
     """θ ← θ − (η/n) Σ_g g_g · z_g  (identical on every replica), via the
-    shared rank-1 primitive; decay applied once, on the first group."""
+    backend's rank-1 primitive; decay applied once, on the first group."""
+    be = get_backend(backend)
     skey0 = step_key(base_key, step_idx)
     lr_g = lr / n_groups
     p = params
     for g in range(n_groups):
-        skey = jax.random.fold_in(skey0, g)
+        ref = StreamRef(jax.random.fold_in(skey0, g))
         wd = weight_decay if g == 0 else 0.0
-        p = apply_rank1(p, skey, lr_g * grads[g], lr_g * wd, dist)
+        p = be.apply_rank1(p, ref, lr_g * grads[g], lr_g * wd, dist)
     return p

@@ -1,67 +1,16 @@
-"""jit'd public wrappers: arbitrary-shape ZO perturb/update on one leaf,
-and a whole-tree MeZO step built on the kernel.
+"""Compatibility shim — the kernel-backed tree operations moved to
+``repro.perturb.pallas``, where they serve as the first-class ``pallas``
+perturbation backend (selected via ``zo.mezo(..., backend="pallas")``).
 
-``zo_affine`` reshapes/pads any leaf to the kernel's 2-D blocked view; the
-padding tail consumes counter indices but its z values are discarded (the
-counter stream is position-stable, so the same (leaf, seed) always yields
-the same z regardless of how the tree around it changes).
+Legacy entry points (``zo_affine``, ``perturb_tree``, ``update_tree``,
+``mezo_step_kernel``, ``leaf_seed``) re-export unchanged; the counter-seed
+schedule is bit-compatible, so z streams produced through either path are
+identical.
 """
 from __future__ import annotations
 
-import functools
+from repro.perturb.pallas import (leaf_seed, mezo_step_kernel, perturb_tree,
+                                  update_tree, zo_affine)
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.zo_fused.kernel import (BLOCK_COLS, BLOCK_ROWS,
-                                           zo_affine_2d)
-from repro.tree_utils import PyTree, tree_map_with_index
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def zo_affine(x: jnp.ndarray, seed, a, b, interpret: bool = True) -> jnp.ndarray:
-    """y = a·x + b·z(seed) for an arbitrary-shape leaf."""
-    n = x.size
-    width = BLOCK_ROWS * BLOCK_COLS
-    n_pad = ((n + width - 1) // width) * width
-    flat = jnp.pad(x.reshape(-1), (0, n_pad - n))
-    y = zo_affine_2d(flat.reshape(-1, BLOCK_COLS),
-                     jnp.asarray(seed, jnp.int32), a, b, interpret=interpret)
-    return y.reshape(-1)[:n].reshape(x.shape)
-
-
-def leaf_seed(seed: int, leaf_idx: int) -> jnp.ndarray:
-    return jnp.asarray(seed, jnp.int32) + jnp.int32(0x1000003) * jnp.int32(leaf_idx)
-
-
-def perturb_tree(params: PyTree, seed, scale, interpret: bool = True) -> PyTree:
-    """θ + scale·z over a pytree (kernel-backed analogue of core.perturb)."""
-    return tree_map_with_index(
-        lambda i, p: zo_affine(p, leaf_seed(seed, i), 1.0, scale,
-                               interpret=interpret)
-        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
-
-
-def update_tree(params: PyTree, seed, projected_grad, lr,
-                weight_decay: float = 0.0, interpret: bool = True) -> PyTree:
-    """θ·(1−ηλ) − η·g·z over a pytree (Algorithm 1's descent loop)."""
-    a = 1.0 - lr * weight_decay
-    return tree_map_with_index(
-        lambda i, p: zo_affine(p, leaf_seed(seed, i), a, -lr * projected_grad,
-                               interpret=interpret)
-        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
-
-
-def mezo_step_kernel(loss_fn, params: PyTree, batch, seed: int, eps: float,
-                     lr: float, weight_decay: float = 0.0,
-                     interpret: bool = True):
-    """One full MeZO step with every perturbation running through the Pallas
-    kernel (z never materialized in HBM on TPU)."""
-    p_plus = perturb_tree(params, seed, eps, interpret)
-    l_plus = loss_fn(p_plus, batch)
-    p_minus = perturb_tree(p_plus, seed, -2.0 * eps, interpret)
-    l_minus = loss_fn(p_minus, batch)
-    g = (l_plus - l_minus) / (2.0 * eps)
-    restored = perturb_tree(p_minus, seed, eps, interpret)
-    new_params = update_tree(restored, seed, g, lr, weight_decay, interpret)
-    return new_params, g, 0.5 * (l_plus + l_minus)
+__all__ = ["leaf_seed", "mezo_step_kernel", "perturb_tree", "update_tree",
+           "zo_affine"]

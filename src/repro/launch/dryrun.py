@@ -79,7 +79,8 @@ def replicated_tree(tree, mesh):
     return jax.tree_util.tree_map(lambda _: _ns(mesh, P()), tree)
 
 
-def _compile_case(cfg, b, cell, mesh, donate: bool = True):
+def _compile_case(cfg, b, cell, mesh, donate: bool = True,
+                  backend: str = "xla"):
     """Lower + compile the cell's step function; returns the compiled exe."""
     specs = b.input_specs(cell)
     params_sds = b.param_shapes()
@@ -91,7 +92,7 @@ def _compile_case(cfg, b, cell, mesh, donate: bool = True):
         if resolver_p(logical, shape) is not None else None)
 
     if cell.kind == "train":
-        opt = zo.mezo(lr=1e-6, eps=1e-3)
+        opt = zo.mezo(lr=1e-6, eps=1e-3, backend=backend)
         state_sds = jax.eval_shape(lambda: opt.init(seed=0))
         sshard = replicated_tree(state_sds, mesh)
         step = opt.step_fn(b.loss_fn())
@@ -149,7 +150,7 @@ def calibrate_loop_costs(arch, cell, mesh, overrides: dict):
 
 def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
              optimizer: str = "mezo", verbose: bool = True,
-             calibrate: bool = True) -> dict:
+             calibrate: bool = True, backend: str = "xla") -> dict:
     arch = all_archs()[arch_id]
     cfg = arch.cfg
     if overrides:
@@ -158,11 +159,12 @@ def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
     chips = int(mesh.devices.size)
     rec = {"arch": arch_id, "cell": cell.name, "mesh": mesh_name,
            "chips": chips, "optimizer": optimizer,
+           "perturb_backend": backend,
            "overrides": {k: str(v) for k, v in overrides.items()},
            "status": "ok"}
     t0 = time.time()
     try:
-        compiled = _compile_case(cfg, b, cell, mesh)
+        compiled = _compile_case(cfg, b, cell, mesh, backend=backend)
         t_compile = time.time() - t0
         flops_raw, hbm_raw, coll_raw, coll_detail = _cost_triple(compiled)
         rec["raw"] = {"flops": flops_raw, "hbm_bytes": hbm_raw,
@@ -230,6 +232,9 @@ def main():
     ap.add_argument("--set", action="append", default=[],
                     help="config override key=value (e.g. attention_impl=chunked)")
     ap.add_argument("--optimizer", default="mezo", choices=["mezo"])
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"],
+                    help="perturbation backend for the train cells")
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
@@ -286,7 +291,8 @@ def main():
                     # the roofline table is single-pod; the multi-pod pass
                     # proves the 'pod' axis shards (compile success + memory)
                     rec = run_case(arch_id, cell, mesh, mesh_label, overrides,
-                                   calibrate=(mesh_name == "single"))
+                                   calibrate=(mesh_name == "single"),
+                                   backend=args.backend)
                     if args.tag:
                         rec["tag"] = args.tag
                     f.write(json.dumps(rec) + "\n")

@@ -38,9 +38,12 @@ def main():
     if args.ledger and os.path.exists(args.ledger):
         with open(args.ledger, "rb") as f:
             led = TrajectoryLedger.from_bytes(f.read())
-        params = replay(params, led, zo.mezo())
+        # the ledger records which perturbation backend generated its z
+        # streams; replay with the same one (mismatch would raise)
+        params = replay(params, led, zo.mezo(backend=led.backend))
         print(f"[serve] replayed {len(led)} ledger steps "
-              f"({os.path.getsize(args.ledger)} bytes)")
+              f"({os.path.getsize(args.ledger)} bytes, "
+              f"backend={led.backend})")
 
     engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                          seed=args.seed)

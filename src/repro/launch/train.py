@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--eps", type=float, default=1e-3)
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"],
+                    help="perturbation backend (repro.perturb): xla threefry "
+                         "or the VMEM-fused pallas kernel")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="use the arch's reduced smoke config")
@@ -51,10 +55,12 @@ def main():
                              vocab=cfg.vocab_size, seed=args.seed))
     ledger = None
     if args.optimizer == "mezo":
-        opt = zo.mezo(lr=args.lr or 1e-5, eps=args.eps)
-        ledger = TrajectoryLedger(base_seed=args.seed, grad_dtype="float32")
+        opt = zo.mezo(lr=args.lr or 1e-5, eps=args.eps, backend=args.backend)
+        ledger = TrajectoryLedger(base_seed=args.seed, grad_dtype="float32",
+                                  backend=opt.backend_name)
     elif args.optimizer == "mezo-adam":
-        opt = zo.mezo_adam(lr=args.lr or 1e-4, eps=args.eps)
+        opt = zo.mezo_adam(lr=args.lr or 1e-4, eps=args.eps,
+                           backend=args.backend)
     elif args.optimizer == "adam":
         opt = Adam(AdamConfig(lr=args.lr or 1e-4, total_steps=args.steps))
     else:

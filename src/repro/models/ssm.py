@@ -131,10 +131,13 @@ def ssm_scan(cfg, p: dict, u: jnp.ndarray, state: Optional[jnp.ndarray] = None,
     final_state = dec_all[:, -1][..., None, None] * state + h_all[:, -1]
 
     # ---- within-chunk attention-like matmul
-    gate = jnp.exp(lc[:, :, :, None, :] - lc[:, :, None, :, :])   # (B,nc,t,s,SH)
-    tri = jnp.tril(jnp.ones((C, C), jnp.float32))
+    # Mask the exponent BEFORE exp: for s > t, lc_t − lc_s is positive and can
+    # overflow exp to inf, and inf · 0 from a post-hoc tril mask is NaN.
+    ldiff = lc[:, :, :, None, :] - lc[:, :, None, :, :]           # (B,nc,t,s,SH)
+    tri = jnp.tril(jnp.ones((C, C), bool))
+    gate = jnp.exp(jnp.where(tri[None, None, :, :, None], ldiff, -jnp.inf))
     scores = jnp.einsum("bnthk,bnshk->bntsh", cc, bc)             # C_t·B_s
-    M = scores * gate * dtc[:, :, None, :, :] * tri[None, None, :, :, None]
+    M = scores * gate * dtc[:, :, None, :, :]
     y = jnp.einsum("bntsh,bnshd->bnthd", M, xc)
 
     # ---- carry-in contribution: exp(lc_t)·C_t @ h_inᵀ

@@ -1,0 +1,163 @@
+"""``PerturbBackend`` — the interface every z-generation strategy implements.
+
+One backend = one way of materializing (or *not* materializing) the
+perturbation direction z for a parameter tree, given a ``StreamRef``.  The
+estimators, the transform chain, trajectory replay, checkpoint recovery, and
+the distributed paths all write parameters exclusively through these methods,
+so swapping the backend swaps the memory/compute strategy of *every* existing
+estimator × transform composition at once.
+
+Supported distribution matrix (see the package docstring for the memory
+story):
+
+    ==============  ========  ==========  ========
+    backend         gaussian  rademacher  sphere
+    ==============  ========  ==========  ========
+    ``xla``         yes       yes         yes
+    ``pallas``      yes       no [1]      no [2]
+    ==============  ========  ==========  ========
+
+    [1] the fused kernel only implements Box–Muller gaussian generation.
+    [2] sphere needs the global sqrt(d)/‖z‖ rescale — a two-pass norm that is
+        not kernel-fused yet; raising beats silently producing wrong-scale
+        perturbations.
+
+Unsupported combinations raise ``NotImplementedError`` at backend-resolution
+or call time with the matrix above spelled out.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.perturb.stream import StreamRef
+from repro.tree_utils import PyTree
+
+
+class BackendMismatchError(RuntimeError):
+    """A seed-replay artifact (ledger / checkpoint) was produced under one
+    perturbation backend and is being replayed under another.  The two
+    backends generate *different* z for the same StreamRef, so continuing
+    would silently reconstruct different parameters — refuse instead."""
+
+
+def check_replay_backend(recorded: Optional[str], active: Optional[str],
+                         what: str) -> None:
+    """Raise ``BackendMismatchError`` if a recorded artifact's backend does
+    not match the active optimizer's.  ``None`` on either side (a pre-backend
+    artifact, or a non-ZO optimizer) skips the check."""
+    if recorded is None or active is None:
+        return
+    if recorded != active:
+        raise BackendMismatchError(
+            f"{what} was recorded under the {recorded!r} perturbation backend "
+            f"but is being replayed under {active!r}; the backends generate "
+            "different z streams for the same seed, so replay would silently "
+            "reconstruct different parameters.  Re-create the optimizer with "
+            f"backend={recorded!r} (e.g. zo.mezo(..., backend={recorded!r})).")
+
+
+class PerturbBackend:
+    """Interface.  All parameter-writing methods take a ``StreamRef`` and
+    regenerate z internally — z is never part of any signature.
+
+    ``dists`` declares the supported distribution set; ``check_dist`` is the
+    loud-failure gate (see the matrix in the module docstring).
+    """
+
+    name: str = "?"
+    dists: frozenset = frozenset()
+
+    def check_dist(self, dist: str) -> None:
+        if dist not in self.dists:
+            raise NotImplementedError(
+                f"perturbation backend {self.name!r} does not implement "
+                f"dist={dist!r} (supported: {sorted(self.dists)}).  "
+                "Distribution matrix — xla: gaussian/rademacher/sphere; "
+                "pallas: gaussian only (rademacher is not kernel-implemented; "
+                "sphere needs a two-pass global-norm rescale that is not "
+                "kernel-fused yet).  Use backend='xla' for this dist.")
+
+    # -- core tree operations ----------------------------------------------- #
+    def perturb(self, params: PyTree, ref: StreamRef, scale,
+                dist: str = "gaussian") -> PyTree:
+        """θ + scale · z(ref) — the paper's ``PerturbParameters``."""
+        raise NotImplementedError
+
+    def fused_restore_update(self, params_minus: PyTree, ref: StreamRef, eps,
+                             lr_g, weight_decay=0.0,
+                             dist: str = "gaussian") -> PyTree:
+        """From θ − εz produce (1 − η·λ)·θ − η·g·z in one pass (the fusion of
+        Algorithm 1's reset and descent loops).  ``weight_decay`` is the
+        decoupled decay *term* η·λ."""
+        raise NotImplementedError
+
+    def apply_rank1(self, params: PyTree, ref: StreamRef, coeff,
+                    decay_term=0.0, dist: str = "gaussian",
+                    d_tree: Optional[PyTree] = None) -> PyTree:
+        """θ ← (1 − decay_term)·θ − coeff·z(ref)  [z optionally ⊙ d per leaf].
+        The single primitive shared by live steps, ledger replay, and async
+        application — one implementation per backend keeps all three
+        bitwise-consistent."""
+        raise NotImplementedError
+
+    def leaf_z(self, ref: StreamRef, leaf_index: int, like: jnp.ndarray,
+               dist: str = "gaussian") -> jnp.ndarray:
+        """Materialize one leaf's z (shape/dtype of ``like``).  Escape hatch
+        for consumers that combine z non-affinely (rescaled-SPSA's d⁻¹⊙z
+        perturbation, the materializing ZO-Adam path)."""
+        raise NotImplementedError
+
+    # -- batched multi-seed entry point (FZOO-style estimators) ------------- #
+    def perturb_many(self, params: PyTree, refs: Sequence[StreamRef], scale,
+                     dist: str = "gaussian") -> PyTree:
+        """θ + scale · z(ref_j) for each ref, stacked on a new leading axis:
+        each leaf of the result has shape ``(len(refs), *leaf.shape)``.
+
+        Default implementation stacks per-ref ``perturb`` calls — bitwise
+        identical to the sequential path by construction.  Backends may
+        override with a genuinely vectorized z generation (the extension
+        point for batched-seed estimators like FZOO, Dang et al., 2025).
+        """
+        self.check_dist(dist)
+        if not refs:
+            raise ValueError("perturb_many needs at least one StreamRef")
+        cols = [self.perturb(params, r, scale, dist) for r in refs]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cols)
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+_FACTORIES: Dict[str, Callable[[], PerturbBackend]] = {}
+_INSTANCES: Dict[str, PerturbBackend] = {}
+
+BackendSpec = Union[None, str, PerturbBackend]
+
+
+def register_backend(name: str, factory: Callable[[], PerturbBackend]) -> None:
+    _FACTORIES[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_backends() -> list:
+    return sorted(_FACTORIES)
+
+
+def get_backend(spec: BackendSpec = None) -> PerturbBackend:
+    """Resolve a backend: ``None`` → the default ``xla``; a string → the
+    registry (``"xla"``, ``"pallas"``, ``"pallas-interpret"``); an instance →
+    itself.  Instances are cached so every consumer of ``"xla"`` shares one
+    object."""
+    if spec is None:
+        spec = "xla"
+    if isinstance(spec, PerturbBackend):
+        return spec
+    if spec not in _FACTORIES:
+        raise KeyError(f"unknown perturbation backend {spec!r}; "
+                       f"available: {available_backends()}")
+    if spec not in _INSTANCES:
+        _INSTANCES[spec] = _FACTORIES[spec]()
+    return _INSTANCES[spec]

@@ -1,0 +1,164 @@
+"""``pallas`` backend: z generated tile-by-tile inside VMEM by the fused
+Pallas kernel — the paper's in-place trick taken one level further down the
+memory hierarchy (z never exists in HBM on TPU).
+
+Promoted from the legacy-only ``kernels/zo_fused/ops.py`` path (which was
+reachable only through ``mezo_step_kernel``) to a first-class backend: every
+estimator × transform composition in ``repro.zo`` can now run HBM-free by
+selecting ``backend="pallas"``.
+
+RNG: murmur3-finalizer counter hash + Box–Muller (32-bit ops only, TPU
+native), seeded per leaf from ``StreamRef.leaf_seed`` — position-stable, so
+the same (StreamRef, leaf) always yields the same z regardless of how the
+tree around it changes or how leaves are padded to the kernel's blocked view.
+The pure-jnp oracle in ``kernels/zo_fused/ref.py`` implements the identical
+arithmetic bit-for-bit.
+
+Interpret-mode fallback: off-TPU the kernel runs under
+``pallas_call(..., interpret=True)`` (exact same arithmetic, evaluated with
+jnp ops), so CPU CI and laptops exercise the real backend semantics.
+``get_backend("pallas")`` auto-selects interpret off-TPU;
+``get_backend("pallas-interpret")`` forces it (for benchmarking the overhead).
+
+Supported distributions: gaussian only — rademacher is not implemented in
+the kernel, and sphere requires the global sqrt(d)/‖z‖ two-pass rescale that
+is not kernel-fused yet.  Both raise ``NotImplementedError`` loudly (see
+``PerturbBackend.check_dist``) instead of producing wrong-scale perturbations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zo_fused.kernel import (BLOCK_COLS, BLOCK_ROWS,
+                                           zo_affine_2d)
+from repro.perturb.base import PerturbBackend
+from repro.perturb.stream import _LEAF_STRIDE, StreamRef
+from repro.tree_utils import PyTree, tree_map_with_index
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zo_affine(x: jnp.ndarray, seed, a, b, interpret: bool = True) -> jnp.ndarray:
+    """y = a·x + b·z(seed) for an arbitrary-shape leaf.
+
+    The leaf is reshaped/padded to the kernel's 2-D blocked view; the padding
+    tail consumes counter indices but its z values are discarded (the counter
+    stream is position-stable, so the same (leaf, seed) always yields the
+    same z regardless of how the tree around it changes).
+    """
+    n = x.size
+    width = BLOCK_ROWS * BLOCK_COLS
+    n_pad = ((n + width - 1) // width) * width
+    flat = jnp.pad(x.reshape(-1), (0, n_pad - n))
+    y = zo_affine_2d(flat.reshape(-1, BLOCK_COLS),
+                     jnp.asarray(seed, jnp.int32), a, b, interpret=interpret)
+    return y.reshape(-1)[:n].reshape(x.shape)
+
+
+def leaf_seed(seed: int, leaf_idx: int) -> jnp.ndarray:
+    """Legacy per-leaf counter-seed schedule (kept bit-compatible; the same
+    stride now lives in ``StreamRef.leaf_seed``)."""
+    return jnp.asarray(seed, jnp.int32) + jnp.int32(_LEAF_STRIDE) * jnp.int32(leaf_idx)
+
+
+def perturb_tree(params: PyTree, seed, scale, interpret: bool = True) -> PyTree:
+    """θ + scale·z over a pytree (kernel-backed analogue of the xla perturb)."""
+    return tree_map_with_index(
+        lambda i, p: zo_affine(p, leaf_seed(seed, i), 1.0, scale,
+                               interpret=interpret)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def update_tree(params: PyTree, seed, projected_grad, lr,
+                weight_decay: float = 0.0, interpret: bool = True) -> PyTree:
+    """θ·(1−ηλ) − η·g·z over a pytree (Algorithm 1's descent loop)."""
+    a = 1.0 - lr * weight_decay
+    return tree_map_with_index(
+        lambda i, p: zo_affine(p, leaf_seed(seed, i), a, -lr * projected_grad,
+                               interpret=interpret)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def mezo_step_kernel(loss_fn, params: PyTree, batch, seed: int, eps: float,
+                     lr: float, weight_decay: float = 0.0,
+                     interpret: bool = True):
+    """One full MeZO step with every perturbation running through the Pallas
+    kernel.  Legacy entry point — new code composes ``zo.mezo(...,
+    backend="pallas")`` instead, which routes the same kernel through the
+    estimator × transform protocol."""
+    p_plus = perturb_tree(params, seed, eps, interpret)
+    l_plus = loss_fn(p_plus, batch)
+    p_minus = perturb_tree(p_plus, seed, -2.0 * eps, interpret)
+    l_minus = loss_fn(p_minus, batch)
+    g = (l_plus - l_minus) / (2.0 * eps)
+    restored = perturb_tree(p_minus, seed, eps, interpret)
+    new_params = update_tree(restored, seed, g, lr, weight_decay, interpret)
+    return new_params, g, 0.5 * (l_plus + l_minus)
+
+
+# --------------------------------------------------------------------------- #
+# Backend adapter
+# --------------------------------------------------------------------------- #
+class PallasBackend(PerturbBackend):
+    """Fused-kernel z streams: VMEM generation on TPU, interpret mode off-TPU."""
+
+    name = "pallas"
+    dists = frozenset({"gaussian"})
+
+    def __init__(self, interpret: Optional[bool] = None):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+
+    def _map(self, params: PyTree, ref: StreamRef, fn) -> PyTree:
+        seed = ref.counter_seed()
+        return tree_map_with_index(
+            lambda i, p: fn(p, leaf_seed(seed, i), i)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+    def perturb(self, params: PyTree, ref: StreamRef, scale,
+                dist: str = "gaussian") -> PyTree:
+        self.check_dist(dist)
+        return self._map(params, ref,
+                         lambda p, s, i: zo_affine(p, s, 1.0, scale,
+                                                   interpret=self.interpret))
+
+    def fused_restore_update(self, params_minus: PyTree, ref: StreamRef, eps,
+                             lr_g, weight_decay=0.0,
+                             dist: str = "gaussian") -> PyTree:
+        # decay·(θ − εz + εz) − η·g·z  =  decay·θ_minus + (decay·ε − η·g)·z:
+        # restore AND descent collapse into a single kernel pass per leaf
+        # (one z regeneration, never in HBM) — one fewer pass than the xla
+        # backend needs for the same fusion.
+        self.check_dist(dist)
+        decay = 1.0 - weight_decay
+        b = decay * eps - lr_g
+        return self._map(params_minus, ref,
+                         lambda p, s, i: zo_affine(p, s, decay, b,
+                                                   interpret=self.interpret))
+
+    def apply_rank1(self, params: PyTree, ref: StreamRef, coeff,
+                    decay_term=0.0, dist: str = "gaussian",
+                    d_tree: Optional[PyTree] = None) -> PyTree:
+        self.check_dist(dist)
+        a = 1.0 - decay_term
+        d_leaves = (jax.tree_util.tree_leaves(d_tree)
+                    if d_tree is not None else None)
+
+        def one(p, s, i):
+            b = -coeff if d_leaves is None else -coeff * d_leaves[i]
+            return zo_affine(p, s, a, b, interpret=self.interpret)
+
+        return self._map(params, ref, one)
+
+    def leaf_z(self, ref: StreamRef, leaf_index: int, like: jnp.ndarray,
+               dist: str = "gaussian") -> jnp.ndarray:
+        self.check_dist(dist)
+        zeros = jnp.zeros(like.shape, like.dtype if
+                          jnp.issubdtype(like.dtype, jnp.floating)
+                          else jnp.float32)
+        return zo_affine(zeros, ref.leaf_seed(leaf_index), 0.0, 1.0,
+                         interpret=self.interpret)

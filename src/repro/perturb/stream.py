@@ -1,0 +1,87 @@
+"""The one canonical z-stream identity shared by every perturbation backend.
+
+The paper's storage trick works because z is *regenerated, never stored*: the
+direction for any parameter leaf must be a pure function of a small, stable
+identifier.  Before this layer the repo had two incompatible derivations —
+threefry ``fold_in`` chains in ``core/perturb.py`` and an ad-hoc murmur3
+counter seed in ``kernels/zo_fused/ops.py``.  ``StreamRef`` is the single
+contract both now share:
+
+    StreamRef.derive(base_key, step, seed_index)      # run → step → seed
+        .leaf_key(leaf_index)                         # threefry leaf stream
+        .counter_seed() / .leaf_seed(leaf_index)      # int32 counter stream
+
+A backend consumes whichever projection matches its RNG (the ``xla`` backend
+folds threefry keys; the ``pallas`` kernel hashes 32-bit counters), but both
+projections are pure functions of the same ``(run_seed, step, seed_index,
+leaf_index)`` coordinates — so "same StreamRef ⇒ same z within a backend"
+holds regardless of how the surrounding tree is restructured or padded.
+
+Derivation is bit-compatible with the legacy code: ``derive(k, t)`` is
+exactly ``fold_in(k, t)`` (the paper's "sample random seed s for step t") and
+``derive(k, t, j)`` is exactly ``fold_in(fold_in(k, t), j)`` (Algorithm 2's
+per-seed fold) — existing ledgers and checkpoints replay unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Multiplier decorrelating per-leaf counter streams (a large prime; inherited
+# from the original zo_fused seed schedule so legacy kernel streams are
+# preserved bit-for-bit).
+_LEAF_STRIDE = 0x1000003
+
+
+class StreamRef(NamedTuple):
+    """Identity of one per-seed perturbation stream.
+
+    ``key`` is the fully-derived per-seed threefry key — the wire format the
+    estimator protocol already passes around.  Wrap an existing key with
+    ``StreamRef(key)``; derive one from run coordinates with
+    ``StreamRef.derive``.
+    """
+    key: jax.Array
+
+    @classmethod
+    def derive(cls, base_key: jax.Array, step,
+               seed_index: Optional[int] = None) -> "StreamRef":
+        """run key → step t → (optional) seed j, the legacy fold chain."""
+        key = jax.random.fold_in(base_key, step)
+        if seed_index is not None:
+            key = jax.random.fold_in(key, seed_index)
+        return cls(key)
+
+    # -- threefry projection (xla backend) ---------------------------------- #
+    def leaf_key(self, leaf_index: int) -> jax.Array:
+        """Stable per-leaf PRNG key (the legacy ``leaf_key``)."""
+        return jax.random.fold_in(self.key, leaf_index)
+
+    # -- 32-bit counter projection (pallas / counter-hash backends) ---------- #
+    def counter_seed(self) -> jnp.ndarray:
+        """Fold the key material into one int32 seed for counter-hash RNGs.
+
+        Pure function of the key (hence of run/step/seed coordinates), stable
+        under jit tracing, and well-mixed: threefry key data is already a
+        high-entropy function of the fold chain.
+        """
+        data = self.key
+        if not jnp.issubdtype(data.dtype, jnp.integer):   # typed PRNG key
+            data = jax.random.key_data(self.key)
+        folded = (data[..., 0] ^ data[..., 1]).astype(jnp.uint32)
+        return jax.lax.bitcast_convert_type(folded, jnp.int32)
+
+    def leaf_seed(self, leaf_index: int) -> jnp.ndarray:
+        """Per-leaf int32 counter seed (the legacy zo_fused schedule)."""
+        return (self.counter_seed()
+                + jnp.int32(_LEAF_STRIDE) * jnp.int32(leaf_index))
+
+
+def as_stream_ref(key_or_ref) -> StreamRef:
+    """Accept either a raw per-seed key (the protocol wire format) or an
+    already-wrapped ``StreamRef``."""
+    if isinstance(key_or_ref, StreamRef):
+        return key_or_ref
+    return StreamRef(key_or_ref)

@@ -31,6 +31,7 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.trajectory import TrajectoryLedger
 from repro.data.pipeline import Pipeline
+from repro.perturb import check_replay_backend
 from repro.tree_utils import PyTree
 
 
@@ -83,11 +84,24 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
     ``repro.zo.Optimizer`` protocol conformer."""
     opt_state = optimizer.init(params, seed=seed)
 
+    # the optimizer's perturbation backend (None for non-ZO optimizers) is
+    # stamped into every artifact so replay under the wrong backend — which
+    # would regenerate *different* z and silently diverge — fails loudly
+    backend_name = getattr(optimizer, "backend_name", None)
+    if ledger is not None and backend_name is not None:
+        if len(ledger) == 0:
+            ledger.backend = backend_name
+        else:
+            check_replay_backend(ledger.backend, backend_name,
+                                 "the provided trajectory ledger")
+
     start_step = 0
     # ---- resume ---------------------------------------------------------- #
     if ckpt is not None:
         restored = ckpt.restore_latest(params, opt_state)
         if restored is not None:
+            check_replay_backend(restored["meta"].get("perturb_backend"),
+                                 backend_name, "checkpoint")
             params = restored["params"]
             opt_state = restored["opt_state"] if restored["opt_state"] is not None else opt_state
             start_step = restored["step"]
@@ -125,7 +139,8 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             if ckpt is not None:
                 ckpt.save_ledger(ledger)
         if ckpt is not None:
-            ckpt.maybe_save(step + 1, params, opt_state)
+            ckpt.maybe_save(step + 1, params, opt_state,
+                            meta={"perturb_backend": backend_name})
         if monitor is not None:
             monitor.beat(step)
         if step % log_every == 0 or step == total_steps - 1:
@@ -137,6 +152,7 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             eval_fn(step + 1, params)
 
     if ckpt is not None:
-        ckpt.maybe_save(total_steps, params, opt_state, force=True)
+        ckpt.maybe_save(total_steps, params, opt_state,
+                        meta={"perturb_backend": backend_name}, force=True)
     return TrainResult(params, opt_state, losses, total_steps - start_step,
                        start_step)

@@ -49,6 +49,7 @@ Quick start
 -----------
 >>> from repro import zo
 >>> opt = zo.mezo(lr=1e-6, eps=1e-3)                 # Algorithm 1
+>>> opt = zo.mezo(lr=1e-6, eps=1e-3, backend="pallas")   # z in VMEM, not HBM
 >>> # ...or compose by hand:
 >>> opt = zo.ZOOptimizer(
 ...     zo.estimators.spsa(eps=1e-3),
@@ -62,7 +63,12 @@ Quick start
 
 New estimators (MeZO-SVRG-style variance reduction, FZOO's batched seeds) and
 new update rules plug in as components — one ``ZOEstimator`` or one
-``ZOTransform``, not a new monolithic optimizer class.
+``ZOTransform``, not a new monolithic optimizer class.  Every composition
+takes a ``backend=`` kwarg selecting the z-generation strategy
+(:mod:`repro.perturb`): ``"xla"`` threefry (default) or ``"pallas"`` — the
+fused kernel generating z inside VMEM, with interpret-mode CPU fallback.
+The choice is recorded in checkpoint/ledger metadata; replay under the wrong
+backend raises ``BackendMismatchError`` instead of silently diverging.
 """
 from repro.zo import estimators, transforms
 from repro.zo.base import (Optimizer, TransformCtx, Updates, ZOEstimate,

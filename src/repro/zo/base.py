@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.perturb import step_key
+from repro.perturb import PerturbBackend, StreamRef, get_backend
 from repro.tree_utils import PyTree
-from repro.zo.updates import apply_rank1
 
 ZOLossFn = Callable[[PyTree, Any], jnp.ndarray]
 
@@ -59,7 +59,12 @@ class ZOEstimator(NamedTuple):
 
     ``replayable`` declares that the estimator's update is the plain rank-1
     θ ← (1−ηλ)θ − η·g·z(seed) — i.e. a ledger's (seed, g, lr) triple alone
-    reproduces it.  Definition-6 rescaled updates (along D·z) are not."""
+    reproduces it.  Definition-6 rescaled updates (along D·z) are not.
+
+    ``backend`` is the resolved ``repro.perturb.PerturbBackend`` the
+    estimator's perturbation chain runs through (``None`` → the default
+    ``xla``); the facade exposes it for metadata recording and routes
+    ``replay_update`` through the same backend."""
     init: Callable[[Optional[PyTree], jax.Array], Any]
     estimate: Callable[..., ZOEstimate]
     n_seeds: int = 1
@@ -67,6 +72,7 @@ class ZOEstimator(NamedTuple):
     dist: str = "gaussian"
     name: str = "spsa"
     replayable: bool = True
+    backend: Optional[PerturbBackend] = None
 
 
 # --------------------------------------------------------------------------- #
@@ -99,6 +105,7 @@ class TransformCtx(NamedTuple):
     eps: float
     dist: str
     restore: Callable[[], PyTree]          # center params, estimator-specific
+    backend: Any = None                    # the run's PerturbBackend
 
 
 class ZOTransform(NamedTuple):
@@ -210,6 +217,17 @@ class ZOOptimizer:
         return self.transform.info
 
     @property
+    def backend(self) -> "PerturbBackend":
+        """The perturbation backend this composition runs through."""
+        return get_backend(self.estimator.backend)
+
+    @property
+    def backend_name(self) -> str:
+        """Canonical backend name, recorded in checkpoint/ledger metadata so
+        replay under a different backend fails loudly."""
+        return self.backend.name
+
+    @property
     def weight_decay(self) -> float:
         return self.info.get("weight_decay", 0.0)
 
@@ -251,14 +269,16 @@ class ZOOptimizer:
                 f"{self.name}: the {self.estimator.name!r} estimator updates "
                 "along D·z (Definition 6), which a (seed, g, lr) ledger entry "
                 "cannot reproduce; resume from a full state checkpoint")
-        return apply_rank1(params, skey, lr * g, lr * self.weight_decay,
-                           self.estimator.dist)
+        return self.backend.apply_rank1(params, StreamRef(skey), lr * g,
+                                        lr * self.weight_decay,
+                                        self.estimator.dist)
 
     def step_fn(self, loss_fn: ZOLossFn) -> Callable[
             [PyTree, ZOState, Any], tuple[PyTree, ZOState, dict]]:
         est = self.estimator
         tf = self.transform
         n = est.n_seeds
+        backend = self.backend
 
         def step(params: PyTree, state: ZOState, batch):
             skey0 = step_key(state.base_key, state.step)
@@ -274,7 +294,7 @@ class ZOOptimizer:
                 ctx = TransformCtx(step=state.step, base_key=state.base_key,
                                    key=skey, seed_index=j, n_seeds=n,
                                    eps=est.eps, dist=est.dist,
-                                   restore=e.restore)
+                                   restore=e.restore, backend=backend)
                 u = Updates(g=e.projected_grad)
                 u, tf_state = tf.update(u, tf_state, ctx)
                 if u.final_params is not None:

@@ -6,6 +6,12 @@ whole step jitted and ``params`` donated, XLA keeps exactly one
 parameter-sized buffer alive across perturb → ℓ+ → perturb → ℓ− → fused
 restore+update (the paper's inference-memory property).
 
+Every perturbation and parameter write goes through a ``repro.perturb``
+backend (``backend=`` kwarg on every factory): ``"xla"`` (default) generates
+z as threefry HBM temporaries, ``"pallas"`` generates z tile-by-tile in VMEM
+via the fused kernel — same estimator chain, different point in the memory
+hierarchy.  Unsupported (backend, dist) pairs fail loudly at factory time.
+
 * ``spsa``          — two-point SPSA (Definition 1 / Algorithm 1 lines 3–8).
 * ``n_spsa``        — n independent seeds, interleaved updates (Algorithm 2);
                       the facade folds the step key once per seed.
@@ -24,49 +30,54 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.perturb import (Distribution, fused_restore_update, leaf_key,
-                                perturb, sample_leaf_z)
 from repro.core.spsa import OnePointState, one_point_init, zo_grad_norm
+from repro.perturb import StreamRef, get_backend
+from repro.perturb.base import BackendSpec
+from repro.perturb.xla import Distribution
 from repro.tree_utils import PyTree, tree_map_with_index
 from repro.zo.base import ZOEstimate, ZOEstimator
-from repro.zo.updates import apply_rank1
 
 
 # --------------------------------------------------------------------------- #
 # SPSA (Definition 1) and n-SPSA (Algorithm 2)
 # --------------------------------------------------------------------------- #
 def spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
-         sequential: bool = True) -> ZOEstimator:
+         sequential: bool = True, backend: BackendSpec = None) -> ZOEstimator:
     """Two-point SPSA.  ``sequential=True`` is the paper-faithful in-place
     chain θ → θ+εz → θ−εz with a fused restore+descent pass; ``False``
     perturbs from the center twice (one more live buffer, numerically
     cleaner — θ itself is never touched)."""
+    be = get_backend(backend)
+    be.check_dist(dist)
 
     def init(params, key):
         del params, key
         return ()
 
     def estimate(loss_fn, params, batch, key, est_state):
+        ref = StreamRef(key)
         if sequential:
-            p_plus = perturb(params, key, eps, dist)
+            p_plus = be.perturb(params, ref, eps, dist)
             l_plus = loss_fn(p_plus, batch)
-            p_minus = perturb(p_plus, key, -2.0 * eps, dist)
+            p_minus = be.perturb(p_plus, ref, -2.0 * eps, dist)
             l_minus = loss_fn(p_minus, batch)
             g = (l_plus - l_minus) / (2.0 * eps)
 
             def apply_update(coeff, decay_term):
-                return fused_restore_update(p_minus, key, eps, coeff,
-                                            weight_decay=decay_term, dist=dist)
+                return be.fused_restore_update(p_minus, ref, eps, coeff,
+                                               weight_decay=decay_term,
+                                               dist=dist)
 
             def restore():
-                return fused_restore_update(p_minus, key, eps, 0.0, 0.0, dist)
+                return be.fused_restore_update(p_minus, ref, eps, 0.0, 0.0,
+                                               dist)
         else:
-            l_plus = loss_fn(perturb(params, key, eps, dist), batch)
-            l_minus = loss_fn(perturb(params, key, -eps, dist), batch)
+            l_plus = loss_fn(be.perturb(params, ref, eps, dist), batch)
+            l_minus = loss_fn(be.perturb(params, ref, -eps, dist), batch)
             g = (l_plus - l_minus) / (2.0 * eps)
 
             def apply_update(coeff, decay_term):
-                return apply_rank1(params, key, coeff, decay_term, dist)
+                return be.apply_rank1(params, ref, coeff, decay_term, dist)
 
             def restore():
                 return params
@@ -76,38 +87,42 @@ def spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
                           est_state=est_state, aux={})
 
     return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
-                       dist=dist, name="spsa")
+                       dist=dist, name="spsa", backend=be)
 
 
 def n_spsa(n: int, eps: float = 1e-3, dist: Distribution = "gaussian",
-           sequential: bool = True) -> ZOEstimator:
+           sequential: bool = True, backend: BackendSpec = None) -> ZOEstimator:
     """n-SPSA, sequential over seeds (Algorithm 2): the facade runs the
     two-point estimate once per folded seed key and applies each seed's
     update (η/n per seed) before the next seed's perturbation — the same
     one-live-buffer chain as n=1.  The seed-parallel variant that trades this
     for batch slicing lives in ``repro.distributed.collectives``."""
-    base = spsa(eps=eps, dist=dist, sequential=sequential)
+    base = spsa(eps=eps, dist=dist, sequential=sequential, backend=backend)
     return base._replace(n_seeds=int(n), name="n_spsa")
 
 
 # --------------------------------------------------------------------------- #
 # One-point residual feedback (Definition 8)
 # --------------------------------------------------------------------------- #
-def one_point(eps: float = 1e-3, dist: Distribution = "gaussian") -> ZOEstimator:
+def one_point(eps: float = 1e-3, dist: Distribution = "gaussian",
+              backend: BackendSpec = None) -> ZOEstimator:
     """g_t = (L(θ_t + εz_t) − L_prev) / ε — one forward pass per step, the
     previous perturbed loss carried as estimator state.  Twice as fast per
     step as SPSA but far less query-efficient (paper Table 11)."""
+    be = get_backend(backend)
+    be.check_dist(dist)
 
     def init(params, key):
         del params, key
         return one_point_init()
 
     def estimate(loss_fn, params, batch, key, est_state: OnePointState):
-        l_pert = loss_fn(perturb(params, key, eps, dist), batch)
+        ref = StreamRef(key)
+        l_pert = loss_fn(be.perturb(params, ref, eps, dist), batch)
         g = (l_pert - est_state.prev_perturbed_loss) / eps
 
         def apply_update(coeff, decay_term):
-            return apply_rank1(params, key, coeff, decay_term, dist)
+            return be.apply_rank1(params, ref, coeff, decay_term, dist)
 
         def restore():
             return params
@@ -117,7 +132,7 @@ def one_point(eps: float = 1e-3, dist: Distribution = "gaussian") -> ZOEstimator
                           est_state=OnePointState(l_pert), aux={})
 
     return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
-                       dist=dist, name="one_point")
+                       dist=dist, name="one_point", backend=be)
 
 
 # --------------------------------------------------------------------------- #
@@ -173,12 +188,15 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
                   probe_loss_fn: Optional[Callable] = None,
                   probe_batch: Any = None,
                   probe_eps: float = 1e-4,
-                  d_tree: Optional[PyTree] = None) -> ZOEstimator:
+                  d_tree: Optional[PyTree] = None,
+                  backend: BackendSpec = None) -> ZOEstimator:
     """Definition 6 (unbiased, update along D·z) / Definition 7
     (``modify_expectation=True``: biased normalized-gradient estimate, update
     along z).  The D-tree lives in the estimator state, so it rides through
     checkpoints like any other scalar carry.  Pass ``d_tree`` to skip the
     init-time computation entirely."""
+    be = get_backend(backend)
+    be.check_dist(dist)
 
     def init(params, key):
         if d_tree is not None:
@@ -189,13 +207,14 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
                               probe_batch, probe_eps)
 
     def estimate(loss_fn, params, batch, key, est_state):
+        ref = StreamRef(key)
         d = est_state
         d_leaves = jax.tree_util.tree_leaves(d)
 
         def pert(i, p, sign):
             if not jnp.issubdtype(p.dtype, jnp.floating):
                 return p
-            z = sample_leaf_z(leaf_key(key, i), p, dist)
+            z = be.leaf_z(ref, i, p, dist)
             dinv = (1.0 / d_leaves[i]).astype(p.dtype)
             return p + sign * jnp.asarray(eps, p.dtype) * dinv * z
 
@@ -210,8 +229,8 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
             return tree_map_with_index(lambda i, p: pert(i, p, 1.0), p_minus)
 
         def apply_update(coeff, decay_term):
-            return apply_rank1(restore(), key, coeff, decay_term, dist,
-                               d_tree=d_for_update)
+            return be.apply_rank1(restore(), ref, coeff, decay_term, dist,
+                                  d_tree=d_for_update)
 
         return ZOEstimate(projected_grad=g, loss=0.5 * (l_plus + l_minus),
                           apply_update=apply_update, restore=restore,
@@ -221,4 +240,4 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
     # Definition 6 updates along D·z, which only the live est_state carries.
     return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
                        dist=dist, name="rescaled_spsa",
-                       replayable=bool(modify_expectation))
+                       replayable=bool(modify_expectation), backend=be)

@@ -36,20 +36,27 @@ def mezo(lr: float = 1e-6, eps: float = 1e-3, n: int = 1,
          estimator: str = "spsa", lr_schedule: str = "constant",
          total_steps: int = 0, warmup_steps: int = 0,
          sequential_perturb: bool = True,
-         clip_projected_grad: float = 0.0) -> ZOOptimizer:
+         clip_projected_grad: float = 0.0,
+         backend: str = "xla") -> ZOOptimizer:
     """ZO-SGD with in-place seed-replay perturbations (paper Algorithm 1;
     Algorithm 2 when ``n > 1``).  Composition::
 
         ZOOptimizer(spsa(eps) | n_spsa(n, eps) | one_point(eps),
                     chain(clip?, scale_by_schedule(lr), add_weight_decay?))
+
+    ``backend`` selects the z-generation strategy (``"xla"`` threefry HBM
+    temporaries, ``"pallas"`` VMEM-fused kernel with interpret-mode CPU
+    fallback) — see :mod:`repro.perturb`.
     """
     if estimator == "one_point":
-        est = estimators.one_point(eps=eps, dist=dist)
+        est = estimators.one_point(eps=eps, dist=dist, backend=backend)
     elif estimator == "spsa":
         est = (estimators.n_spsa(n, eps=eps, dist=dist,
-                                 sequential=sequential_perturb) if n > 1 else
+                                 sequential=sequential_perturb,
+                                 backend=backend) if n > 1 else
                estimators.spsa(eps=eps, dist=dist,
-                               sequential=sequential_perturb))
+                               sequential=sequential_perturb,
+                               backend=backend))
     else:
         raise ValueError(f"unknown estimator {estimator!r}")
     tf = _scalar_chain(lr, n, weight_decay, lr_schedule, total_steps,
@@ -63,11 +70,13 @@ def mezo_adam(lr: float = 1e-4, eps: float = 1e-3, beta1: float = 0.9,
               momentum_only: bool = False, dist: str = "gaussian",
               weight_decay: float = 0.0, lr_schedule: str = "constant",
               total_steps: int = 0, warmup_steps: int = 0,
-              clip_projected_grad: float = 0.0) -> ZOOptimizer:
+              clip_projected_grad: float = 0.0,
+              backend: str = "xla") -> ZOOptimizer:
     """MeZO-Adam / MeZO-momentum (paper §2.2 + App. B.2): the SPSA estimator
     with the Adam preconditioner reconstructed from the scalar g-history
     (ring buffer of ``window`` scalars) or materialized as the m/v oracle."""
-    est = estimators.spsa(eps=eps, dist=dist, sequential=True)
+    est = estimators.spsa(eps=eps, dist=dist, sequential=True,
+                          backend=backend)
     adam = transforms.scale_by_zo_adam(
         beta1=beta1, beta2=beta2, adam_eps=adam_eps, materialized=materialized,
         window=window, momentum_only=momentum_only, weight_decay=weight_decay)
@@ -83,7 +92,8 @@ def mezo_rescaled(lr: float = 1e-6, eps: float = 1e-3,
                   probe_batch: Any = None, probe_eps: float = 1e-4,
                   weight_decay: float = 0.0, lr_schedule: str = "constant",
                   total_steps: int = 0, warmup_steps: int = 0,
-                  clip_projected_grad: float = 0.0) -> ZOOptimizer:
+                  clip_projected_grad: float = 0.0,
+                  backend: str = "xla") -> ZOOptimizer:
     """Variance/expectation-modified SPSA (paper App. B.3/B.4, Definitions
     6/7): perturb by ε·(d⁻¹⊙z), update along (D or I)·z.  The paper found no
     consistent win over plain MeZO at equal forward budget — kept because it
@@ -91,7 +101,7 @@ def mezo_rescaled(lr: float = 1e-6, eps: float = 1e-3,
     est = estimators.rescaled_spsa(
         eps=eps, dist=dist, d_source=d_source,
         modify_expectation=modify_expectation, probe_loss_fn=probe_loss_fn,
-        probe_batch=probe_batch, probe_eps=probe_eps)
+        probe_batch=probe_batch, probe_eps=probe_eps, backend=backend)
     tf = _scalar_chain(lr, 1, weight_decay, lr_schedule, total_steps,
                        warmup_steps, clip_projected_grad)
     return ZOOptimizer(est, tf, name="mezo_rescaled")
@@ -109,7 +119,8 @@ def from_config(config) -> ZOOptimizer:
                   lr_schedule=config.lr_schedule,
                   total_steps=config.total_steps,
                   warmup_steps=config.warmup_steps,
-                  clip_projected_grad=config.clip_projected_grad)
+                  clip_projected_grad=config.clip_projected_grad,
+                  backend=getattr(config, "backend", "xla"))
     if getattr(config, "d_source", None) is not None:
         return mezo_rescaled(d_source=config.d_source,
                              modify_expectation=config.modify_expectation,

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import schedules
-from repro.core.perturb import leaf_key, sample_leaf_z, step_key
+from repro.core.perturb import step_key
+from repro.perturb import StreamRef, get_backend
 from repro.tree_utils import PyTree, tree_map_with_index, tree_zeros_like
 from repro.zo.base import TransformCtx, Updates, ZOTransform
 
@@ -119,9 +120,12 @@ def scale_by_zo_adam(beta1: float = 0.9, beta2: float = 0.999,
             return (g_hist, tree_zeros_like(params), tree_zeros_like(params))
         return (g_hist, (), ())
 
-    def _materialized_update(params, m_tree, v_tree, skey, g, lr, t, dist):
+    def _materialized_update(params, m_tree, v_tree, skey, g, lr, t, dist,
+                             backend):
+        ref = StreamRef(skey)
+
         def upd(i, p, m, v):
-            z = sample_leaf_z(leaf_key(skey, i), p, dist).astype(jnp.float32)
+            z = backend.leaf_z(ref, i, p, dist).astype(jnp.float32)
             ghat = g.astype(jnp.float32) * z
             m_new = beta1 * m + (1.0 - beta1) * ghat
             if momentum_only:
@@ -145,7 +149,8 @@ def scale_by_zo_adam(beta1: float = 0.9, beta2: float = 0.999,
         unf = jax.tree_util.tree_unflatten
         return unf(treedef, new_p), unf(treedef, new_m), unf(treedef, new_v)
 
-    def _recomputed_update(params, base_key, cur_step, g_hist, lr, t, dist):
+    def _recomputed_update(params, base_key, cur_step, g_hist, lr, t, dist,
+                           backend):
         """App. B.2: rebuild m (and v) from the scalar ledger, one leaf at a
         time, by replaying the window's z's.  O(W) forward-free tree passes
         of compute, O(largest leaf) extra memory."""
@@ -162,7 +167,8 @@ def scale_by_zo_adam(beta1: float = 0.9, beta2: float = 0.999,
             def body(j, acc):
                 m_acc, v_acc = acc
                 skey_j = step_key(base_key, cur_step - j)
-                z = sample_leaf_z(leaf_key(skey_j, i), p, dist).astype(jnp.float32)
+                z = backend.leaf_z(StreamRef(skey_j), i, p,
+                                   dist).astype(jnp.float32)
                 m_acc = m_acc + cm[j] * z
                 v_acc = v_acc + cv[j] * z * z
                 return (m_acc, v_acc)
@@ -186,12 +192,13 @@ def scale_by_zo_adam(beta1: float = 0.9, beta2: float = 0.999,
         t = ctx.step + 1                      # Adam bias-correction index
         lr = u.lr if u.lr is not None else jnp.float32(1.0)
         params0 = ctx.restore()
+        be = get_backend(ctx.backend)
         if materialized:
             new_params, m, v = _materialized_update(
-                params0, m, v, ctx.key, u.g, lr, t, ctx.dist)
+                params0, m, v, ctx.key, u.g, lr, t, ctx.dist, be)
         else:
             new_params = _recomputed_update(
-                params0, ctx.base_key, ctx.step, g_hist, lr, t, ctx.dist)
+                params0, ctx.base_key, ctx.step, g_hist, lr, t, ctx.dist, be)
             m, v = (), ()
         return u._replace(final_params=new_params), (g_hist, m, v)
 

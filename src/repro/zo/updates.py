@@ -11,39 +11,37 @@ straggler path, and the seed-parallel collective all write parameters:
 Keeping one implementation means a ledger replay, a late async contribution,
 and a live training step are guaranteed to perform the identical arithmetic —
 the property the bitwise crash-recovery tests rely on.
+
+The z generation itself is delegated to a ``repro.perturb`` backend
+(``xla`` threefry by default; ``pallas`` for VMEM-resident generation) — the
+same backend the producing step used, so the consistency guarantee holds per
+backend and cross-backend replay is refused upstream
+(``BackendMismatchError``).
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.perturb import Distribution, leaf_key, sample_leaf_z
-from repro.tree_utils import PyTree, tree_map_with_index
+from repro.perturb import StreamRef, get_backend
+from repro.perturb.base import BackendSpec
+from repro.perturb.xla import Distribution
+from repro.tree_utils import PyTree
 
 
 def apply_rank1(params: PyTree, key: jax.Array, coeff, decay_term=0.0,
                 dist: Distribution = "gaussian",
-                d_tree: Optional[PyTree] = None) -> PyTree:
+                d_tree: Optional[PyTree] = None,
+                backend: BackendSpec = None) -> PyTree:
     """θ ← (1 − decay_term)·θ − coeff·z(key), regenerating z leaf by leaf.
 
     ``coeff`` is the full η-scaled scalar (η·g, or η/n·g per seed);
     ``decay_term`` is the decoupled weight-decay coefficient η·λ.  ``d_tree``
     holds one positive scalar per leaf and rescales z (Definition 6's
     block-diagonal D); ``None`` leaves z unscaled (Definition 7 / plain SPSA).
+    ``backend`` selects the z-generation strategy (default ``xla``).
     Non-floating leaves pass through untouched.
     """
-    d_leaves = jax.tree_util.tree_leaves(d_tree) if d_tree is not None else None
-
-    def one(i, p):
-        if not jnp.issubdtype(p.dtype, jnp.floating):
-            return p
-        z = sample_leaf_z(leaf_key(key, i), p, dist)
-        if d_leaves is not None:
-            z = z * jnp.asarray(d_leaves[i], p.dtype)
-        coeff_ = jnp.asarray(coeff, p.dtype)
-        decay = jnp.asarray(1.0 - decay_term, p.dtype)
-        return decay * p - coeff_ * z
-
-    return tree_map_with_index(one, params)
+    return get_backend(backend).apply_rank1(params, StreamRef(key), coeff,
+                                            decay_term, dist, d_tree=d_tree)

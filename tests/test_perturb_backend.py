@@ -1,0 +1,263 @@
+"""Cross-backend contract tests for the pluggable perturbation layer
+(``repro.perturb``): one ``StreamRef`` contract, two backends (``xla``
+threefry, ``pallas`` fused-kernel counter hash), loud refusal of
+backend-mismatched replay."""
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import zo
+from repro.core.trajectory import TrajectoryLedger, replay
+from repro.kernels.zo_fused import ref as zo_ref
+from repro.perturb import (BackendMismatchError, StreamRef, get_backend,
+                           pallas as pallas_mod)
+from repro.tree_utils import tree_max_abs_diff
+
+BACKENDS = ["xla", "pallas"]
+
+
+def tree_a():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (70, 33)), "b": jnp.ones((31,))}
+
+
+# --------------------------------------------------------------------------- #
+# StreamRef: the one canonical derivation
+# --------------------------------------------------------------------------- #
+def test_stream_ref_derivation_is_legacy_fold_chain():
+    """derive(k, t[, j]) must be the exact legacy fold chain — existing
+    ledgers/checkpoints replay unchanged."""
+    base = jax.random.PRNGKey(3)
+    np.testing.assert_array_equal(
+        np.asarray(StreamRef.derive(base, 7).key),
+        np.asarray(jax.random.fold_in(base, 7)))
+    np.testing.assert_array_equal(
+        np.asarray(StreamRef.derive(base, 7, 2).key),
+        np.asarray(jax.random.fold_in(jax.random.fold_in(base, 7), 2)))
+
+
+def test_stream_ref_counter_projection_consistent():
+    """leaf_seed follows the legacy zo_fused stride schedule from
+    counter_seed, and is a deterministic function of the key."""
+    ref = StreamRef.derive(jax.random.PRNGKey(1), 5)
+    s0 = int(ref.counter_seed())
+    for i in (0, 1, 7):
+        assert int(ref.leaf_seed(i)) == int(pallas_mod.leaf_seed(s0, i))
+    assert int(StreamRef.derive(jax.random.PRNGKey(1), 5).counter_seed()) == s0
+    assert int(StreamRef.derive(jax.random.PRNGKey(1), 6).counter_seed()) != s0
+
+
+def test_xla_backend_is_bitwise_legacy_core_perturb():
+    from repro.core.perturb import perturb as legacy_perturb
+    params = tree_a()
+    key = jax.random.PRNGKey(9)
+    got = get_backend("xla").perturb(params, StreamRef(key), 1e-3)
+    want = legacy_perturb(params, key, 1e-3)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# z stability across tree restructuring / padding (the StreamRef contract)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_z_stable_across_tree_restructuring(backend):
+    """A leaf's z depends only on (StreamRef, leaf_index, shape) — nesting
+    the tree differently or resizing *another* leaf must not change it."""
+    be = get_backend(backend)
+    ref = StreamRef.derive(jax.random.PRNGKey(0), 11)
+    w = jnp.zeros((37, 5))
+    flat = {"0w": w, "1b": jnp.zeros((8,))}            # leaf 0 = w
+    nested = {"a": {"x": w}, "b": {"y": jnp.zeros((300,))}}  # leaf 0 = w too
+    z_flat = be.perturb(flat, ref, 1.0)["0w"]
+    z_nested = be.perturb(nested, ref, 1.0)["a"]["x"]
+    np.testing.assert_array_equal(np.asarray(z_flat), np.asarray(z_nested))
+
+
+def test_pallas_z_stable_across_padding_boundary():
+    """The counter stream is position-stable: a leaf's leading elements don't
+    change when the leaf (and hence its kernel padding) grows."""
+    z8 = pallas_mod.zo_affine(jnp.zeros((8,)), 5, 0.0, 1.0, interpret=True)
+    z100 = pallas_mod.zo_affine(jnp.zeros((100,)), 5, 0.0, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(z8), np.asarray(z100[:8]))
+
+
+# --------------------------------------------------------------------------- #
+# pallas interpret mode vs the pure-jnp oracle
+# --------------------------------------------------------------------------- #
+def test_pallas_interpret_z_matches_ref_oracle_bitwise():
+    z = pallas_mod.zo_affine(jnp.zeros((100,)), 5, 0.0, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(z),
+                                  np.asarray(zo_ref.z_for((100,), 5)))
+
+
+def test_pallas_interpret_affine_matches_ref_oracle_bitwise():
+    """Same arithmetic, same fusion: under jit the kernel (interpret) and the
+    oracle produce identical bits."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (33, 65))
+    got = pallas_mod.zo_affine(x, 13, 0.9, 0.05, interpret=True)
+    want = jax.jit(zo_ref.zo_affine_ref)(x, 13, 0.9, 0.05)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pallas_apply_rank1_is_the_expected_rank1_step():
+    be = get_backend("pallas")
+    params = tree_a()
+    ref = StreamRef.derive(jax.random.PRNGKey(2), 0)
+    out = be.apply_rank1(params, ref, 0.01, 0.001)
+    z_b = zo_ref.z_for((31,), ref.leaf_seed(0).astype(jnp.uint32))  # "b" < "w"
+    want = (1.0 - 0.001) * params["b"] - 0.01 * z_b
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# perturb_many (the batched multi-seed entry point)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_perturb_many_matches_stacked_singles(backend):
+    be = get_backend(backend)
+    params = tree_a()
+    refs = [StreamRef.derive(jax.random.PRNGKey(0), 4, j) for j in range(3)]
+    many = be.perturb_many(params, refs, 1e-3)
+    for j, r in enumerate(refs):
+        single = be.perturb(params, r, 1e-3)
+        for a, b in zip(jax.tree_util.tree_leaves(
+                jax.tree_util.tree_map(lambda x: x[j], many)),
+                jax.tree_util.tree_leaves(single)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert many["w"].shape == (3, 70, 33)
+
+
+# --------------------------------------------------------------------------- #
+# Distribution matrix: loud failure, no wrong-scale silent fallback
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dist", ["sphere", "rademacher"])
+def test_pallas_unsupported_dists_raise(dist):
+    be = get_backend("pallas")
+    with pytest.raises(NotImplementedError, match="pallas"):
+        be.perturb(tree_a(), StreamRef.derive(jax.random.PRNGKey(0), 0),
+                   1e-3, dist=dist)
+
+
+def test_pallas_unsupported_dist_raises_at_factory_time():
+    with pytest.raises(NotImplementedError, match="sphere"):
+        zo.mezo(lr=1e-3, eps=1e-3, dist="sphere", backend="pallas")
+
+
+def test_xla_supports_full_dist_matrix():
+    be = get_backend("xla")
+    params = tree_a()
+    ref = StreamRef.derive(jax.random.PRNGKey(0), 0)
+    for dist in ("gaussian", "rademacher", "sphere"):
+        out = be.perturb(params, ref, 1e-3, dist=dist)
+        assert out["w"].shape == (70, 33)
+
+
+# --------------------------------------------------------------------------- #
+# Backend recording + mismatch refusal (ledger and checkpoint)
+# --------------------------------------------------------------------------- #
+def test_ledger_serialization_roundtrips_backend():
+    led = TrajectoryLedger(base_seed=7, grad_dtype="float32", backend="pallas")
+    led.append(0, 0.5, 1e-3)
+    led2 = TrajectoryLedger.from_bytes(led.to_bytes())
+    assert led2.backend == "pallas"
+    assert led2.steps == [0]
+
+
+def test_legacy_mzol1_ledger_reads_as_xla():
+    """Pre-backend ledgers (MZOL1) must keep deserializing, as xla."""
+    buf = b"MZOL1\x00" + struct.pack("<qi", 42, 4) + struct.pack("<q", 1)
+    buf += np.asarray([3], np.int64).tobytes()
+    buf += np.asarray([0.25], np.float32).tobytes()
+    buf += np.asarray([1e-3], np.float32).tobytes()
+    led = TrajectoryLedger.from_bytes(buf)
+    assert led.backend == "xla"
+    assert led.base_seed == 42 and led.steps == [3]
+
+
+def params0():
+    return {"w": jnp.ones((12,)), "b": jnp.ones((3, 5))}
+
+
+def test_replay_refuses_backend_mismatch():
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32",
+                           backend="pallas")
+    led.append(0, 0.5, 1e-3)
+    opt_xla = zo.mezo(lr=1e-3, eps=1e-3, backend="xla")
+    with pytest.raises(BackendMismatchError, match="pallas"):
+        replay(params0(), led, opt_xla)
+    # and matching backend replays fine
+    opt_pal = zo.mezo(lr=1e-3, eps=1e-3, backend="pallas")
+    replay(params0(), led, opt_pal)
+
+
+def test_checkpoint_resume_refuses_backend_mismatch(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.pipeline import DataSpec, Pipeline
+    from repro.train.loop import train
+
+    target = {"w": jnp.zeros((12,)), "b": jnp.zeros((3, 5))}
+
+    def loss_fn(p, batch):
+        del batch
+        return 0.5 * sum(jnp.sum((x - y) ** 2) for x, y in
+                         zip(jax.tree_util.tree_leaves(p),
+                             jax.tree_util.tree_leaves(target)))
+
+    pipe = Pipeline(DataSpec("lm", batch=2, seq=4, vocab=11, seed=1))
+    ck = CheckpointManager(str(tmp_path / "run"), interval=2)
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    train(loss_fn, params0(), zo.mezo(lr=1e-3, eps=1e-3, backend="xla"),
+          pipe, total_steps=4, ckpt=ck, ledger=led, donate=False)
+    assert ck.load_ledger().backend == "xla"
+
+    led2 = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    with pytest.raises(BackendMismatchError):
+        train(loss_fn, params0(), zo.mezo(lr=1e-3, eps=1e-3, backend="pallas"),
+              pipe, total_steps=8, ckpt=ck, ledger=led2, donate=False)
+
+
+def test_replay_is_deterministic_per_backend():
+    """Two replays of the same ledger under the same backend are bitwise
+    identical — the recovery invariant, per backend."""
+    for backend in BACKENDS:
+        opt = zo.mezo(lr=1e-3, eps=1e-3, backend=backend)
+        led = TrajectoryLedger(base_seed=0, grad_dtype="float32",
+                               backend=opt.backend_name)
+        for i in range(4):
+            led.append(i, 0.1 * (i + 1), 1e-3)
+        r1 = replay(params0(), led, opt)
+        r2 = replay(params0(), led, opt)
+        for a, b in zip(jax.tree_util.tree_leaves(r1),
+                        jax.tree_util.tree_leaves(r2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# Live step vs replay arithmetic, per backend
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_replay_update_matches_live_step(backend):
+    """The ledger-recovery invariant holds through either backend: replaying
+    the recorded (seed, g, lr) reproduces the live step's parameters."""
+    target = {"w": jnp.zeros((12,)), "b": jnp.zeros((3, 5))}
+
+    def loss_fn(p, batch):
+        del batch
+        return 0.5 * sum(jnp.sum((x - y) ** 2) for x, y in
+                         zip(jax.tree_util.tree_leaves(p),
+                             jax.tree_util.tree_leaves(target)))
+
+    opt = zo.mezo(lr=1e-3, eps=1e-3, weight_decay=0.01, backend=backend)
+    params = params0()
+    state = opt.init(params, seed=4)
+    p1, _, m = jax.jit(opt.step_fn(loss_fn))(params, state, None)
+    from repro.core.perturb import step_key
+    skey = step_key(opt.init(params, seed=4).base_key, jnp.int32(0))
+    p_replayed = opt.replay_update(params, skey, m["projected_grad"], m["lr"])
+    assert tree_max_abs_diff(p1, p_replayed) < 1e-6
