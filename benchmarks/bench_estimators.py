@@ -1,16 +1,37 @@
-"""Paper Table 11 (SPSA vs one-point at fixed forward passes) and Table 6
-(n-SPSA sample schedules), on a CPU-scale prompt-classification task."""
+"""Estimator comparisons.
+
+Paper sections: Table 11 (SPSA vs one-point at fixed forward passes) and
+Table 6 (n-SPSA sample schedules), on a CPU-scale prompt-classification task.
+
+Plus the batched-seed section: spsa vs n_spsa(B) vs fzoo(B) per-step
+wall-clock and steps-to-loss on a tiny LM.  FZOO evaluates its B seed streams
+with ONE vmapped forward over the ``perturb_many`` stacked-params view, so
+its per-step cost must come in well under B× the spsa step — that
+amortization ratio is the headline number, written (with the full records) to
+``results/bench_estimators.json`` for machine consumption / CI artifacts.
+
+``run.py --smoke`` shrinks budgets to CI-per-commit scale (same rows, same
+JSON schema).
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 
-from benchmarks.common import emit, note, tiny_lm
+from benchmarks.common import emit, is_smoke, note, time_fn, tiny_lm
+from repro import zo
 from repro.core import MeZO, MeZOConfig
-from repro.data.synthetic import PromptClassification
+from repro.data.synthetic import PromptClassification, lm_batch
 from repro.models import bundle, transformer
 
-FORWARD_BUDGET = 1600
+FORWARD_BUDGET = 160 if is_smoke() else 1600
 BATCH = 32
+OUT_PATH = os.path.join("results", "bench_estimators.json")
+
+FZOO_B = 8
+DESCENT_STEPS = 30 if is_smoke() else 150
 
 
 def _train_and_eval(cfg, task, opt, steps):
@@ -26,7 +47,7 @@ def _train_and_eval(cfg, task, opt, steps):
     return task.eval_accuracy(cfg, logits_fn, params, jax.random.PRNGKey(77), 512)
 
 
-def run():
+def _tables_11_and_6(records):
     cfg = tiny_lm(d_model=96, n_layers=3, vocab=256, ff=192)
     task = PromptClassification(vocab=cfg.vocab_size, n_classes=2, seed=2)
 
@@ -51,6 +72,88 @@ def run():
     emit("estimators/nspsa_n4_acc", 0.0, f"{acc_n4:.3f}")
     note(f"Table 6 proxy: n=1 {acc_n1:.3f} vs n=4 {acc_n4:.3f} at fixed "
          f"forwards (paper: marginal gains at best)")
+    records.append({"section": "tables_11_6",
+                    "spsa_acc": float(acc_spsa), "one_point_acc": float(acc_1p),
+                    "nspsa_n4_acc": float(acc_n4),
+                    "forward_budget": FORWARD_BUDGET})
+
+
+def _batched_seed_section(records):
+    """spsa vs n_spsa(B) vs fzoo(B): per-step wall-clock + steps-to-loss."""
+    cfg = tiny_lm(d_model=128, n_layers=2, ff=256, vocab=512)
+    b = bundle(cfg)
+    params0 = b.init(jax.random.PRNGKey(0))
+    loss_fn = b.loss_fn()
+    mk_batch = lambda s: lm_batch(s, 0, 4, 32, cfg.vocab_size)
+    batch0 = mk_batch(0)
+
+    # fzoo's std normalization rescales g by ~1/σ(loss diffs) ≈ 1/(ε·σ_rel),
+    # so its lr sits orders of magnitude under the spsa lr at equal step size.
+    optimizers = [
+        ("spsa", zo.mezo(lr=1e-4, eps=1e-3)),
+        (f"n_spsa_{FZOO_B}", zo.mezo(lr=1e-4, eps=1e-3, n=FZOO_B)),
+        (f"fzoo_{FZOO_B}", zo.fzoo(lr=2e-6, eps=1e-3, batch_seeds=FZOO_B)),
+    ]
+    base_us = None
+    for name, opt in optimizers:
+        state = opt.init(params0, seed=0)
+        step = jax.jit(opt.step_fn(loss_fn))
+        us = time_fn(step, params0, state, batch0,
+                     iters=3 if is_smoke() else 5)
+
+        # loss trajectory (fresh state, per-step batches)
+        p, st = params0, opt.init(params0, seed=0)
+        l0 = None
+        losses = []
+        for s in range(DESCENT_STEPS):
+            p, st, m = step(p, st, mk_batch(s))
+            losses.append(float(m["loss"]))
+            if l0 is None:
+                l0 = losses[0]
+        target = 0.98 * l0
+        steps_to = next((i + 1 for i, l in enumerate(losses) if l <= target),
+                        None)
+        rec = {"section": "batched_seed", "estimator": name,
+               "us_per_step": us, "final_loss": losses[-1],
+               "first_loss": l0, "steps_to_98pct": steps_to,
+               "descent_steps": DESCENT_STEPS}
+        if name == "spsa":
+            base_us = us
+        else:
+            rec["vs_spsa_step"] = us / base_us
+        if name.startswith("fzoo"):
+            # the acceptance number: batching must amortize — one vmapped
+            # B-forward + B rank-1 passes must beat B sequential spsa steps
+            rec["amortization_vs_Bx_spsa"] = us / (FZOO_B * base_us)
+        records.append(rec)
+        emit(f"estimators/{name}_us_per_step", us,
+             f"final_loss={losses[-1]:.4f}")
+        note(f"{name}: {us/1e3:.2f} ms/step, loss {l0:.4f} -> "
+             f"{losses[-1]:.4f} in {DESCENT_STEPS} steps"
+             + (f", steps_to_98pct={steps_to}" if steps_to else ""))
+    fz = next(r for r in records if r.get("estimator", "").startswith("fzoo"))
+    emit("estimators/fzoo_amortization", 0.0,
+         f"{fz['amortization_vs_Bx_spsa']:.3f}x_of_Bx_spsa")
+    note(f"fzoo({FZOO_B}) per-step = "
+         f"{fz['amortization_vs_Bx_spsa']:.3f} × (B × spsa per-step) "
+         f"(<1 means the batched forward amortizes)")
+
+
+def run():
+    records = []
+    _batched_seed_section(records)
+    if not is_smoke():
+        _tables_11_and_6(records)
+    else:
+        note("smoke mode: skipping the Table 11/6 accuracy sweeps "
+             "(eval-heavy); batched-seed section recorded")
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"bench": "estimators", "smoke": is_smoke(),
+                   "platform": jax.default_backend(),
+                   "batch_seeds": FZOO_B,
+                   "records": records}, f, indent=2)
+    note(f"JSON written to {OUT_PATH}")
 
 
 if __name__ == "__main__":

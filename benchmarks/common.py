@@ -2,10 +2,19 @@
 CSV rows (the harness contract) plus human-readable detail to stderr."""
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 import jax
+
+
+def is_smoke() -> bool:
+    """True when ``benchmarks/run.py --smoke`` set REPRO_BENCH_SMOKE: benches
+    shrink to CI-per-commit scale (tiny shapes, few iters) but still emit the
+    same CSV rows and results/*.json artifacts, so the perf trajectory gets a
+    trace on every push instead of only on manual runs."""
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

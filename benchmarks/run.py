@@ -11,7 +11,9 @@
 #   Tables 8/9/10/19, ICL column -> bench_variants
 #
 # Usage: PYTHONPATH=src python -m benchmarks.run [--only quality,theory]
+#        PYTHONPATH=src python -m benchmarks.run --smoke     # CI per-commit
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -29,12 +31,24 @@ BENCHES = [
     ("variants", "benchmarks.bench_variants"),
 ]
 
+# CI-per-commit subset: benches that finish in seconds at smoke scale and
+# leave results/*.json artifacts (the perf trajectory per commit).
+SMOKE_BENCHES = "storage,perturb,estimators"
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + reduced iters, restricted to the "
+                         f"fast subset ({SMOKE_BENCHES}) unless --only is "
+                         "given; sets REPRO_BENCH_SMOKE=1 for the benches")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        if args.only is None:
+            args.only = SMOKE_BENCHES
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

@@ -30,6 +30,7 @@ from repro.zo.presets import as_zo_optimizer
 
 _MAGIC = b"MZOL1\x00"          # legacy format: no backend record (implies xla)
 _MAGIC2 = b"MZOL2\x00"         # adds the perturbation-backend name
+_MAGIC3 = b"MZOL3\x00"         # adds batch_seeds (B per-seed scalars per step)
 
 
 @dataclasses.dataclass
@@ -39,18 +40,43 @@ class TrajectoryLedger:
     ``backend`` records which perturbation backend generated the run's z
     streams (``repro.perturb``); replay refuses a mismatched backend because
     the streams differ (``BackendMismatchError``).  Legacy ``MZOL1`` files
-    deserialize with ``backend="xla"`` (the only backend that existed)."""
+    deserialize with ``backend="xla"`` (the only backend that existed).
+
+    ``batch_seeds`` records how many seed streams each step evaluated: plain
+    MeZO records one scalar per step (B=1, serialized as ``MZOL2`` so old
+    readers keep working); a batched-seed FZOO run records the (B,) per-seed
+    g vector per step (serialized as ``MZOL3``), which is exactly what
+    ``replay_update`` needs to refold the B rank-1 updates.  B is fixed per
+    ledger — it is a property of the recorded optimizer."""
     base_seed: int
     grad_dtype: str = "float16"       # the paper's 2-bytes-per-step accounting
     backend: str = "xla"              # perturbation backend of the run
+    batch_seeds: int = 1              # seed streams (g scalars) per step
     steps: list = dataclasses.field(default_factory=list)    # step indices
     grads: list = dataclasses.field(default_factory=list)    # projected grads
     lrs: list = dataclasses.field(default_factory=list)      # lr actually used
 
-    def append(self, step: int, projected_grad: float, lr: float) -> None:
-        g = np.dtype(self.grad_dtype).type(projected_grad)
+    def append(self, step: int, projected_grad, lr: float) -> None:
+        """Record one step.  ``projected_grad`` is a scalar (B=1) or a
+        length-B vector of per-seed scalars (batched-seed estimators)."""
+        arr = np.atleast_1d(np.asarray(projected_grad)).astype(self.grad_dtype)
+        if arr.ndim != 1:
+            raise ValueError(f"projected_grad must be scalar or 1-D, "
+                             f"got shape {arr.shape}")
+        if not self.steps and self.batch_seeds == 1:
+            # default-constructed ledger: infer B from the first record
+            self.batch_seeds = int(arr.size)
+        elif int(arr.size) != self.batch_seeds:
+            # a constructor-declared B is a promise, not a default — a
+            # mismatched first record fails HERE (the recording site), not
+            # later at replay time with a ledger-vs-optimizer error
+            raise ValueError(
+                f"this ledger records {self.batch_seeds} seed scalar(s) per "
+                f"step; got {arr.size} — batch_seeds is fixed per run")
         self.steps.append(int(step))
-        self.grads.append(float(g))   # stored after quantization
+        # stored after quantization; scalars stay plain floats (legacy shape)
+        self.grads.append(float(arr[0]) if arr.size == 1
+                          else [float(x) for x in arr])
         self.lrs.append(float(lr))
 
     def __len__(self) -> int:
@@ -59,12 +85,15 @@ class TrajectoryLedger:
     # -- serialization ----------------------------------------------------- #
     def to_bytes(self) -> bytes:
         buf = io.BytesIO()
-        buf.write(_MAGIC2)
+        batched = self.batch_seeds > 1
+        buf.write(_MAGIC3 if batched else _MAGIC2)
         buf.write(struct.pack("<qi", self.base_seed,
                               1 if self.grad_dtype == "float16" else 4))
         bname = self.backend.encode("utf-8")
         buf.write(struct.pack("<i", len(bname)))
         buf.write(bname)
+        if batched:
+            buf.write(struct.pack("<i", self.batch_seeds))
         buf.write(struct.pack("<q", len(self.steps)))
         buf.write(np.asarray(self.steps, np.int64).tobytes())
         buf.write(np.asarray(self.grads, self.grad_dtype).tobytes())
@@ -75,20 +104,29 @@ class TrajectoryLedger:
     def from_bytes(cls, raw: bytes) -> "TrajectoryLedger":
         buf = io.BytesIO(raw)
         magic = buf.read(len(_MAGIC))
-        assert magic in (_MAGIC, _MAGIC2), "not a MeZO ledger"
+        assert magic in (_MAGIC, _MAGIC2, _MAGIC3), "not a MeZO ledger"
         seed, dcode = struct.unpack("<qi", buf.read(12))
         backend = "xla"                       # MZOL1 predates backend choice
-        if magic == _MAGIC2:
+        batch_seeds = 1
+        if magic in (_MAGIC2, _MAGIC3):
             blen, = struct.unpack("<i", buf.read(4))
             backend = buf.read(blen).decode("utf-8")
+        if magic == _MAGIC3:
+            batch_seeds, = struct.unpack("<i", buf.read(4))
         n, = struct.unpack("<q", buf.read(8))
         dtype = "float16" if dcode == 1 else "float32"
+        itemsize = np.dtype(dtype).itemsize
         steps = np.frombuffer(buf.read(8 * n), np.int64)
-        grads = np.frombuffer(buf.read(np.dtype(dtype).itemsize * n), dtype)
+        grads = np.frombuffer(buf.read(itemsize * n * batch_seeds), dtype)
         lrs = np.frombuffer(buf.read(4 * n), np.float32)
-        led = cls(base_seed=seed, grad_dtype=dtype, backend=backend)
+        led = cls(base_seed=seed, grad_dtype=dtype, backend=backend,
+                  batch_seeds=batch_seeds)
         led.steps = [int(s) for s in steps]
-        led.grads = [float(g) for g in grads]
+        if batch_seeds == 1:
+            led.grads = [float(g) for g in grads]
+        else:
+            led.grads = [[float(g) for g in row]
+                         for row in grads.reshape(n, batch_seeds)]
         led.lrs = [float(l) for l in lrs]
         return led
 
@@ -113,6 +151,14 @@ def replay(params0: PyTree, ledger: TrajectoryLedger, optimizer,
     opt = as_zo_optimizer(optimizer)
     check_replay_backend(ledger.backend,
                          getattr(opt, "backend_name", None), "trajectory ledger")
+    opt_bs = int(getattr(opt, "batch_seeds", 1))
+    if len(ledger) and ledger.batch_seeds != opt_bs:
+        raise ValueError(
+            f"trajectory ledger records {ledger.batch_seeds} seed scalar(s) "
+            f"per step but the optimizer evaluates batch_seeds={opt_bs}; the "
+            "seed fold schedule (and the per-step g shape) differ, so replay "
+            "would misapply the updates — replay with a matching "
+            "fzoo(batch_seeds=...) composition")
     base_key = jax.random.PRNGKey(ledger.base_seed)
     to_idx = len(ledger) if to_idx is None else to_idx
 

@@ -80,7 +80,8 @@ def replicated_tree(tree, mesh):
 
 
 def _compile_case(cfg, b, cell, mesh, donate: bool = True,
-                  backend: str = "xla"):
+                  backend: str = "xla", estimator: str = "spsa",
+                  batch_seeds: int = 8):
     """Lower + compile the cell's step function; returns the compiled exe."""
     specs = b.input_specs(cell)
     params_sds = b.param_shapes()
@@ -92,7 +93,12 @@ def _compile_case(cfg, b, cell, mesh, donate: bool = True,
         if resolver_p(logical, shape) is not None else None)
 
     if cell.kind == "train":
-        opt = zo.mezo(lr=1e-6, eps=1e-3, backend=backend)
+        if estimator == "fzoo":
+            opt = zo.fzoo(lr=1e-6, eps=1e-3, batch_seeds=batch_seeds,
+                          backend=backend)
+        else:
+            opt = zo.mezo(lr=1e-6, eps=1e-3, estimator=estimator,
+                          backend=backend)
         state_sds = jax.eval_shape(lambda: opt.init(seed=0))
         sshard = replicated_tree(state_sds, mesh)
         step = opt.step_fn(b.loss_fn())
@@ -150,7 +156,8 @@ def calibrate_loop_costs(arch, cell, mesh, overrides: dict):
 
 def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
              optimizer: str = "mezo", verbose: bool = True,
-             calibrate: bool = True, backend: str = "xla") -> dict:
+             calibrate: bool = True, backend: str = "xla",
+             estimator: str = "spsa", batch_seeds: int = 8) -> dict:
     arch = all_archs()[arch_id]
     cfg = arch.cfg
     if overrides:
@@ -159,12 +166,15 @@ def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
     chips = int(mesh.devices.size)
     rec = {"arch": arch_id, "cell": cell.name, "mesh": mesh_name,
            "chips": chips, "optimizer": optimizer,
-           "perturb_backend": backend,
+           "perturb_backend": backend, "estimator": estimator,
+           "batch_seeds": batch_seeds if estimator == "fzoo" else 1,
            "overrides": {k: str(v) for k, v in overrides.items()},
            "status": "ok"}
     t0 = time.time()
     try:
-        compiled = _compile_case(cfg, b, cell, mesh, backend=backend)
+        compiled = _compile_case(cfg, b, cell, mesh, backend=backend,
+                                 estimator=estimator,
+                                 batch_seeds=batch_seeds)
         t_compile = time.time() - t0
         flops_raw, hbm_raw, coll_raw, coll_detail = _cost_triple(compiled)
         rec["raw"] = {"flops": flops_raw, "hbm_bytes": hbm_raw,
@@ -232,6 +242,13 @@ def main():
     ap.add_argument("--set", action="append", default=[],
                     help="config override key=value (e.g. attention_impl=chunked)")
     ap.add_argument("--optimizer", default="mezo", choices=["mezo"])
+    ap.add_argument("--estimator", default="spsa",
+                    choices=["spsa", "one_point", "fzoo"],
+                    help="gradient estimator for the train cells; 'fzoo' "
+                         "compiles the batched-seed one-sided step "
+                         "(--batch-seeds streams, one vmapped forward)")
+    ap.add_argument("--batch-seeds", type=int, default=8,
+                    help="seed streams per step for --estimator fzoo")
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "pallas-interpret"],
                     help="perturbation backend for the train cells")
@@ -292,7 +309,9 @@ def main():
                     # proves the 'pod' axis shards (compile success + memory)
                     rec = run_case(arch_id, cell, mesh, mesh_label, overrides,
                                    calibrate=(mesh_name == "single"),
-                                   backend=args.backend)
+                                   backend=args.backend,
+                                   estimator=args.estimator,
+                                   batch_seeds=args.batch_seeds)
                     if args.tag:
                         rec["tag"] = args.tag
                     f.write(json.dumps(rec) + "\n")

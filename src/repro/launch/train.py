@@ -28,6 +28,14 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--optimizer", default="mezo",
                     choices=["mezo", "mezo-adam", "adam", "sgd"])
+    ap.add_argument("--estimator", default="spsa",
+                    choices=["spsa", "one_point", "fzoo"],
+                    help="gradient estimator for --optimizer mezo; 'fzoo' is "
+                         "the batched-seed one-sided estimator "
+                         "(--batch-seeds streams per step, one vmapped "
+                         "forward, loss-diff-std step normalization)")
+    ap.add_argument("--batch-seeds", type=int, default=8,
+                    help="seed streams per step for --estimator fzoo")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -55,9 +63,15 @@ def main():
                              vocab=cfg.vocab_size, seed=args.seed))
     ledger = None
     if args.optimizer == "mezo":
-        opt = zo.mezo(lr=args.lr or 1e-5, eps=args.eps, backend=args.backend)
+        if args.estimator == "fzoo":
+            opt = zo.fzoo(lr=args.lr or 1e-6, eps=args.eps,
+                          batch_seeds=args.batch_seeds, backend=args.backend)
+        else:
+            opt = zo.mezo(lr=args.lr or 1e-5, eps=args.eps,
+                          estimator=args.estimator, backend=args.backend)
         ledger = TrajectoryLedger(base_seed=args.seed, grad_dtype="float32",
-                                  backend=opt.backend_name)
+                                  backend=opt.backend_name,
+                                  batch_seeds=opt.batch_seeds)
     elif args.optimizer == "mezo-adam":
         opt = zo.mezo_adam(lr=args.lr or 1e-4, eps=args.eps,
                            backend=args.backend)

@@ -45,13 +45,24 @@ same ``StreamRef``; within a backend the stream is bitwise-stable across
 tree restructuring and padding boundaries (contract-tested in
 ``tests/test_perturb_backend.py``).
 
+Batched multi-seed streams
+--------------------------
+``PerturbBackend.perturb_many`` stacks B perturbed views of θ for
+batched-seed estimators (``zo.fzoo``).  Both backends override the
+stacked-singles default with genuinely vectorized generation — ``xla`` vmaps
+threefry over the stacked per-seed keys, ``pallas`` runs the batched-seed
+kernel (B z-streams generated against each resident VMEM tile of x) — and
+both are bitwise-equal to stacking per-ref ``perturb`` calls
+(contract-tested for B ∈ {1, 3, 8} across dtypes).
+
+The default backend honors the ``REPRO_BACKEND`` environment variable (CI's
+pallas-interpret job runs the unmodified suite under the fused kernel).
+
 Extending
 ---------
-New strategies (batched-seed generation for FZOO-style estimators,
-sparse/masked perturbation schedules) implement ``PerturbBackend`` — notably
-``perturb_many`` for vectorized multi-seed streams — and register with
-``register_backend``; every existing estimator × transform composition picks
-them up through the same kwarg.
+New strategies (sparse/masked perturbation schedules, quantized z) implement
+``PerturbBackend`` and register with ``register_backend``; every existing
+estimator × transform composition picks them up through the same kwarg.
 """
 from repro.perturb.base import (BackendMismatchError, PerturbBackend,
                                 available_backends, check_replay_backend,

@@ -27,6 +27,7 @@ or call time with the matrix above spelled out.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
@@ -47,10 +48,23 @@ def check_replay_backend(recorded: Optional[str], active: Optional[str],
                          what: str) -> None:
     """Raise ``BackendMismatchError`` if a recorded artifact's backend does
     not match the active optimizer's.  ``None`` on either side (a pre-backend
-    artifact, or a non-ZO optimizer) skips the check."""
+    artifact, or a non-ZO optimizer) skips the check.
+
+    Recorded identities are the backend's ``stream_id`` — the registry name
+    plus a ``+zN`` suffix whenever the backend's z-generator arithmetic has
+    been revised (same name, different bits).  A same-name different-version
+    mismatch gets its own message: selecting another backend cannot fix it."""
     if recorded is None or active is None:
         return
     if recorded != active:
+        if recorded.partition("+z")[0] == active.partition("+z")[0]:
+            raise BackendMismatchError(
+                f"{what} was recorded under z-stream {recorded!r} but this "
+                f"build's {active.partition('+z')[0]!r} backend generates "
+                f"{active!r}: the backend's z-generator arithmetic changed "
+                "between versions, so replay would silently reconstruct "
+                "different parameters.  Resume from a full tensor checkpoint "
+                "(or re-run) instead of replaying this artifact.")
         raise BackendMismatchError(
             f"{what} was recorded under the {recorded!r} perturbation backend "
             f"but is being replayed under {active!r}; the backends generate "
@@ -69,6 +83,18 @@ class PerturbBackend:
 
     name: str = "?"
     dists: frozenset = frozenset()
+    # bump when the backend's z-generator arithmetic changes (same name,
+    # different bits): artifacts record stream_id, and replay of an
+    # older-version artifact refuses instead of silently diverging
+    stream_version: int = 1
+
+    @property
+    def stream_id(self) -> str:
+        """Identity recorded in ledger/checkpoint metadata: the registry name
+        plus ``+zN`` for revised z-generator arithmetic (v1 stays bare so
+        existing artifacts keep their recorded identity)."""
+        return (self.name if self.stream_version == 1
+                else f"{self.name}+z{self.stream_version}")
 
     def check_dist(self, dist: str) -> None:
         if dist not in self.dists:
@@ -117,10 +143,13 @@ class PerturbBackend:
         each leaf of the result has shape ``(len(refs), *leaf.shape)``.
 
         Default implementation stacks per-ref ``perturb`` calls — bitwise
-        identical to the sequential path by construction.  Backends may
-        override with a genuinely vectorized z generation (the extension
-        point for batched-seed estimators like FZOO, Dang et al., 2025).
-        """
+        identical to the sequential path by construction.  Both shipped
+        backends override it with genuinely vectorized generation (``xla``:
+        vmapped threefry over stacked keys; ``pallas``: the batched-seed
+        kernel, B z-streams per VMEM tile) under the contract that the
+        result stays bitwise-equal to stacked singles — the extension point
+        batched-seed estimators (``zo.fzoo``; FZOO, Dang et al., 2025) build
+        on."""
         self.check_dist(dist)
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
@@ -147,12 +176,18 @@ def available_backends() -> list:
 
 
 def get_backend(spec: BackendSpec = None) -> PerturbBackend:
-    """Resolve a backend: ``None`` → the default ``xla``; a string → the
-    registry (``"xla"``, ``"pallas"``, ``"pallas-interpret"``); an instance →
-    itself.  Instances are cached so every consumer of ``"xla"`` shares one
-    object."""
+    """Resolve a backend: ``None`` → the session default (the
+    ``REPRO_BACKEND`` environment variable, falling back to ``"xla"``); a
+    string → the registry (``"xla"``, ``"pallas"``, ``"pallas-interpret"``);
+    an instance → itself.  Instances are cached so every consumer of
+    ``"xla"`` shares one object.
+
+    The env hook exists for the CI matrix: ``REPRO_BACKEND=pallas pytest``
+    runs every composition that didn't pin a backend through the fused
+    kernel (interpret mode off-TPU), so the non-default backend is exercised
+    on every push without a parallel test tree."""
     if spec is None:
-        spec = "xla"
+        spec = os.environ.get("REPRO_BACKEND") or "xla"
     if isinstance(spec, PerturbBackend):
         return spec
     if spec not in _FACTORIES:

@@ -28,34 +28,56 @@ is not kernel-fused yet.  Both raise ``NotImplementedError`` loudly (see
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.zo_fused.kernel import (BLOCK_COLS, BLOCK_ROWS,
-                                           zo_affine_2d)
+                                           zo_affine_2d, zo_affine_2d_batched)
 from repro.perturb.base import PerturbBackend
 from repro.perturb.stream import _LEAF_STRIDE, StreamRef
 from repro.tree_utils import PyTree, tree_map_with_index
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def zo_affine(x: jnp.ndarray, seed, a, b, interpret: bool = True) -> jnp.ndarray:
-    """y = a·x + b·z(seed) for an arbitrary-shape leaf.
-
-    The leaf is reshaped/padded to the kernel's 2-D blocked view; the padding
-    tail consumes counter indices but its z values are discarded (the counter
-    stream is position-stable, so the same (leaf, seed) always yields the
-    same z regardless of how the tree around it changes).
-    """
+def _blocked_view(x: jnp.ndarray) -> tuple:
+    """Pad/reshape an arbitrary-shape leaf to the kernel's 2-D blocked view.
+    The padding tail consumes counter indices but its z values are discarded
+    (the counter stream is position-stable, so the same (leaf, seed) always
+    yields the same z regardless of how the tree around it changes).  One
+    implementation for the single-seed and batched wrappers — the blocking
+    scheme is part of the bitwise batched == singles contract."""
     n = x.size
     width = BLOCK_ROWS * BLOCK_COLS
     n_pad = ((n + width - 1) // width) * width
-    flat = jnp.pad(x.reshape(-1), (0, n_pad - n))
-    y = zo_affine_2d(flat.reshape(-1, BLOCK_COLS),
-                     jnp.asarray(seed, jnp.int32), a, b, interpret=interpret)
+    return jnp.pad(x.reshape(-1), (0, n_pad - n)).reshape(-1, BLOCK_COLS), n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zo_affine(x: jnp.ndarray, seed, a, b, interpret: bool = True) -> jnp.ndarray:
+    """y = a·x + b·z(seed) for an arbitrary-shape leaf (blocked view, see
+    ``_blocked_view``)."""
+    flat2d, n = _blocked_view(x)
+    y = zo_affine_2d(flat2d, jnp.asarray(seed, jnp.int32), a, b,
+                     interpret=interpret)
     return y.reshape(-1)[:n].reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zo_affine_batched(x: jnp.ndarray, seeds: jnp.ndarray, a, b,
+                      interpret: bool = True) -> jnp.ndarray:
+    """y[j] = a·x + b·z(seeds[j]) for an arbitrary-shape leaf, one launch.
+
+    Same blocked/padded view as :func:`zo_affine`; the kernel's batch grid
+    axis generates one z-stream per seed against each resident x tile, so the
+    result's batch slices are bitwise-equal to B separate ``zo_affine`` calls
+    while x is read once per tile instead of B times.
+    """
+    flat2d, n = _blocked_view(x)
+    y = zo_affine_2d_batched(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
+                             interpret=interpret)
+    batch = y.shape[0]
+    return y.reshape(batch, -1)[:, :n].reshape((batch,) + x.shape)
 
 
 def leaf_seed(seed: int, leaf_idx: int) -> jnp.ndarray:
@@ -107,11 +129,29 @@ class PallasBackend(PerturbBackend):
 
     name = "pallas"
     dists = frozenset({"gaussian"})
+    # z2: transcendental-free polynomial Box–Muller (deterministic across
+    # jitted graphs).  z1 artifacts (jnp.log/cos bits) refuse to replay.
+    stream_version = 2
 
     def __init__(self, interpret: Optional[bool] = None):
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = bool(interpret)
+
+    def _pin_scalars(self, *vals):
+        """Pin the affine coefficients' rounding under interpret mode.
+
+        The scalar algebra feeding the kernel (a = 1 − η·λ, b = decay·ε − η·g)
+        contains mul-feeding-add/sub patterns that XLA may or may not contract
+        into FMAs depending on the surrounding graph — a 1-ulp difference in
+        ``a`` shifts every parameter by ~ulp(θ), breaking the bitwise
+        live-step == ledger-replay contract.  Barriering the operands forces
+        the separately-rounded form in every graph (see kernel.py's ``_pin``).
+        """
+        vals = tuple(jnp.asarray(v, jnp.float32) for v in vals)
+        if not self.interpret:
+            return vals
+        return jax.lax.optimization_barrier(vals)
 
     def _map(self, params: PyTree, ref: StreamRef, fn) -> PyTree:
         seed = ref.counter_seed()
@@ -134,8 +174,10 @@ class PallasBackend(PerturbBackend):
         # (one z regeneration, never in HBM) — one fewer pass than the xla
         # backend needs for the same fusion.
         self.check_dist(dist)
-        decay = 1.0 - weight_decay
-        b = decay * eps - lr_g
+        eps_, lr_g_, wd_ = self._pin_scalars(eps, lr_g, weight_decay)
+        decay = 1.0 - wd_
+        (de,) = self._pin_scalars(decay * eps_)
+        b = de - lr_g_
         return self._map(params_minus, ref,
                          lambda p, s, i: zo_affine(p, s, decay, b,
                                                    interpret=self.interpret))
@@ -144,12 +186,13 @@ class PallasBackend(PerturbBackend):
                     decay_term=0.0, dist: str = "gaussian",
                     d_tree: Optional[PyTree] = None) -> PyTree:
         self.check_dist(dist)
-        a = 1.0 - decay_term
+        coeff_, decay_ = self._pin_scalars(coeff, decay_term)
+        a = 1.0 - decay_
         d_leaves = (jax.tree_util.tree_leaves(d_tree)
                     if d_tree is not None else None)
 
         def one(p, s, i):
-            b = -coeff if d_leaves is None else -coeff * d_leaves[i]
+            b = -coeff_ if d_leaves is None else -coeff_ * d_leaves[i]
             return zo_affine(p, s, a, b, interpret=self.interpret)
 
         return self._map(params, ref, one)
@@ -162,3 +205,23 @@ class PallasBackend(PerturbBackend):
                           else jnp.float32)
         return zo_affine(zeros, ref.leaf_seed(leaf_index), 0.0, 1.0,
                          interpret=self.interpret)
+
+    def perturb_many(self, params: PyTree, refs: Sequence[StreamRef], scale,
+                     dist: str = "gaussian") -> PyTree:
+        """Genuinely batched θ + scale·z(ref_j): the batched kernel generates
+        B z-streams per VMEM tile of each leaf (one launch per leaf, x read
+        once per tile) — bitwise-equal to stacking per-ref ``perturb`` calls,
+        contract-tested in tests/test_perturb_backend.py."""
+        self.check_dist(dist)
+        if not refs:
+            raise ValueError("perturb_many needs at least one StreamRef")
+        seeds0 = jnp.stack([r.counter_seed() for r in refs])
+
+        def one(i, p):
+            if not jnp.issubdtype(p.dtype, jnp.floating):
+                return jnp.stack([p] * len(refs))
+            seeds = seeds0 + jnp.int32(_LEAF_STRIDE) * jnp.int32(i)
+            return zo_affine_batched(p, seeds, 1.0, scale,
+                                     interpret=self.interpret)
+
+        return tree_map_with_index(one, params)

@@ -88,6 +88,7 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
     # stamped into every artifact so replay under the wrong backend — which
     # would regenerate *different* z and silently diverge — fails loudly
     backend_name = getattr(optimizer, "backend_name", None)
+    batch_seeds = getattr(optimizer, "batch_seeds", None)
     if ledger is not None and backend_name is not None:
         if len(ledger) == 0:
             ledger.backend = backend_name
@@ -102,6 +103,15 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
         if restored is not None:
             check_replay_backend(restored["meta"].get("perturb_backend"),
                                  backend_name, "checkpoint")
+            ckpt_bs = restored["meta"].get("batch_seeds")
+            if ckpt_bs is not None and batch_seeds is not None \
+                    and int(ckpt_bs) != int(batch_seeds):
+                raise ValueError(
+                    f"checkpoint was written by an optimizer with "
+                    f"batch_seeds={ckpt_bs} but the active optimizer uses "
+                    f"batch_seeds={batch_seeds}; the seed fold schedule (and "
+                    "the ledger's per-step record shape) differ — resume "
+                    "with a matching fzoo(batch_seeds=...) composition")
             params = restored["params"]
             opt_state = restored["opt_state"] if restored["opt_state"] is not None else opt_state
             start_step = restored["step"]
@@ -115,6 +125,7 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
                     ledger.steps = saved.steps
                     ledger.grads = saved.grads
                     ledger.lrs = saved.lrs
+                    ledger.batch_seeds = saved.batch_seeds
             # realign the optimizer's step counter (seed source + lr index)
             # with wherever resume landed — the protocol's resume hook
             opt_state = optimizer.restore(opt_state, start_step)
@@ -134,13 +145,20 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
                     "ledger recording requires a ZO optimizer whose step "
                     "metrics expose 'projected_grad'/'lr'; "
                     f"{type(optimizer).__name__} does not")
-            ledger.append(step, float(metrics["projected_grad"]),
-                          float(metrics["lr"]))
+            # batched-seed estimators expose the per-seed (B,) vector —
+            # record it so replay can refold the B rank-1 updates
+            g_rec = metrics.get("projected_grads")
+            if g_rec is None:
+                g_rec = float(metrics["projected_grad"])
+            else:
+                g_rec = np.asarray(g_rec)
+            ledger.append(step, g_rec, float(metrics["lr"]))
             if ckpt is not None:
                 ckpt.save_ledger(ledger)
         if ckpt is not None:
             ckpt.maybe_save(step + 1, params, opt_state,
-                            meta={"perturb_backend": backend_name})
+                            meta={"perturb_backend": backend_name,
+                                  "batch_seeds": batch_seeds})
         if monitor is not None:
             monitor.beat(step)
         if step % log_every == 0 or step == total_steps - 1:
@@ -153,6 +171,7 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
 
     if ckpt is not None:
         ckpt.maybe_save(total_steps, params, opt_state,
-                        meta={"perturb_backend": backend_name}, force=True)
+                        meta={"perturb_backend": backend_name,
+                              "batch_seeds": batch_seeds}, force=True)
     return TrainResult(params, opt_state, losses, total_steps - start_step,
                        start_step)

@@ -50,6 +50,9 @@ Quick start
 >>> from repro import zo
 >>> opt = zo.mezo(lr=1e-6, eps=1e-3)                 # Algorithm 1
 >>> opt = zo.mezo(lr=1e-6, eps=1e-3, backend="pallas")   # z in VMEM, not HBM
+>>> opt = zo.fzoo(lr=1e-6, eps=1e-3, batch_seeds=8)  # FZOO: B batched
+...     # one-sided seed streams per step, one vmapped forward, step size
+...     # normalized by the std of the B loss differences
 >>> # ...or compose by hand:
 >>> opt = zo.ZOOptimizer(
 ...     zo.estimators.spsa(eps=1e-3),
@@ -61,8 +64,9 @@ Quick start
 >>> params, state, metrics = step(params, state, batch)
 >>> state = opt.restore(state, 5_000)                # resume bookkeeping
 
-New estimators (MeZO-SVRG-style variance reduction, FZOO's batched seeds) and
-new update rules plug in as components — one ``ZOEstimator`` or one
+New estimators (MeZO-SVRG-style variance reduction; FZOO's batched seeds
+landed exactly this way: ``estimators.fzoo`` + ``transforms.scale_by_fzoo_std``)
+and new update rules plug in as components — one ``ZOEstimator`` or one
 ``ZOTransform``, not a new monolithic optimizer class.  Every composition
 takes a ``backend=`` kwarg selecting the z-generation strategy
 (:mod:`repro.perturb`): ``"xla"`` threefry (default) or ``"pallas"`` — the
@@ -74,9 +78,9 @@ from repro.zo import estimators, transforms
 from repro.zo.base import (Optimizer, TransformCtx, Updates, ZOEstimate,
                            ZOEstimator, ZOLossFn, ZOOptimizer, ZOState,
                            ZOTransform, chain, identity)
-from repro.zo.presets import (as_zo_optimizer, from_config, mezo, mezo_adam,
-                              mezo_rescaled)
-from repro.zo.updates import apply_rank1
+from repro.zo.presets import (as_zo_optimizer, from_config, fzoo, mezo,
+                              mezo_adam, mezo_rescaled)
+from repro.zo.updates import apply_rank1, apply_rank1_batch
 
 __all__ = [
     # protocol
@@ -85,7 +89,8 @@ __all__ = [
     # composition
     "chain", "identity", "estimators", "transforms",
     # primitives
-    "apply_rank1",
+    "apply_rank1", "apply_rank1_batch",
     # presets / interop
-    "mezo", "mezo_adam", "mezo_rescaled", "from_config", "as_zo_optimizer",
+    "mezo", "fzoo", "mezo_adam", "mezo_rescaled", "from_config",
+    "as_zo_optimizer",
 ]

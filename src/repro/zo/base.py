@@ -64,7 +64,14 @@ class ZOEstimator(NamedTuple):
     ``backend`` is the resolved ``repro.perturb.PerturbBackend`` the
     estimator's perturbation chain runs through (``None`` → the default
     ``xla``); the facade exposes it for metadata recording and routes
-    ``replay_update`` through the same backend."""
+    ``replay_update`` through the same backend.
+
+    ``batch_seeds > 1`` declares a batched-seed estimator (FZOO): one
+    ``estimate`` call evaluates B perturbations and its ``projected_grad`` is
+    a (B,)-vector of per-seed scalars rather than a scalar.  The transform
+    chain applies elementwise, the facade exposes the vector as the
+    ``projected_grads`` metric for per-seed ledger recording, and
+    ``replay_update`` replays the B folded rank-1 updates."""
     init: Callable[[Optional[PyTree], jax.Array], Any]
     estimate: Callable[..., ZOEstimate]
     n_seeds: int = 1
@@ -73,6 +80,7 @@ class ZOEstimator(NamedTuple):
     name: str = "spsa"
     replayable: bool = True
     backend: Optional[PerturbBackend] = None
+    batch_seeds: int = 1
 
 
 # --------------------------------------------------------------------------- #
@@ -204,6 +212,13 @@ class ZOOptimizer:
                 "stateful applier transforms (scale_by_zo_adam / trace) keep "
                 "one ledger entry per step and cannot run under interleaved "
                 "n-SPSA; use n_seeds=1")
+        if getattr(estimator, "batch_seeds", 1) > 1 and \
+                self.transform.info.get("applier"):
+            raise ValueError(
+                "applier transforms (scale_by_zo_adam / trace) reconstruct "
+                "their update from one scalar per step and cannot consume a "
+                "batched-seed estimator's per-seed g vector; use "
+                "batch_seeds=1 or a scalar transform chain")
         if self.transform.info.get("applier") and \
                 self.transform.info.get("scalar_decay"):
             raise ValueError(
@@ -223,9 +238,17 @@ class ZOOptimizer:
 
     @property
     def backend_name(self) -> str:
-        """Canonical backend name, recorded in checkpoint/ledger metadata so
-        replay under a different backend fails loudly."""
-        return self.backend.name
+        """Identity recorded in checkpoint/ledger metadata — the backend's
+        ``stream_id`` (name plus z-generator version suffix) — so replay
+        under a different backend OR an artifact from a since-revised
+        z generator fails loudly instead of silently diverging."""
+        return self.backend.stream_id
+
+    @property
+    def batch_seeds(self) -> int:
+        """Seed streams evaluated per step by a batched estimator (FZOO);
+        1 for everything else.  Recorded in checkpoint/ledger metadata."""
+        return int(getattr(self.estimator, "batch_seeds", 1))
 
     @property
     def weight_decay(self) -> float:
@@ -269,6 +292,14 @@ class ZOOptimizer:
                 f"{self.name}: the {self.estimator.name!r} estimator updates "
                 "along D·z (Definition 6), which a (seed, g, lr) ledger entry "
                 "cannot reproduce; resume from a full state checkpoint")
+        if self.batch_seeds > 1:
+            # batched-seed (FZOO) entry: g is the (B,) per-seed vector and the
+            # step was B folded rank-1 applications — replay them identically
+            from repro.zo.updates import apply_rank1_batch
+            return apply_rank1_batch(params, skey, lr * jnp.asarray(g),
+                                     lr * self.weight_decay,
+                                     dist=self.estimator.dist,
+                                     backend=self.backend)
         return self.backend.apply_rank1(params, StreamRef(skey), lr * g,
                                         lr * self.weight_decay,
                                         self.estimator.dist)
@@ -313,7 +344,12 @@ class ZOOptimizer:
                 lr_metric = jnp.float32(1.0)
             new_state = ZOState(state.step + 1, state.base_key,
                                 est_state, tf_state, g_mean)
-            return p, new_state, {"loss": loss, "projected_grad": g_mean,
-                                  "lr": lr_metric, **aux}
+            metrics = {"loss": loss, "projected_grad": g_mean,
+                       "lr": lr_metric, **aux}
+            if n == 1 and jnp.ndim(gs[0]) > 0:
+                # batched-seed estimator: expose the per-seed scalars so the
+                # ledger records what replay_update needs (one g per stream)
+                metrics["projected_grads"] = gs[0]
+            return p, new_state, metrics
 
         return step

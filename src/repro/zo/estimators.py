@@ -22,6 +22,14 @@ hierarchy.  Unsupported (backend, dist) pairs fail loudly at factory time.
                       one positive scalar per leaf, computed at ``init`` from
                       parameter norms or Proposition-1 ZO gradient-norm
                       probes.
+* ``fzoo``          — FZOO-style batched seeds (Dang et al., 2025): B
+                      one-sided perturbations per step evaluated by ONE
+                      batched forward (vmap over the stacked-params view from
+                      ``PerturbBackend.perturb_many``), per-seed projected
+                      gradients g_j = (ℓ_j − ℓ₀)/ε applied as B folded rank-1
+                      updates at η/B each; compose with
+                      ``transforms.scale_by_fzoo_std`` for the paper's
+                      loss-diff-std step-size normalization.
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ from repro.perturb.base import BackendSpec
 from repro.perturb.xla import Distribution
 from repro.tree_utils import PyTree, tree_map_with_index
 from repro.zo.base import ZOEstimate, ZOEstimator
+from repro.zo.updates import apply_rank1_batch
 
 
 # --------------------------------------------------------------------------- #
@@ -99,6 +108,75 @@ def n_spsa(n: int, eps: float = 1e-3, dist: Distribution = "gaussian",
     for batch slicing lives in ``repro.distributed.collectives``."""
     base = spsa(eps=eps, dist=dist, sequential=sequential, backend=backend)
     return base._replace(n_seeds=int(n), name="n_spsa")
+
+
+# --------------------------------------------------------------------------- #
+# FZOO batched seeds (Dang et al., 2025)
+# --------------------------------------------------------------------------- #
+def fzoo(batch_seeds: int = 8, eps: float = 1e-3, dist: Distribution = "gaussian",
+         backend: BackendSpec = None) -> ZOEstimator:
+    """Batched-seed one-sided estimator: per step, B seed streams
+    z_1..z_B (folded from the step key exactly as ``replay_update`` refolds
+    them), ONE batched forward over the stacked θ+εz_j views produced by
+    ``perturb_many``, plus the center forward ℓ₀ — B+1 losses for 2 forward
+    dispatches instead of 2B.
+
+    ``estimate`` returns the (B,) vector of per-seed projected gradients
+    g_j = (ℓ_j − ℓ₀)/ε; the scalar transform chain applies elementwise and
+    ``apply_update`` walks the B rank-1 updates (η/B per stream, decoupled
+    decay once) through the backend primitive — arithmetic identical to
+    ``updates.apply_rank1_batch``, which ledger replay uses.  FZOO's
+    Adam-scale convergence comes from normalizing the step by the std of the
+    B loss differences — that is ``transforms.scale_by_fzoo_std``, kept
+    separate so the estimator stays a pure gradient estimator."""
+    be = get_backend(backend)
+    be.check_dist(dist)
+    n_batch = int(batch_seeds)
+    if n_batch < 1:
+        raise ValueError(f"batch_seeds must be >= 1, got {batch_seeds}")
+
+    def init(params, key):
+        del params, key
+        return ()
+
+    def estimate(loss_fn, params, batch, key, est_state):
+        # B == 1 degenerates to one-sided SPSA on the unfolded step key (the
+        # property-test contract, and what scalar-ledger replay refolds);
+        # B > 1 folds one stream per seed exactly as apply_rank1_batch does.
+        if n_batch == 1:
+            refs = [StreamRef(key)]
+        else:
+            refs = [StreamRef(jax.random.fold_in(key, j))
+                    for j in range(n_batch)]
+        stacked = be.perturb_many(params, refs, eps, dist)
+        losses = jax.vmap(lambda p: loss_fn(p, batch))(stacked)
+        l0 = loss_fn(params, batch)
+        diffs = losses - l0
+        g_vec = diffs / eps                       # (B,) per-seed projected g
+
+        def apply_update(coeff, decay_term):
+            # coeff is the η-scaled per-seed coefficient (vector for B > 1)
+            # from the transform chain; the batched application delegates to
+            # updates.apply_rank1_batch — the SAME code path ledger replay
+            # uses, so a (seed, g, lr) entry reproduces this step.
+            if n_batch == 1:
+                return be.apply_rank1(params, refs[0], coeff, decay_term,
+                                      dist)
+            return apply_rank1_batch(params, key, coeff, decay_term, dist,
+                                     backend=be)
+
+        def restore():
+            return params
+
+        return ZOEstimate(projected_grad=g_vec[0] if n_batch == 1 else g_vec,
+                          loss=l0,
+                          apply_update=apply_update, restore=restore,
+                          est_state=est_state,
+                          aux={"fzoo_loss_std": jnp.std(diffs)})
+
+    return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
+                       dist=dist, name="fzoo", replayable=True, backend=be,
+                       batch_seeds=n_batch)
 
 
 # --------------------------------------------------------------------------- #

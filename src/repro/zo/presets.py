@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Optional
 
+from repro.perturb.base import BackendSpec
 from repro.zo import estimators, transforms
 from repro.zo.base import ZOOptimizer, chain
 
@@ -37,7 +38,7 @@ def mezo(lr: float = 1e-6, eps: float = 1e-3, n: int = 1,
          total_steps: int = 0, warmup_steps: int = 0,
          sequential_perturb: bool = True,
          clip_projected_grad: float = 0.0,
-         backend: str = "xla") -> ZOOptimizer:
+         backend: BackendSpec = None) -> ZOOptimizer:
     """ZO-SGD with in-place seed-replay perturbations (paper Algorithm 1;
     Algorithm 2 when ``n > 1``).  Composition::
 
@@ -64,6 +65,39 @@ def mezo(lr: float = 1e-6, eps: float = 1e-3, n: int = 1,
     return ZOOptimizer(est, tf, name="mezo")
 
 
+def fzoo(lr: float = 1e-5, eps: float = 1e-3, batch_seeds: int = 8,
+         dist: str = "gaussian", weight_decay: float = 0.0,
+         lr_schedule: str = "constant", total_steps: int = 0,
+         warmup_steps: int = 0, clip_projected_grad: float = 0.0,
+         std_floor: float = 1e-8,
+         backend: BackendSpec = None) -> ZOOptimizer:
+    """FZOO (Dang et al., 2025): B batched one-sided seed perturbations per
+    step — one vmapped forward over the ``perturb_many`` stacked-params view —
+    with the step size normalized by the std of the B loss differences.
+    Composition::
+
+        ZOOptimizer(fzoo(batch_seeds, eps),
+                    chain(scale_by_fzoo_std(std_floor), clip?,
+                          scale_by_schedule(lr), add_weight_decay))
+
+    The per-seed g vector rides the scalar transform chain elementwise and is
+    recorded per step in the trajectory ledger (``MZOL3``), so crash-resume
+    and trajectory replay reproduce the B folded rank-1 updates exactly.
+    ``backend`` picks the z strategy: ``"xla"`` vectorizes threefry over the
+    stacked keys; ``"pallas"`` runs the batched-seed kernel (B z-streams per
+    VMEM tile).
+    """
+    est = estimators.fzoo(batch_seeds=batch_seeds, eps=eps, dist=dist,
+                          backend=backend)
+    tfs = [transforms.scale_by_fzoo_std(std_floor)]
+    if clip_projected_grad > 0:
+        tfs.append(transforms.clip_projected_grad(clip_projected_grad))
+    tfs.append(transforms.scale_by_schedule(lr, lr_schedule, total_steps,
+                                            warmup_steps))
+    tfs.append(transforms.add_weight_decay(weight_decay))
+    return ZOOptimizer(est, chain(*tfs), name="fzoo")
+
+
 def mezo_adam(lr: float = 1e-4, eps: float = 1e-3, beta1: float = 0.9,
               beta2: float = 0.999, adam_eps: float = 1e-8,
               materialized: bool = False, window: int = 32,
@@ -71,7 +105,7 @@ def mezo_adam(lr: float = 1e-4, eps: float = 1e-3, beta1: float = 0.9,
               weight_decay: float = 0.0, lr_schedule: str = "constant",
               total_steps: int = 0, warmup_steps: int = 0,
               clip_projected_grad: float = 0.0,
-              backend: str = "xla") -> ZOOptimizer:
+              backend: BackendSpec = None) -> ZOOptimizer:
     """MeZO-Adam / MeZO-momentum (paper §2.2 + App. B.2): the SPSA estimator
     with the Adam preconditioner reconstructed from the scalar g-history
     (ring buffer of ``window`` scalars) or materialized as the m/v oracle."""
@@ -93,7 +127,7 @@ def mezo_rescaled(lr: float = 1e-6, eps: float = 1e-3,
                   weight_decay: float = 0.0, lr_schedule: str = "constant",
                   total_steps: int = 0, warmup_steps: int = 0,
                   clip_projected_grad: float = 0.0,
-                  backend: str = "xla") -> ZOOptimizer:
+                  backend: BackendSpec = None) -> ZOOptimizer:
     """Variance/expectation-modified SPSA (paper App. B.3/B.4, Definitions
     6/7): perturb by ε·(d⁻¹⊙z), update along (D or I)·z.  The paper found no
     consistent win over plain MeZO at equal forward budget — kept because it
@@ -120,7 +154,7 @@ def from_config(config) -> ZOOptimizer:
                   total_steps=config.total_steps,
                   warmup_steps=config.warmup_steps,
                   clip_projected_grad=config.clip_projected_grad,
-                  backend=getattr(config, "backend", "xla"))
+                  backend=getattr(config, "backend", None))
     if getattr(config, "d_source", None) is not None:
         return mezo_rescaled(d_source=config.d_source,
                              modify_expectation=config.modify_expectation,

@@ -87,6 +87,29 @@ def add_weight_decay(weight_decay: float) -> ZOTransform:
                         "scalar_decay": True})
 
 
+def scale_by_fzoo_std(std_floor: float = 1e-8) -> ZOTransform:
+    """FZOO's adaptive step size (Dang et al., 2025): divide the per-seed
+    projected gradients by the standard deviation of the step's B one-sided
+    loss differences d_j = ℓ_j − ℓ₀ = ε·g_j.
+
+    Operates on the raw (B,) g vector of a batched-seed estimator, so place
+    it FIRST in the chain (before ``clip_projected_grad`` /
+    ``scale_by_schedule``).  With B == 1 the std is identically zero and the
+    transform is a no-op (the update reduces to one-sided SPSA — the
+    property-test contract); otherwise the divisor is floored at
+    ``std_floor`` so a flat loss landscape cannot blow up the step."""
+    if std_floor <= 0:
+        raise ValueError("std_floor must be positive")
+
+    def update(u: Updates, state, ctx: TransformCtx):
+        if jnp.ndim(u.g) == 0 or u.g.shape[0] < 2:
+            return u, state                     # B == 1: σ ≡ 0, no-op
+        sigma = jnp.std(u.g * ctx.eps)          # std of the loss diffs
+        return u._replace(g=u.g / jnp.maximum(sigma, std_floor)), state
+
+    return ZOTransform(lambda params: (), update, {"fzoo_std_floor": std_floor})
+
+
 # --------------------------------------------------------------------------- #
 # ZO-Adam / momentum (paper §2.2 + Appendix B.2)
 # --------------------------------------------------------------------------- #

@@ -23,6 +23,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.perturb import StreamRef, get_backend
 from repro.perturb.base import BackendSpec
@@ -45,3 +46,31 @@ def apply_rank1(params: PyTree, key: jax.Array, coeff, decay_term=0.0,
     """
     return get_backend(backend).apply_rank1(params, StreamRef(key), coeff,
                                             decay_term, dist, d_tree=d_tree)
+
+
+def apply_rank1_batch(params: PyTree, skey: jax.Array, coeff_vec,
+                      decay_term=0.0, dist: Distribution = "gaussian",
+                      backend: BackendSpec = None) -> PyTree:
+    """The batched-seed (FZOO) step as B sequential rank-1 applications:
+
+        for j in 0..B-1:  θ ← (1 − [j==0]·decay)·θ − (coeff_j / B)·z(fold(skey, j))
+
+    ``coeff_vec`` holds one η-scaled coefficient per seed stream (η·g_j for a
+    replayed ledger entry; the transform chain's output for a live step);
+    ``decay_term`` is the decoupled η·λ, applied once on the first stream.
+    This is the ONE code path shared by the live fzoo estimator's
+    ``apply_update`` and ``ZOOptimizer.replay_update`` — keeping the fold /
+    divide / decay schedule in a single place is what makes a ledger replay
+    perform arithmetic identical to the recorded step."""
+    be = get_backend(backend)
+    coeff_vec = jnp.asarray(coeff_vec)
+    if coeff_vec.ndim != 1:
+        raise ValueError(f"apply_rank1_batch needs a (B,) coefficient "
+                         f"vector; got shape {coeff_vec.shape}")
+    n = coeff_vec.shape[0]
+    p = params
+    for j in range(n):
+        ref = StreamRef(jax.random.fold_in(skey, j))
+        p = be.apply_rank1(p, ref, coeff_vec[j] / n,
+                           decay_term if j == 0 else 0.0, dist)
+    return p

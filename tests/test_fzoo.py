@@ -1,0 +1,341 @@
+"""FZOO batched-seed estimator (zo.fzoo) + batched ``perturb_many`` kernels.
+
+Contracts:
+  * batched z generation is bitwise-equal to stacked singles for
+    B ∈ {1, 3, 8} across dtypes, on both backends (the perturb_many
+    override contract; jitted computations — see kernel._pin for why eager
+    is excluded);
+  * fzoo with B == 1 reduces exactly to one-sided SPSA modulo the std
+    normalizer (property-tested with hypothesis);
+  * end-to-end on both backends: it descends, B rides checkpoint/ledger
+    metadata (MZOL3), crash-resume recovers through ledger-tail replay, and
+    scalar-ledger replay is deterministic (bitwise) and reproduces the live
+    run to fp-accumulation tolerance;
+  * guard rails: applier transforms refuse the per-seed g vector, mixed-B
+    artifacts refuse to resume, mixed-backend replay refuses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import zo
+from repro.core import TrajectoryLedger
+from repro.core.perturb import step_key
+from repro.core.trajectory import replay
+from repro.perturb import StreamRef, get_backend
+from repro.tree_utils import tree_max_abs_diff
+
+BACKENDS = ["xla", "pallas"]
+
+
+def target_tree():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return {"a": jax.random.normal(k1, (12,)),
+            "b": jax.random.normal(k2, (3, 5))}
+
+
+TARGET = target_tree()
+
+
+def loss_fn(p, batch):
+    return 0.5 * sum(jnp.sum((x - y) ** 2) for x, y in
+                     zip(jax.tree_util.tree_leaves(p),
+                         jax.tree_util.tree_leaves(TARGET)))
+
+
+def start_params():
+    return jax.tree_util.tree_map(jnp.ones_like, TARGET)
+
+
+# --------------------------------------------------------------------------- #
+# perturb_many: batched == stacked singles, bitwise
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("B", [1, 3, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16],
+                         ids=["f32", "bf16", "f16"])
+def test_perturb_many_bitwise_vs_stacked_singles(backend, B, dtype):
+    be = get_backend(backend)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(1),
+                                     (70, 33)).astype(dtype),
+              "b": jnp.ones((31,), dtype)}
+    refs = [StreamRef.derive(jax.random.PRNGKey(0), 4, j) for j in range(B)]
+    many = be.perturb_many(params, refs, 1e-3)
+    assert many["w"].shape == (B, 70, 33)
+    for j, r in enumerate(refs):
+        single = be.perturb(params, r, 1e-3)
+        for a, b in zip(jax.tree_util.tree_leaves(
+                jax.tree_util.tree_map(lambda x: x[j], many)),
+                jax.tree_util.tree_leaves(single)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_perturb_many_property_bitwise_hypothesis():
+    """Property form of the contract: random seeds/steps/scales, both
+    backends, batched == stacked singles bitwise."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16 - 1), step=st.integers(0, 1000),
+           scale=st.sampled_from([1e-3, 1e-2, -2e-3]),
+           B=st.sampled_from([1, 3, 8]),
+           backend=st.sampled_from(BACKENDS))
+    def check(seed, step, scale, B, backend):
+        be = get_backend(backend)
+        params = {"w": jax.random.normal(jax.random.PRNGKey(2), (40, 9))}
+        refs = [StreamRef.derive(jax.random.PRNGKey(seed), step, j)
+                for j in range(B)]
+        many = be.perturb_many(params, refs, scale)
+        for j, r in enumerate(refs):
+            single = be.perturb(params, r, scale)
+            np.testing.assert_array_equal(np.asarray(many["w"][j]),
+                                          np.asarray(single["w"]))
+
+    check()
+
+
+def test_batched_kernel_matches_ref_oracle_bitwise():
+    from repro.kernels.zo_fused import ref as zo_ref
+    from repro.perturb import pallas as pm
+    x = jax.random.normal(jax.random.PRNGKey(0), (33, 65))
+    seeds = [5, 9, 123]
+    got = pm.zo_affine_batched(x, jnp.asarray(seeds, jnp.int32), 0.9, 0.05,
+                               interpret=True)
+    want = zo_ref.zo_affine_batched_ref(x, seeds, 0.9, 0.05)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------- #
+# B == 1 reduces to one-sided SPSA (modulo the std normalizer)
+# --------------------------------------------------------------------------- #
+def test_fzoo_b1_reduces_to_one_sided_spsa_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16 - 1),
+           eps=st.sampled_from([1e-3, 1e-2]),
+           backend=st.sampled_from(BACKENDS))
+    def check(seed, eps, backend):
+        lr = 1e-4
+        be = get_backend(backend)
+        params = start_params()
+        opt = zo.fzoo(lr=lr, eps=eps, batch_seeds=1, backend=backend)
+        state = opt.init(params, seed=seed)
+        p1, _, m = jax.jit(opt.step_fn(loss_fn))(params, state, None)
+
+        # one-sided SPSA by hand on the same (unfolded) step key
+        skey = step_key(jax.random.PRNGKey(seed), jnp.int32(0))
+        ref = StreamRef(skey)
+
+        @jax.jit
+        def manual(params):
+            l0 = loss_fn(params, None)
+            l1 = loss_fn(be.perturb(params, ref, eps), None)
+            g = (l1 - l0) / eps
+            return be.apply_rank1(params, ref, jnp.float32(lr) * g, 0.0), g
+
+        p_manual, g_manual = manual(params)
+        assert abs(float(m["projected_grad"]) - float(g_manual)) <= \
+            1e-6 * max(1.0, abs(float(g_manual)))
+        assert tree_max_abs_diff(p1, p_manual) < 1e-6
+
+    check()
+
+
+def test_fzoo_std_transform_is_noop_at_b1():
+    t = zo.transforms.scale_by_fzoo_std()
+    u = zo.Updates(g=jnp.float32(3.5))
+    ctx = None  # B == 1 path never touches the ctx
+    u2, _ = t.update(u, (), ctx)
+    assert float(u2.g) == 3.5
+
+
+def test_fzoo_std_transform_normalizes_vector():
+    t = zo.transforms.scale_by_fzoo_std()
+    g = jnp.asarray([1.0, 3.0, 5.0, 7.0], jnp.float32)
+    ctx = zo.TransformCtx(step=jnp.int32(0), base_key=jax.random.PRNGKey(0),
+                          key=jax.random.PRNGKey(0), seed_index=0, n_seeds=1,
+                          eps=1e-3, dist="gaussian", restore=lambda: None)
+    u2, _ = t.update(zo.Updates(g=g), (), ctx)
+    sigma = float(jnp.std(g * 1e-3))
+    np.testing.assert_allclose(np.asarray(u2.g), np.asarray(g) / sigma,
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end per backend: descent, metadata, crash-resume, replay
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fzoo_descends(backend):
+    opt = zo.fzoo(lr=2e-4, eps=1e-3, batch_seeds=8, backend=backend)
+    assert opt.batch_seeds == 8
+    assert opt.backend_name.partition("+z")[0] == backend
+    params = start_params()
+    state = opt.init(params, seed=0)
+    step = jax.jit(opt.step_fn(loss_fn))
+    l0 = float(loss_fn(params, None))
+    for _ in range(80):
+        params, state, m = step(params, state, None)
+    assert m["projected_grads"].shape == (8,)
+    assert np.isfinite(float(m["fzoo_loss_std"]))
+    assert float(loss_fn(params, None)) < 0.5 * l0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fzoo_crash_resume_and_replay(tmp_path, backend):
+    """Full ckpt + MZOL3 ledger-tail recovery: the recovered parameters match
+    the uninterrupted run at the crash step to ulp scale, the completed
+    resumed run tracks the reference (fzoo's 1/σ step normalization amplifies
+    ulp-level fp differences through continued live steps, hence the looser
+    final tolerance), and replay itself is deterministic bitwise."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.pipeline import DataSpec, Pipeline
+    from repro.train.loop import FailureInjector, train
+
+    pipe = Pipeline(DataSpec("lm", batch=2, seq=4, vocab=11, seed=1))
+    lm_loss = lambda p, b: loss_fn(p, None)
+    B, T = 8, 10
+    make_opt = lambda: zo.fzoo(lr=2e-4, eps=1e-3, batch_seeds=B,
+                               weight_decay=0.01, backend=backend)
+    params = start_params()
+    ref = train(lm_loss, params, make_opt(), pipe, total_steps=T,
+                donate=False)
+    ref7 = train(lm_loss, params, make_opt(), pipe, total_steps=7,
+                 donate=False)
+
+    ck = CheckpointManager(str(tmp_path / "run"), interval=4)
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train(lm_loss, params, make_opt(), pipe, total_steps=T, ckpt=ck,
+              ledger=led, injector=FailureInjector(fail_at_step=7),
+              donate=False)
+    saved = ck.load_ledger()
+    assert saved.backend == make_opt().backend_name
+    assert saved.backend.partition("+z")[0] == backend
+    assert saved.batch_seeds == B
+    meta = ck.restore_latest(params)["meta"]
+    assert meta["perturb_backend"] == make_opt().backend_name
+    assert meta["batch_seeds"] == B
+
+    # recovery point: ckpt@4 + ledger tail -> params at step 7
+    rec, rec_step = ck.recover_via_ledger(
+        ck.restore_latest(params)["params"], 4, make_opt())
+    assert rec_step == 7
+    assert tree_max_abs_diff(rec, ref7.params) < 1e-6
+
+    led2 = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    res = train(lm_loss, params, make_opt(), pipe, total_steps=T, ckpt=ck,
+                ledger=led2, donate=False)
+    assert res.resumed_from == 7
+    assert int(res.opt_state.step) == T
+    assert tree_max_abs_diff(res.params, ref.params) < 2e-3
+
+    # scalar-ledger replay from scratch: deterministic bitwise, tracks live
+    led3 = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    res2 = train(lm_loss, params, make_opt(), pipe, total_steps=T,
+                 ledger=led3, donate=False)
+    r1 = replay(params, led3, make_opt())
+    r2 = replay(params, led3, make_opt())
+    assert tree_max_abs_diff(r1, r2) == 0.0
+    assert tree_max_abs_diff(res2.params, r1) < 1e-6
+
+
+def test_fzoo_ledger_mzol3_roundtrip():
+    led = TrajectoryLedger(base_seed=7, grad_dtype="float32",
+                           backend="pallas")
+    led.append(0, np.asarray([0.5, -1.5, 2.0], np.float32), 1e-3)
+    led.append(1, np.asarray([0.25, 0.75, -0.5], np.float32), 1e-3)
+    raw = led.to_bytes()
+    assert raw[:6] == b"MZOL3\x00"
+    led2 = TrajectoryLedger.from_bytes(raw)
+    assert led2.batch_seeds == 3 and led2.backend == "pallas"
+    assert led2.steps == [0, 1]
+    assert led2.grads == led.grads
+    # scalar ledgers keep serializing as MZOL2 (old readers unaffected)
+    led_s = TrajectoryLedger(base_seed=7, grad_dtype="float32")
+    led_s.append(0, 0.5, 1e-3)
+    assert led_s.to_bytes()[:6] == b"MZOL2\x00"
+
+
+def test_fzoo_ledger_refuses_mixed_batch_seeds():
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    led.append(0, np.asarray([0.5, 1.0], np.float32), 1e-3)
+    with pytest.raises(ValueError, match="batch_seeds"):
+        led.append(1, 0.5, 1e-3)
+
+
+def test_fzoo_checkpoint_refuses_batch_seeds_mismatch(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.pipeline import DataSpec, Pipeline
+    from repro.train.loop import train
+
+    pipe = Pipeline(DataSpec("lm", batch=2, seq=4, vocab=11, seed=1))
+    lm_loss = lambda p, b: loss_fn(p, None)
+    ck = CheckpointManager(str(tmp_path / "run"), interval=2)
+    train(lm_loss, start_params(), zo.fzoo(lr=2e-4, eps=1e-3, batch_seeds=4),
+          pipe, total_steps=4, ckpt=ck, donate=False)
+    with pytest.raises(ValueError, match="batch_seeds"):
+        train(lm_loss, start_params(),
+              zo.fzoo(lr=2e-4, eps=1e-3, batch_seeds=8),
+              pipe, total_steps=6, ckpt=ck, donate=False)
+
+
+def test_replay_refuses_batch_seeds_mismatch():
+    """A batched MZOL3 ledger replayed through a B=1 optimizer (or vice
+    versa) must refuse: the per-step g shape and the seed fold schedule both
+    differ, so the scalar path would misapply the updates."""
+    opt_scalar = zo.mezo(lr=1e-3, eps=1e-3)
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32",
+                           backend=opt_scalar.backend_name)
+    led.append(0, np.asarray([0.5, 1.0], np.float32), 1e-3)
+    with pytest.raises(ValueError, match="batch_seeds"):
+        replay(start_params(), led, opt_scalar)
+    opt_batched = zo.fzoo(lr=1e-4, eps=1e-3, batch_seeds=4)
+    led_s = TrajectoryLedger(base_seed=0, grad_dtype="float32",
+                             backend=opt_batched.backend_name)
+    led_s.append(0, 0.5, 1e-3)
+    with pytest.raises(ValueError, match="batch_seeds"):
+        replay(start_params(), led_s, opt_batched)
+
+
+def test_fzoo_replay_refuses_backend_mismatch():
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32",
+                           backend="pallas")
+    led.append(0, np.asarray([0.5, 1.0], np.float32), 1e-3)
+    from repro.perturb import BackendMismatchError
+    with pytest.raises(BackendMismatchError, match="pallas"):
+        replay(start_params(), led,
+               zo.fzoo(lr=1e-4, eps=1e-3, batch_seeds=2, backend="xla"))
+
+
+def test_fzoo_rejects_applier_transforms():
+    with pytest.raises(ValueError, match="batch"):
+        zo.ZOOptimizer(zo.estimators.fzoo(batch_seeds=4),
+                       zo.chain(zo.transforms.scale_by_schedule(1e-3),
+                                zo.transforms.scale_by_zo_adam()))
+
+
+def test_fzoo_pallas_rejects_unsupported_dist():
+    with pytest.raises(NotImplementedError, match="pallas"):
+        zo.fzoo(batch_seeds=4, dist="rademacher", backend="pallas")
+
+
+def test_fzoo_forward_count_is_batched():
+    """The whole point: B seed evaluations cost ONE vmapped forward (plus the
+    center) — count loss_fn traces, not calls."""
+    calls = {"n": 0}
+
+    def counting_loss(p, batch):
+        calls["n"] += 1
+        return loss_fn(p, batch)
+
+    opt = zo.fzoo(lr=1e-4, eps=1e-3, batch_seeds=8)
+    params = start_params()
+    state = opt.init(params, seed=0)
+    jax.jit(opt.step_fn(counting_loss))(params, state, None)
+    # tracing evaluates the loss twice: once under vmap (the B-batched
+    # forward), once for the center — sequential would trace it per seed
+    assert calls["n"] == 2

@@ -119,10 +119,14 @@ def test_pallas_apply_rank1_is_the_expected_rank1_step():
 # perturb_many (the batched multi-seed entry point)
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_perturb_many_matches_stacked_singles(backend):
+@pytest.mark.parametrize("B", [1, 3, 8])
+def test_perturb_many_matches_stacked_singles(backend, B):
+    """Both backends override the stacked-singles default with genuinely
+    batched generation (vmapped threefry / the batched-seed kernel) — the
+    override must stay bitwise-equal to the sequential path."""
     be = get_backend(backend)
     params = tree_a()
-    refs = [StreamRef.derive(jax.random.PRNGKey(0), 4, j) for j in range(3)]
+    refs = [StreamRef.derive(jax.random.PRNGKey(0), 4, j) for j in range(B)]
     many = be.perturb_many(params, refs, 1e-3)
     for j, r in enumerate(refs):
         single = be.perturb(params, r, 1e-3)
@@ -130,7 +134,21 @@ def test_perturb_many_matches_stacked_singles(backend):
                 jax.tree_util.tree_map(lambda x: x[j], many)),
                 jax.tree_util.tree_leaves(single)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    assert many["w"].shape == (3, 70, 33)
+    assert many["w"].shape == (B, 70, 33)
+
+
+def test_pallas_batched_kernel_generates_b_streams_per_tile():
+    """The batched kernel's per-stream slices equal single-seed kernel calls
+    bitwise (one launch, B z-streams against each resident x tile)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (70, 33))
+    seeds = jnp.asarray([5, 9, 123], jnp.int32)
+    batched = pallas_mod.zo_affine_batched(x, seeds, 0.9, 0.05,
+                                           interpret=True)
+    for j in range(3):
+        single = pallas_mod.zo_affine(x, int(seeds[j]), 0.9, 0.05,
+                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(batched[j]),
+                                      np.asarray(single))
 
 
 # --------------------------------------------------------------------------- #
@@ -185,15 +203,28 @@ def params0():
 
 
 def test_replay_refuses_backend_mismatch():
+    opt_pal = zo.mezo(lr=1e-3, eps=1e-3, backend="pallas")
     led = TrajectoryLedger(base_seed=0, grad_dtype="float32",
-                           backend="pallas")
+                           backend=opt_pal.backend_name)
     led.append(0, 0.5, 1e-3)
     opt_xla = zo.mezo(lr=1e-3, eps=1e-3, backend="xla")
     with pytest.raises(BackendMismatchError, match="pallas"):
         replay(params0(), led, opt_xla)
     # and matching backend replays fine
-    opt_pal = zo.mezo(lr=1e-3, eps=1e-3, backend="pallas")
     replay(params0(), led, opt_pal)
+
+
+def test_replay_refuses_older_pallas_stream_version():
+    """The pallas z generator was revised (polynomial Box–Muller, stream id
+    'pallas+z2'): artifacts recorded under the original 'pallas' stream must
+    refuse to replay — the bits differ, silent divergence otherwise."""
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32",
+                           backend="pallas")       # v1-era recorded identity
+    led.append(0, 0.5, 1e-3)
+    opt_pal = zo.mezo(lr=1e-3, eps=1e-3, backend="pallas")
+    assert opt_pal.backend_name == "pallas+z2"
+    with pytest.raises(BackendMismatchError, match="z-stream"):
+        replay(params0(), led, opt_pal)
 
 
 def test_checkpoint_resume_refuses_backend_mismatch(tmp_path):

@@ -50,6 +50,7 @@ OPTIMIZERS = {
         total_steps=100, warmup_steps=3),
     "zo_n_spsa": lambda: zo.mezo(lr=1e-3, eps=1e-3, n=3),
     "zo_one_point": lambda: zo.mezo(lr=2e-4, eps=1e-2, estimator="one_point"),
+    "zo_fzoo": lambda: zo.fzoo(lr=2e-4, eps=1e-3, batch_seeds=3),
     "zo_mezo_adam": lambda: zo.mezo_adam(lr=1e-2, eps=1e-3, window=8),
     "zo_mezo_adam_mat": lambda: zo.mezo_adam(lr=1e-2, eps=1e-3,
                                              materialized=True),
@@ -362,7 +363,7 @@ def test_pallas_backend_full_train_loop_tracks_xla():
     losses = {}
     for backend in ("xla", "pallas"):
         opt = zo.mezo(lr=1e-4, eps=1e-3, backend=backend)
-        assert opt.backend_name == backend
+        assert opt.backend_name.partition("+z")[0] == backend
         res = train(lm_loss, start_params(), opt, pipe, total_steps=30,
                     log_every=1)
         losses[backend] = np.asarray([l for _, l in res.losses])
@@ -397,8 +398,9 @@ def test_pallas_backend_crash_resume_roundtrip(tmp_path):
         train(lm_loss, params, make_opt(), pipe, total_steps=T, ckpt=ck,
               ledger=led, injector=FailureInjector(fail_at_step=7),
               donate=False)
-    assert ck.load_ledger().backend == "pallas"
-    assert ck.restore_latest(params)["meta"]["perturb_backend"] == "pallas"
+    assert ck.load_ledger().backend == make_opt().backend_name
+    assert ck.restore_latest(params)["meta"]["perturb_backend"] == \
+        make_opt().backend_name
 
     led2 = TrajectoryLedger(base_seed=0, grad_dtype="float32")
     res = train(lm_loss, params, make_opt(), pipe, total_steps=T, ckpt=ck,
@@ -432,24 +434,31 @@ def test_pallas_backend_composes_with_transform_stack(preset):
 
 def test_custom_estimator_plugs_in():
     """The extension point the redesign buys: a new estimator is one factory,
-    not a new optimizer class.  Forward-difference two-point as a demo."""
+    not a new optimizer class.  Forward-difference two-point as a demo.
+    Perturbation and update go through ONE resolved backend — mixing two
+    backends' z streams in a single estimator would silently decorrelate the
+    perturb and update directions."""
     def forward_diff(eps=1e-3, dist="gaussian"):
-        from repro.core.perturb import perturb
+        from repro.perturb import StreamRef, get_backend
+        be = get_backend(None)     # session default (REPRO_BACKEND-aware)
 
         def init(params, key):
             return ()
 
         def estimate(loss, params, batch, key, est_state):
+            ref = StreamRef(key)
             l0 = loss(params, batch)
-            lp = loss(perturb(params, key, eps, dist), batch)
+            lp = loss(be.perturb(params, ref, eps, dist), batch)
             g = (lp - l0) / eps
             return zo.ZOEstimate(
                 projected_grad=g, loss=l0,
-                apply_update=lambda c, d: zo.apply_rank1(params, key, c, d, dist),
+                apply_update=lambda c, d: be.apply_rank1(params, ref, c, d,
+                                                         dist),
                 restore=lambda: params, est_state=est_state, aux={})
 
         return zo.ZOEstimator(init=init, estimate=estimate, n_seeds=1,
-                              eps=eps, dist=dist, name="forward_diff")
+                              eps=eps, dist=dist, name="forward_diff",
+                              backend=be)
 
     opt = zo.ZOOptimizer(forward_diff(eps=1e-3),
                          zo.chain(zo.transforms.scale_by_schedule(2e-3)))
