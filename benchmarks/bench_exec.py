@@ -1,0 +1,95 @@
+"""Execution-engine bench: local vs seed-parallel step wall-clock plus the
+per-step bytes-on-wire story.
+
+The engine's pitch is that estimator × backend × plan is a full matrix, so
+this bench times the SAME optimizer composition lowered onto different plans
+(``repro.exec.StepProgram``) on a tiny LM:
+
+  * ``local``            — the facade's jit+donate step (2 forwards);
+  * ``seed_parallel(n)`` — n seed groups on batch slices at the step's
+                           center (2n forwards over 1/n-sized slices: ≈ the
+                           local step's FLOPs, n× direction averaging).
+
+Bytes-on-wire per step (what a multi-host deployment would move):
+
+  * seed-parallel: the 2n loss scalars (2 × f32 per group) — MeZO's entire
+    inter-replica traffic;
+  * async: one (step, worker, g, lr) contribution per worker (~16 B);
+  * a DP backprop baseline would all-reduce the full gradient (4·|θ| bytes)
+    — the contrast column.
+
+Emits ``name,us_per_call,derived`` CSV rows and a JSON record to
+``results/bench_exec.json`` (CI artifact; ``run.py --smoke`` scale).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit, is_smoke, note, time_fn, tiny_lm
+from repro import exec as zexec
+from repro import zo
+from repro.data.synthetic import lm_batch
+from repro.models import bundle
+from repro.tree_utils import tree_size
+
+OUT_PATH = os.path.join("results", "bench_exec.json")
+
+GROUPS = (1, 2, 4)
+BATCH = 8 if is_smoke() else 32
+SEQ = 32 if is_smoke() else 64
+
+
+def _step_time_us(prog, loss_fn, params, batch):
+    state = prog.init(params, seed=0)
+    step = jax.jit(prog.step_fn(loss_fn))
+    return time_fn(step, params, state, batch,
+                   warmup=2, iters=3 if is_smoke() else 7)
+
+
+def run() -> None:
+    cfg = tiny_lm(d_model=64, n_layers=2, vocab=256, ff=128)
+    b = bundle(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    loss_fn = b.loss_fn()
+    batch = lm_batch(1, 0, BATCH, SEQ, cfg.vocab_size)
+    n_params = tree_size(params)
+
+    records = []
+    mk = lambda: zo.mezo(lr=1e-5, eps=1e-3)
+    t_local = _step_time_us(zexec.StepProgram(mk(), zexec.local()),
+                            loss_fn, params, batch)
+    emit("exec/local_spsa", t_local, "plan=local")
+    records.append({"plan": "local", "n_groups": 1, "us_per_step": t_local,
+                    "wire_bytes_per_step": 0})
+    for n in GROUPS:
+        t_sp = _step_time_us(
+            zexec.StepProgram(mk(), zexec.seed_parallel(n)),
+            loss_fn, params, batch)
+        wire = 8 * n          # 2n loss scalars, f32
+        emit(f"exec/seed_parallel_{n}", t_sp,
+             f"vs_local={t_sp / t_local:.2f}x;wire_B={wire}")
+        records.append({"plan": "seed_parallel", "n_groups": n,
+                        "us_per_step": t_sp, "wire_bytes_per_step": wire,
+                        "vs_local": t_sp / t_local})
+
+    dp_grad_bytes = 4 * n_params
+    note(f"bytes-on-wire contrast: seed-parallel(4) moves 32 B/step; a DP "
+         f"backprop all-reduce would move {dp_grad_bytes / 1e6:.1f} MB/step "
+         f"({dp_grad_bytes // 32}x)")
+    emit("exec/dp_gradient_allreduce_bytes", 0.0,
+         f"bytes={dp_grad_bytes};ratio_vs_sp4={dp_grad_bytes // 32}")
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"model_params": int(n_params), "batch": BATCH, "seq": SEQ,
+                   "smoke": is_smoke(), "records": records,
+                   "dp_gradient_allreduce_bytes": int(dp_grad_bytes)},
+                  f, indent=2)
+    note(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,7 @@ import traceback
 BENCHES = [
     ("storage", "benchmarks.bench_storage"),
     ("perturb", "benchmarks.bench_perturb"),
+    ("exec", "benchmarks.bench_exec"),
     ("wallclock", "benchmarks.bench_wallclock"),
     ("memory", "benchmarks.bench_memory"),
     ("roofline", "benchmarks.bench_roofline"),
@@ -33,7 +34,7 @@ BENCHES = [
 
 # CI-per-commit subset: benches that finish in seconds at smoke scale and
 # leave results/*.json artifacts (the perf trajectory per commit).
-SMOKE_BENCHES = "storage,perturb,estimators"
+SMOKE_BENCHES = "storage,perturb,exec,estimators"
 
 
 def main() -> None:

@@ -13,6 +13,7 @@ import os
 
 import jax
 
+from repro import exec as zexec
 from repro import zo
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import TrajectoryLedger
@@ -31,6 +32,13 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/mezo_100m")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--exec-plan", default="local",
+                    choices=["local", "seed_parallel"],
+                    help="execution plan (repro.exec): seed_parallel "
+                         "evaluates --n-groups seed groups on batch slices "
+                         "at the step's center and averages the directions")
+    ap.add_argument("--n-groups", type=int, default=1,
+                    help="seed groups per step for --exec-plan seed_parallel")
     args = ap.parse_args()
 
     if args.smoke:
@@ -51,6 +59,12 @@ def main():
     pipe = Pipeline(DataSpec("lm", batch=args.batch, seq=args.seq,
                              vocab=cfg.vocab_size, seed=0))
     opt = zo.mezo(lr=1e-5, eps=1e-3)
+    if args.exec_plan == "seed_parallel":
+        # the engine lowers the same optimizer onto the sliced-batch plan;
+        # checkpoints/ledger record (exec_plan, n_groups) and a resume under
+        # a different n_groups refuses instead of re-pairing seeds
+        opt = zexec.StepProgram(opt, zexec.seed_parallel(args.n_groups))
+        print(f"exec plan: seed_parallel(n_groups={args.n_groups})")
     ckpt = CheckpointManager(args.ckpt_dir, interval=50, keep=2)
     ledger = TrajectoryLedger(base_seed=0, grad_dtype="float32")
 

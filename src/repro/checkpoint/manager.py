@@ -11,11 +11,11 @@ Recovery = newest full checkpoint + replay of the ledger tail: a node can
 rejoin from a ~0.1 MB object at any step (paper §2.1 promoted to fault
 tolerance; bitwise-equality tested).
 
-Both artifacts record the perturbation backend (``repro.perturb``) that
-generated the run's z streams — checkpoint meta carries ``perturb_backend``,
-the ledger its ``backend`` field — and recovery refuses a mismatched backend
-(``BackendMismatchError``) instead of silently reconstructing different
-parameters from a different z stream.
+Both artifacts record the run's full seed-schedule coordinates — checkpoint
+meta carries ``perturb_backend``/``batch_seeds``/``exec_plan``/``n_groups``,
+the ledger the same fields in its header — and recovery refuses mismatched
+coordinates (``BackendMismatchError`` / ``PlanMismatchError``) instead of
+silently reconstructing different parameters from different z streams.
 """
 from __future__ import annotations
 
@@ -97,11 +97,12 @@ class CheckpointManager:
     def recover_via_ledger(self, params_at_ckpt: PyTree, ckpt_step: int,
                            optimizer) -> tuple[PyTree, int]:
         """Full ckpt at ``ckpt_step`` + ledger tail -> params at ledger head.
-        No data access, no forward passes (paper §2.1).  ``optimizer`` is any
-        ``repro.zo`` protocol conformer (or, for backward compatibility, a
-        legacy config object) — its ``replay_update`` applies the tail.
-        Raises ``BackendMismatchError`` if the ledger was recorded under a
-        different perturbation backend than the optimizer's."""
+        No data access, no forward passes (paper §2.1).  ``optimizer`` is a
+        ``repro.exec.StepProgram`` (the resume path — its plan must match the
+        ledger's) or any ``repro.zo`` protocol conformer / legacy config,
+        replayed through the engine's ledger-driven plan.  Raises
+        ``BackendMismatchError`` / ``PlanMismatchError`` on mismatched
+        seed-schedule coordinates."""
         ledger = self.load_ledger()
         if ledger is None or len(ledger) == 0:
             return params_at_ckpt, ckpt_step

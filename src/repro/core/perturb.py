@@ -14,9 +14,10 @@ is bit-identical.
 """
 from __future__ import annotations
 
+from repro.perturb.stream import step_key
 from repro.perturb.xla import (Distribution, fused_restore_update, leaf_key,
                                perturb, perturb_jit, sample_leaf_z,
-                               sample_z_tree, step_key, _sphere_scale)
+                               sample_z_tree, _sphere_scale)
 
 __all__ = [
     "Distribution", "fused_restore_update", "leaf_key", "perturb",

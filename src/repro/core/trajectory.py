@@ -4,13 +4,21 @@ first-class checkpoint/recovery mechanism.
 A MeZO run is fully determined by ``(base_seed, [(lr_t, g_t)])`` — the paper
 notes this needs "the seed plus 20,000 steps × 2 bytes ... less than 0.1 MB"
 for a 66 B model.  We store g in fp16 (2 bytes, as the paper counts it) or
-fp32, and reconstruct parameters by replaying ``apply_projected_update``
-step by step — no data access, no forward passes.
+fp32, and reconstruct parameters by replaying through the execution engine
+(``repro.exec``) step by step — no data access, no forward passes.
 
 Fault-tolerance use: every worker appends (step, g) scalars to the ledger; a
 replacement node restores the last full tensor checkpoint and replays the
 ledger tail to rejoin *bitwise-identically* (tested in
 tests/test_trajectory.py and tests/test_fault_tolerance.py).
+
+The header records the full seed-schedule coordinates of the run — the
+perturbation backend, ``batch_seeds`` (B streams per group, FZOO), and the
+execution plan (``exec_plan``, ``n_groups`` — seed-parallel groups, async
+workers, or local n-SPSA's interleaved seeds, which all share one fold
+schedule).  Replay refuses mismatched coordinates (``BackendMismatchError`` /
+``PlanMismatchError``) instead of silently pairing the recorded scalars with
+different z streams.
 """
 from __future__ import annotations
 
@@ -19,18 +27,14 @@ import io
 import struct
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.perturb import step_key
-from repro.perturb import check_replay_backend
 from repro.tree_utils import PyTree
-from repro.zo.presets import as_zo_optimizer
 
 _MAGIC = b"MZOL1\x00"          # legacy format: no backend record (implies xla)
 _MAGIC2 = b"MZOL2\x00"         # adds the perturbation-backend name
 _MAGIC3 = b"MZOL3\x00"         # adds batch_seeds (B per-seed scalars per step)
+_MAGIC4 = b"MZOL4\x00"         # adds the execution plan (exec_plan, n_groups)
 
 
 @dataclasses.dataclass
@@ -42,37 +46,48 @@ class TrajectoryLedger:
     the streams differ (``BackendMismatchError``).  Legacy ``MZOL1`` files
     deserialize with ``backend="xla"`` (the only backend that existed).
 
-    ``batch_seeds`` records how many seed streams each step evaluated: plain
-    MeZO records one scalar per step (B=1, serialized as ``MZOL2`` so old
-    readers keep working); a batched-seed FZOO run records the (B,) per-seed
-    g vector per step (serialized as ``MZOL3``), which is exactly what
-    ``replay_update`` needs to refold the B rank-1 updates.  B is fixed per
-    ledger — it is a property of the recorded optimizer."""
+    ``batch_seeds`` records how many seed streams each *group* evaluated
+    (FZOO's B); ``n_groups``/``exec_plan`` record the execution plan's group
+    count and kind (seed-parallel batch groups, async workers, local n-SPSA
+    seeds — one shared fold schedule).  Each step's record is the
+    ``n_groups × batch_seeds`` per-stream g vector, which is exactly what the
+    engine's group replay needs to refold the rank-1 updates.  Plain B=1
+    single-group runs keep serializing as ``MZOL2`` (and batched single-group
+    runs as ``MZOL3``) so old readers keep working; ``MZOL4`` is written only
+    when ``n_groups > 1``.  All coordinates are fixed per ledger — they are
+    properties of the recorded run."""
     base_seed: int
     grad_dtype: str = "float16"       # the paper's 2-bytes-per-step accounting
     backend: str = "xla"              # perturbation backend of the run
-    batch_seeds: int = 1              # seed streams (g scalars) per step
+    batch_seeds: int = 1              # seed streams (g scalars) per group
+    exec_plan: str = "local"          # execution plan kind of the run
+    n_groups: int = 1                 # seed groups per step (plan-level)
     steps: list = dataclasses.field(default_factory=list)    # step indices
     grads: list = dataclasses.field(default_factory=list)    # projected grads
     lrs: list = dataclasses.field(default_factory=list)      # lr actually used
 
+    def _streams_per_step(self) -> int:
+        return int(self.batch_seeds) * int(self.n_groups)
+
     def append(self, step: int, projected_grad, lr: float) -> None:
-        """Record one step.  ``projected_grad`` is a scalar (B=1) or a
-        length-B vector of per-seed scalars (batched-seed estimators)."""
+        """Record one step.  ``projected_grad`` is a scalar (one stream) or a
+        length-``n_groups·batch_seeds`` vector of per-stream scalars."""
         arr = np.atleast_1d(np.asarray(projected_grad)).astype(self.grad_dtype)
         if arr.ndim != 1:
             raise ValueError(f"projected_grad must be scalar or 1-D, "
                              f"got shape {arr.shape}")
-        if not self.steps and self.batch_seeds == 1:
+        if not self.steps and self._streams_per_step() == 1:
             # default-constructed ledger: infer B from the first record
             self.batch_seeds = int(arr.size)
-        elif int(arr.size) != self.batch_seeds:
-            # a constructor-declared B is a promise, not a default — a
-            # mismatched first record fails HERE (the recording site), not
-            # later at replay time with a ledger-vs-optimizer error
+        elif int(arr.size) != self._streams_per_step():
+            # a constructor-declared stream count is a promise, not a
+            # default — a mismatched first record fails HERE (the recording
+            # site), not later at replay time with a ledger-vs-optimizer error
             raise ValueError(
-                f"this ledger records {self.batch_seeds} seed scalar(s) per "
-                f"step; got {arr.size} — batch_seeds is fixed per run")
+                f"this ledger records {self._streams_per_step()} seed "
+                f"scalar(s) per step (n_groups={self.n_groups} × "
+                f"batch_seeds={self.batch_seeds}); got {arr.size} — the "
+                "stream count is fixed per run")
         self.steps.append(int(step))
         # stored after quantization; scalars stay plain floats (legacy shape)
         self.grads.append(float(arr[0]) if arr.size == 1
@@ -85,15 +100,21 @@ class TrajectoryLedger:
     # -- serialization ----------------------------------------------------- #
     def to_bytes(self) -> bytes:
         buf = io.BytesIO()
+        planned = self.n_groups > 1
         batched = self.batch_seeds > 1
-        buf.write(_MAGIC3 if batched else _MAGIC2)
+        buf.write(_MAGIC4 if planned else (_MAGIC3 if batched else _MAGIC2))
         buf.write(struct.pack("<qi", self.base_seed,
                               1 if self.grad_dtype == "float16" else 4))
         bname = self.backend.encode("utf-8")
         buf.write(struct.pack("<i", len(bname)))
         buf.write(bname)
-        if batched:
+        if planned or batched:
             buf.write(struct.pack("<i", self.batch_seeds))
+        if planned:
+            buf.write(struct.pack("<i", self.n_groups))
+            pname = self.exec_plan.encode("utf-8")
+            buf.write(struct.pack("<i", len(pname)))
+            buf.write(pname)
         buf.write(struct.pack("<q", len(self.steps)))
         buf.write(np.asarray(self.steps, np.int64).tobytes())
         buf.write(np.asarray(self.grads, self.grad_dtype).tobytes())
@@ -104,29 +125,37 @@ class TrajectoryLedger:
     def from_bytes(cls, raw: bytes) -> "TrajectoryLedger":
         buf = io.BytesIO(raw)
         magic = buf.read(len(_MAGIC))
-        assert magic in (_MAGIC, _MAGIC2, _MAGIC3), "not a MeZO ledger"
+        assert magic in (_MAGIC, _MAGIC2, _MAGIC3, _MAGIC4), "not a MeZO ledger"
         seed, dcode = struct.unpack("<qi", buf.read(12))
         backend = "xla"                       # MZOL1 predates backend choice
         batch_seeds = 1
-        if magic in (_MAGIC2, _MAGIC3):
+        n_groups = 1
+        exec_plan = "local"
+        if magic in (_MAGIC2, _MAGIC3, _MAGIC4):
             blen, = struct.unpack("<i", buf.read(4))
             backend = buf.read(blen).decode("utf-8")
-        if magic == _MAGIC3:
+        if magic in (_MAGIC3, _MAGIC4):
             batch_seeds, = struct.unpack("<i", buf.read(4))
+        if magic == _MAGIC4:
+            n_groups, = struct.unpack("<i", buf.read(4))
+            plen, = struct.unpack("<i", buf.read(4))
+            exec_plan = buf.read(plen).decode("utf-8")
         n, = struct.unpack("<q", buf.read(8))
         dtype = "float16" if dcode == 1 else "float32"
         itemsize = np.dtype(dtype).itemsize
+        per_step = batch_seeds * n_groups
         steps = np.frombuffer(buf.read(8 * n), np.int64)
-        grads = np.frombuffer(buf.read(itemsize * n * batch_seeds), dtype)
+        grads = np.frombuffer(buf.read(itemsize * n * per_step), dtype)
         lrs = np.frombuffer(buf.read(4 * n), np.float32)
         led = cls(base_seed=seed, grad_dtype=dtype, backend=backend,
-                  batch_seeds=batch_seeds)
+                  batch_seeds=batch_seeds, exec_plan=exec_plan,
+                  n_groups=n_groups)
         led.steps = [int(s) for s in steps]
-        if batch_seeds == 1:
+        if per_step == 1:
             led.grads = [float(g) for g in grads]
         else:
             led.grads = [[float(g) for g in row]
-                         for row in grads.reshape(n, batch_seeds)]
+                         for row in grads.reshape(n, per_step)]
         led.lrs = [float(l) for l in lrs]
         return led
 
@@ -137,41 +166,24 @@ class TrajectoryLedger:
 def replay(params0: PyTree, ledger: TrajectoryLedger, optimizer,
            from_idx: int = 0, to_idx: Optional[int] = None) -> PyTree:
     """Reconstruct θ_T from θ_0 (or a mid-run checkpoint) by replaying the
-    scalar ledger through the optimizer protocol's ``replay_update``.  Uses
-    the exact same update primitive as training, so the reconstruction is
+    scalar ledger through the execution engine (``StepProgram.replay``).
+    Uses the exact same write path as training, so the reconstruction is
     bitwise when grad_dtype='float32' and the training loop records the
     quantized g it actually applied.
 
-    ``optimizer`` is anything conforming to the ``repro.zo`` protocol (a
-    ``ZOOptimizer``, a shim, or — for backward compatibility — a legacy
-    ``MeZOConfig``-like object, converted via ``as_zo_optimizer``).  If the
-    ledger records a perturbation backend different from the optimizer's,
-    replay raises ``BackendMismatchError`` — the z streams differ, so the
-    reconstruction would silently diverge."""
-    opt = as_zo_optimizer(optimizer)
-    check_replay_backend(ledger.backend,
-                         getattr(opt, "backend_name", None), "trajectory ledger")
-    opt_bs = int(getattr(opt, "batch_seeds", 1))
-    if len(ledger) and ledger.batch_seeds != opt_bs:
-        raise ValueError(
-            f"trajectory ledger records {ledger.batch_seeds} seed scalar(s) "
-            f"per step but the optimizer evaluates batch_seeds={opt_bs}; the "
-            "seed fold schedule (and the per-step g shape) differ, so replay "
-            "would misapply the updates — replay with a matching "
-            "fzoo(batch_seeds=...) composition")
-    base_key = jax.random.PRNGKey(ledger.base_seed)
-    to_idx = len(ledger) if to_idx is None else to_idx
-
-    @jax.jit
-    def one(params, step, g, lr):
-        skey = step_key(base_key, step)
-        return opt.replay_update(params, skey, g, lr)
-
-    p = params0
-    for i in range(from_idx, to_idx):
-        p = one(p, jnp.int32(ledger.steps[i]),
-                jnp.float32(ledger.grads[i]), jnp.float32(ledger.lrs[i]))
-    return p
+    ``optimizer`` is a ``repro.exec.StepProgram`` (whose plan must match the
+    ledger's — the resume path) or anything ``as_zo_optimizer`` accepts,
+    which is wrapped on the ledger-driven ``replay()`` plan (adopting the
+    ledger's recorded ``n_groups``).  Mismatched seed-schedule coordinates
+    raise ``BackendMismatchError`` / ``PlanMismatchError`` — the z streams
+    differ, so the reconstruction would silently diverge."""
+    from repro.exec import StepProgram, as_step_program
+    from repro.exec import plan as plan_mod
+    if isinstance(optimizer, StepProgram):
+        prog = optimizer
+    else:
+        prog = as_step_program(optimizer, plan_mod.replay())
+    return prog.replay(params0, ledger, from_idx=from_idx, to_idx=to_idx)
 
 
 def storage_report(n_steps: int, grad_dtype: str = "float16") -> dict:

@@ -4,38 +4,48 @@ Because a ZO update is the rank-1 tensor −η·g·z(seed) with a SCALAR
 coefficient, updates commute cheaply and can be applied late: a straggling
 worker's (step, seed-id, g) contribution can reach peers a few steps after
 the fact, and every worker folds it in whenever it arrives.  Workers never
-exchange tensors — the wire format is 16 bytes per contribution.
+exchange tensors — the wire format is a few bytes per contribution.
 
-The worker consumes the ``repro.zo`` facade: its local evaluation is the
-optimizer's *estimator* (the same sequential SPSA chain as a training step)
-and remote application is the optimizer's perturbation backend's
-``apply_rank1`` primitive — so a late contribution regenerates the identical
-z (same backend, same ``StreamRef``) and performs arithmetic identical to a
-live step.
+Since the execution engine landed, the worker is pure *policy* (outbox,
+staleness window, dedup) over ``repro.exec.StepProgram`` on the
+``async_worker`` plan: local evaluation is the optimizer's estimator plus
+the scalar transform chain (``contribution_eval_fn``), and remote
+application is the engine's shared write path (``apply_contribution_fn`` →
+``PerturbBackend.apply_rank1``), so a late contribution regenerates the
+identical z (same backend, same seed schedule) and performs floats identical
+to a seed-parallel step of the same round — and to a ledger replay of it.
+
+The seed schedule is the engine's: worker w's stream at step t is
+``fold_in(step_key(base, t), w)`` (unfolded at n_workers == 1), i.e. the SAME
+schedule seed-parallel groups and local n-SPSA seeds use — an async
+staleness-0 round, a seed-parallel step, and a ledger replay are the same
+multiset of rank-1 updates.
 
 Model (synchronous-equivalent at staleness 0):
-  * each worker w at step t evaluates seed (t, w) on its batch shard and
-    broadcasts g_{t,w};
+  * each worker w at step t evaluates seed group (t, w) on its batch shard
+    and broadcasts g_{t,w};
   * a worker applies contribution (t', w') when it has it, up to
     ``max_staleness`` steps late;
   * convergence: stale rank-1 SGD with bounded delay — the classic
     asynchronous-SGD regime, but with exact replay (z regenerated from the
     seed), so workers remain bitwise-consistent once the same multiset of
-    contributions is applied.  tests/test_async_zo.py checks (a) staleness-0
-    == synchronous MeZO, (b) convergence on a quadratic under delay, and
-    (c) order-invariance of the applied updates (within fp tolerance).
+    contributions is applied.  tests/test_async_zo.py and tests/test_exec.py
+    check (a) staleness-0 == synchronous seed-parallel, (b) convergence on a
+    quadratic under delay, (c) order-invariance of the applied updates
+    (within fp tolerance), and (d) ledger round-trip through the engine.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable
+from typing import Callable, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.perturb import step_key
-from repro.perturb import StreamRef
+from repro.exec import StepProgram, group_stream_key
+from repro.exec import plan as plan_mod
+from repro.perturb import step_key
 from repro.tree_utils import PyTree
 from repro.zo.presets import as_zo_optimizer
 
@@ -44,12 +54,22 @@ from repro.zo.presets import as_zo_optimizer
 class Contribution:
     step: int
     worker: int
-    projected_grad: float
+    # one scalar per stream: a float (B=1) or a length-B tuple (batched-seed
+    # estimators — fzoo workers put their per-stream vector on the wire)
+    projected_grad: Union[float, tuple]
     lr: float
 
 
-def worker_seed_key(base_key: jax.Array, step: int, worker: int) -> jax.Array:
-    return jax.random.fold_in(step_key(base_key, step), 1000 + worker)
+def worker_seed_key(base_key: jax.Array, step: int, worker: int,
+                    n_workers: int) -> jax.Array:
+    """Deprecated alias for the engine's seed schedule.  The legacy
+    ``1000 + worker`` offset is gone — the engine's one fold schedule is
+    shared with seed-parallel and local n-SPSA, which is what makes the
+    plans' artifacts interchangeable.  ``n_workers`` is REQUIRED because the
+    schedule depends on it (one worker uses the unfolded step key); legacy
+    3-argument callers fail loudly here instead of silently deriving a
+    stream that matches neither schedule."""
+    return group_stream_key(base_key, step, worker, n_workers)
 
 
 class AsyncZOWorker:
@@ -57,8 +77,9 @@ class AsyncZOWorker:
     by the simulated-cluster example; a deployment pushes Contribution
     records over its own transport).
 
-    ``optimizer`` is a ``repro.zo`` protocol conformer (``zo.mezo(...)``) or,
-    for backward compatibility, a legacy ``MeZOConfig``."""
+    ``optimizer`` is a ``repro.zo`` protocol conformer (``zo.mezo(...)``,
+    ``zo.fzoo(...)``) or, for backward compatibility, a legacy
+    ``MeZOConfig``."""
 
     def __init__(self, worker_id: int, n_workers: int, params: PyTree,
                  loss_fn: Callable, optimizer, base_seed: int = 0,
@@ -68,6 +89,8 @@ class AsyncZOWorker:
         self.params = params
         self.loss_fn = loss_fn
         self.opt = as_zo_optimizer(optimizer)
+        self.prog = StepProgram(
+            self.opt, plan_mod.async_worker(n_workers, max_staleness))
         self.base_key = jax.random.PRNGKey(base_seed)
         self.max_staleness = max_staleness
         self.outbox: deque[Contribution] = deque()
@@ -83,52 +106,51 @@ class AsyncZOWorker:
             raise ValueError(
                 f"AsyncZOWorker needs a stateless estimator; "
                 f"{self.opt.estimator.name!r} carries per-step state")
-        if not self.opt.estimator.replayable:
-            # _apply is the plain rank-1 primitive; a Definition-6 estimator
-            # updates along D·z, so remote application would perform
-            # different arithmetic than the producing worker's live step.
-            raise ValueError(
-                f"AsyncZOWorker contributions apply as plain rank-1 updates; "
-                f"{self.opt.estimator.name!r} (Definition 6, D-scaled) is "
-                "not wire-replayable")
-        self._jit_eval = jax.jit(self._eval)
-        self._jit_apply = jax.jit(self._apply)
+        self._jit_eval = jax.jit(self.prog.contribution_eval_fn(
+            loss_fn, worker_id, est_state=self._est_state))
+        # group feeds only the fold_in inside group_key, which takes traced
+        # ints — keeping it dynamic means ONE compiled apply kernel serves
+        # every worker id instead of one retrace per peer
+        self._jit_apply = jax.jit(self.prog.apply_contribution_fn())
 
     # ---- local estimation (the optimizer's own estimator chain) ---------- #
-    def _eval(self, params, skey, batch):
-        e = self.opt.estimator.estimate(self.loss_fn, params, batch, skey,
-                                        self._est_state)
-        return e.projected_grad, e.loss
-
-    def _apply(self, params, skey, g, lr):
-        # the optimizer's own backend: a late remote application performs the
-        # identical z regeneration + arithmetic as the producer's live step
-        lr_w = lr / self.n
-        return self.opt.backend.apply_rank1(params, StreamRef(skey), lr_w * g,
-                                            lr_w * self.opt.weight_decay,
-                                            self.opt.estimator.dist)
-
     def produce(self, batch) -> Contribution:
-        """Evaluate this worker's seed for its current step."""
-        skey = worker_seed_key(self.base_key, self.step, self.w)
-        lr = float(self.opt.lr_at(jnp.int32(self.step)))
-        g, _ = self._jit_eval(self.params, skey, batch)
-        contrib = Contribution(self.step, self.w, float(g), lr)
+        """Evaluate this worker's seed group for its current step and run the
+        scalar transform chain — what goes on the wire is the post-transform
+        g, the same scalar a seed-parallel step of this round records."""
+        g, lr, _ = self._jit_eval(self.params, self.base_key,
+                                  jnp.int32(self.step), batch)
+        g_wire = (tuple(float(x) for x in g) if jnp.ndim(g) > 0
+                  else float(g))
+        contrib = Contribution(self.step, self.w, g_wire, float(lr))
         self.outbox.append(contrib)
         self.step += 1
         return contrib
 
     def consume(self, contrib: Contribution) -> bool:
-        """Apply a (possibly remote, possibly stale) contribution."""
+        """Apply a (possibly remote, possibly stale) contribution through the
+        engine's shared write path.
+
+        Decay caveat (weight_decay > 0): the step's decoupled η·λ decay
+        rides worker 0's contribution (the engine's group-0 rule, matching
+        seed-parallel and ledger replay).  If worker 0's contribution for a
+        step exceeds the staleness window and is dropped, that step's decay
+        is dropped with it — peers that did apply it diverge by the
+        (1 − η·λ) factor, not just the missing rank-1 term.  Deployments
+        with nonzero decay should size ``max_staleness`` so worker 0's
+        contributions are never dropped (or route decay through a local
+        step schedule)."""
         key = (contrib.step, contrib.worker)
         if key in self.applied:
             return False
         if contrib.step < self.step - self.max_staleness:
             return False          # too stale: dropped (bounded staleness)
-        skey = worker_seed_key(self.base_key, contrib.step, contrib.worker)
-        self.params = self._jit_apply(self.params, skey,
-                                      jnp.float32(contrib.projected_grad),
-                                      jnp.float32(contrib.lr))
+        skey0 = step_key(self.base_key, jnp.int32(contrib.step))
+        g = jnp.float32(contrib.projected_grad)
+        self.params = self._jit_apply(
+            self.params, skey0, jnp.int32(contrib.worker), g,
+            jnp.float32(contrib.lr),
+            jnp.float32(1.0 if contrib.worker == 0 else 0.0))
         self.applied.add(key)
         return True
 
@@ -140,3 +162,46 @@ def run_sync_equivalent(workers: list[AsyncZOWorker], batches_for) -> None:
     for w in workers:
         for cb in contribs:
             w.consume(cb)
+
+
+def contributions_to_ledger(ledger, contribs: Sequence[Contribution],
+                            n_workers: int) -> tuple[int, int]:
+    """Fold a collection of contributions into a trajectory ledger: one
+    record per fully-contributed step, streams in worker order — exactly the
+    MZOL record a seed-parallel step of the same round appends, so the
+    assembled ledger replays under the engine's ``replay()`` plan.
+
+    An empty default-constructed ledger is stamped with the async plan's
+    coordinates (``n_groups`` = worker count, ``exec_plan``, ``batch_seeds``
+    from the wire vectors) — without the stamp the first append would
+    mis-infer the worker count as FZOO's per-group B and replay would
+    refuse.  ``n_workers`` is required: inferring it from a step's delivered
+    contributions would record an incomplete round of a larger cluster as a
+    complete smaller one (wrong 1/n rescale on replay).
+
+    Returns ``(recorded, skipped)`` — steps appended vs. steps dropped for
+    missing contributions; a nonzero ``skipped`` means the assembled ledger
+    reconstructs parameters BEHIND what live workers applied, so callers
+    must check it before treating the ledger as the run's full record."""
+    by_step: dict = {}
+    for c in contribs:
+        by_step.setdefault(c.step, {})[c.worker] = c
+    n = int(n_workers)
+    recorded = skipped = 0
+    for step in sorted(by_step):
+        row = by_step[step]
+        if sorted(row) != list(range(n)):
+            skipped += 1                  # incomplete round: not recordable
+            continue
+        if len(ledger) == 0 and ledger.n_groups == 1 and n > 1:
+            g0 = row[0].projected_grad
+            ledger.n_groups = n
+            ledger.exec_plan = "async_worker"
+            ledger.batch_seeds = len(g0) if isinstance(g0, tuple) else 1
+        flat: list = []
+        for w in range(n):
+            g = row[w].projected_grad
+            flat.extend(g if isinstance(g, tuple) else (g,))
+        ledger.append(step, flat if len(flat) > 1 else flat[0], row[0].lr)
+        recorded += 1
+    return recorded, skipped

@@ -1,4 +1,4 @@
-"""MeZO-specific collective patterns.
+"""MeZO-specific collective patterns — now thin policy over ``repro.exec``.
 
 The punchline (DESIGN.md §2): under data parallelism MeZO's *entire*
 inter-replica traffic per step is the scalar loss all-reduce — two f32 per
@@ -15,22 +15,28 @@ as plain 1-SPSA on the full batch while averaging n independent rank-1
 directions — n× direction-variance reduction for free.  The cross-device
 traffic is the 2n loss scalars.
 
-This module consumes the ``repro.zo`` facade: hyperparameters (ε, dist, the
-lr schedule, λ) come from the optimizer protocol — pass ``zo.mezo(...)`` (or,
-for backward compatibility, a legacy ``MeZOConfig``) — and every parameter
-write goes through the shared ``apply_rank1`` primitive, the same arithmetic
-a ledger replay performs.
+Since the execution engine landed, the step itself lives in
+``repro.exec.StepProgram`` (plan ``seed_parallel(n)``), which lowers ANY
+``repro.zo`` optimizer — spsa, n_spsa, fzoo's batched seeds, any transform
+chain, any ``PerturbBackend`` — onto the sliced-batch schedule.  What remains
+here is the slicing policy re-exported for its historical callers: every
+perturbation runs through the optimizer's estimator and every parameter
+write through ``PerturbBackend.apply_rank1`` (the engine's shared write
+path, identical to ledger replay).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.perturb import step_key
-from repro.perturb import StreamRef, get_backend
+from repro.exec import StepProgram, apply_group_updates, group_key
+from repro.exec import plan as plan_mod
+from repro.perturb import get_backend, step_key
 from repro.tree_utils import PyTree
+from repro.zo.base import ZOState
 from repro.zo.presets import as_zo_optimizer
 
 
@@ -40,6 +46,9 @@ def psum_scalar(x: jnp.ndarray, axis_name) -> jnp.ndarray:
 
 
 class SeedParallelState(NamedTuple):
+    """Deprecated pre-engine state (step, base_key).  The engine runs on the
+    uniform ``ZOState``; this shape is still accepted by the step function
+    built below (converted on the fly) so legacy callers keep working."""
     step: jnp.ndarray
     base_key: jax.Array
 
@@ -48,48 +57,44 @@ def seed_parallel_init(seed: int = 0) -> SeedParallelState:
     return SeedParallelState(jnp.int32(0), jax.random.PRNGKey(seed))
 
 
-def seed_parallel_step_fn(loss_fn: Callable, optimizer, n_groups: int):
-    """Build ``step(params, state, batch) -> (params, state, metrics)``.
+def seed_parallel_step_fn(loss_fn: Callable, optimizer, n_groups: int,
+                          mesh=None):
+    """Build ``step(params, state, batch) -> (params, state, metrics)`` on
+    the engine's seed-parallel plan.
 
     ``optimizer`` is a ``repro.zo`` protocol conformer (or legacy config).
     ``batch`` leaves must have leading dim divisible by ``n_groups``; slice g
-    is evaluated under seed g.  jit with batch sharded over 'data' makes each
-    slice's evaluation group-local (see module docstring).
+    is evaluated under seed group g.  jit with batch sharded over 'data'
+    makes each slice's evaluation group-local (see module docstring).
+
+    Accepts both the engine's ``ZOState`` and the deprecated
+    ``SeedParallelState`` (scalar-chain optimizers only).
     """
     opt = as_zo_optimizer(optimizer)
-    eps, dist = opt.estimator.eps, opt.estimator.dist
-    weight_decay = opt.weight_decay
-    backend = opt.backend
+    prog = StepProgram(opt, plan_mod.seed_parallel(n_groups, mesh=mesh))
+    engine_step = prog.step_fn(loss_fn)
 
-    def step(params: PyTree, state: SeedParallelState, batch):
-        skey0 = step_key(state.base_key, state.step)
-        lr = opt.lr_at(state.step)
-
-        def slice_g(tree, g):
-            def cut(x):
-                per = x.shape[0] // n_groups
-                return jax.lax.dynamic_slice_in_dim(x, g * per, per, axis=0)
-            return jax.tree_util.tree_map(cut, tree)
-
-        gs, losses = [], []
-        for g in range(n_groups):
-            ref = StreamRef(jax.random.fold_in(skey0, g))
-            bg = slice_g(batch, g)
-            p_plus = backend.perturb(params, ref, eps, dist)
-            l_plus = loss_fn(p_plus, bg)
-            p_minus = backend.perturb(p_plus, ref, -2.0 * eps, dist)
-            l_minus = loss_fn(p_minus, bg)
-            # restore to center before the next group's perturbation
-            params = backend.perturb(p_minus, ref, eps, dist)
-            gs.append((l_plus - l_minus) / (2.0 * eps))
-            losses.append(0.5 * (l_plus + l_minus))
-
-        p = apply_seed_parallel_update(params, state.base_key, state.step,
-                                       jnp.stack(gs), lr, n_groups,
-                                       weight_decay, dist, backend=backend)
-        new_state = SeedParallelState(state.step + 1, state.base_key)
-        return p, new_state, {"loss": jnp.mean(jnp.stack(losses)),
-                              "projected_grads": jnp.stack(gs), "lr": lr}
+    def step(params: PyTree, state, batch):
+        if isinstance(state, SeedParallelState):
+            est_state = opt.estimator.init(None, state.base_key)
+            tf_state = opt.transform.init(None)
+            if jax.tree_util.tree_leaves(est_state) or \
+                    jax.tree_util.tree_leaves(tf_state):
+                # the legacy (step, base_key) state has nowhere to carry
+                # estimator/transform arrays across steps — re-initializing
+                # them every call would silently bias stateful estimators
+                # (one_point's residual, rescaled's D-tree)
+                raise ValueError(
+                    "the legacy SeedParallelState supports stateless "
+                    "estimator/transform chains only; drive this optimizer "
+                    "through repro.exec.StepProgram with its ZOState "
+                    "(prog.init(params, seed=...))")
+            zstate = ZOState(step=state.step, base_key=state.base_key,
+                             est_state=est_state, tf_state=tf_state,
+                             last_projected_grad=jnp.float32(0.0))
+            p, zs, metrics = engine_step(params, zstate, batch)
+            return p, SeedParallelState(zs.step, zs.base_key), metrics
+        return engine_step(params, state, batch)
 
     return step
 
@@ -98,18 +103,28 @@ def seed_parallel_grads(loss_fn: Callable, params: PyTree, batches: PyTree,
                         base_key, step_idx, eps: float, n_groups: int,
                         dist: str = "gaussian", backend=None) -> jnp.ndarray:
     """Pure estimator form (used by tests): group g evaluates seed g on
-    ``batches[g]``; returns the n projected-grad scalars."""
-    be = get_backend(backend)
+    ``batches[g]``; returns the n projected-grad scalars.  Each group runs
+    the standard SPSA estimator chain at the step's center parameters.
+
+    BEHAVIOR CHANGE (engine canonicalization): at ``n_groups == 1`` the
+    stream key is the unfolded step key (== the local plan), where the
+    pre-engine helper folded group 0 — pre-engine single-group results are
+    not reproducible through this helper (warned loudly below)."""
+    from repro.zo import estimators
+    if n_groups == 1:
+        warnings.warn(
+            "seed_parallel_grads(n_groups=1) now uses the engine's unfolded "
+            "step key (aligned with the local plan); the pre-engine helper "
+            "folded group 0, so results differ from pre-engine runs",
+            UserWarning, stacklevel=2)
+    est = estimators.spsa(eps=eps, dist=dist, backend=get_backend(backend))
     skey0 = step_key(base_key, step_idx)
     gs = []
     for g in range(n_groups):
-        ref = StreamRef(jax.random.fold_in(skey0, g))
         bg = jax.tree_util.tree_map(lambda x: x[g], batches)
-        p_plus = be.perturb(params, ref, eps, dist)
-        l_plus = loss_fn(p_plus, bg)
-        p_minus = be.perturb(p_plus, ref, -2.0 * eps, dist)
-        l_minus = loss_fn(p_minus, bg)
-        gs.append((l_plus - l_minus) / (2.0 * eps))
+        e = est.estimate(loss_fn, params, bg,
+                         group_key(skey0, g, n_groups), ())
+        gs.append(e.projected_grad)
     return jnp.stack(gs)
 
 
@@ -119,13 +134,29 @@ def apply_seed_parallel_update(params: PyTree, base_key, step_idx,
                                dist: str = "gaussian",
                                backend=None) -> PyTree:
     """θ ← θ − (η/n) Σ_g g_g · z_g  (identical on every replica), via the
-    backend's rank-1 primitive; decay applied once, on the first group."""
+    engine's shared write path (``PerturbBackend.apply_rank1`` underneath);
+    decay applied once, on the first group — the same floats a ledger replay
+    of this step performs.
+
+    BEHAVIOR CHANGES (engine canonicalization, warned loudly): the decay
+    term is the transform chain's η·λ once per step (pre-engine: (η/n)·λ),
+    and at ``n_groups == 1`` the stream key is the unfolded step key
+    (pre-engine: folded group 0)."""
     be = get_backend(backend)
+    if n_groups == 1:
+        warnings.warn(
+            "apply_seed_parallel_update(n_groups=1) now uses the engine's "
+            "unfolded step key (aligned with the local plan); pre-engine "
+            "single-group updates folded group 0 and are not reproducible "
+            "through this helper", UserWarning, stacklevel=2)
+    if weight_decay:
+        warnings.warn(
+            "apply_seed_parallel_update now applies the decoupled decay as "
+            "η·λ once per step (the transform chain's add_weight_decay "
+            "rule); the pre-engine helper applied (η/n)·λ — reconstructions "
+            "of pre-engine decayed runs will differ", UserWarning,
+            stacklevel=2)
     skey0 = step_key(base_key, step_idx)
-    lr_g = lr / n_groups
-    p = params
-    for g in range(n_groups):
-        ref = StreamRef(jax.random.fold_in(skey0, g))
-        wd = weight_decay if g == 0 else 0.0
-        p = be.apply_rank1(p, ref, lr_g * grads[g], lr_g * wd, dist)
-    return p
+    coeffs = [(lr / n_groups) * grads[g] for g in range(n_groups)]
+    return apply_group_updates(params, skey0, coeffs, lr * weight_decay,
+                               n_groups, 1, dist, be)

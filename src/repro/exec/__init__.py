@@ -1,0 +1,45 @@
+"""``repro.exec`` — one mesh-aware ZO step engine for every execution mode.
+
+MeZO's defining property (paper §2.1) is that a step is fully determined by a
+seed and a handful of scalars.  One step definition can therefore serve local
+training, sharded seed-parallelism, bounded-staleness async workers, and
+ledger replay — this package owns that lowering:
+
+* :mod:`repro.exec.plan` — the plans (``local``, ``seed_parallel``,
+  ``async_worker``, ``replay``) and the ``PlanMismatchError`` refusal for
+  artifacts recorded under a different seed schedule;
+* :mod:`repro.exec.engine` — ``StepProgram``, which lowers any ``repro.zo``
+  optimizer (estimator × transform chain) onto a plan, routing every
+  parameter write through ``PerturbBackend``.
+
+Quick start
+-----------
+>>> from repro import exec as zexec, zo
+>>> prog = zexec.StepProgram(zo.fzoo(lr=1e-6, batch_seeds=8),
+...                          zexec.seed_parallel(4))
+>>> state = prog.init(params, seed=0)
+>>> step = jax.jit(prog.step_fn(loss_fn), donate_argnums=(0,))
+>>> params, state, metrics = step(params, state, batch)
+>>> rec = prog.replay(params0, ledger)          # ledger-driven, no forwards
+
+Guarantees (test-enforced in tests/test_exec.py):
+
+* ``seed_parallel(1)`` is bitwise-equal to ``local`` (spsa and fzoo, xla);
+* a ledger written under any plan replays under ``replay()`` — live
+  seed-parallel application, async contribution application, and ledger
+  replay share one write path (``engine.apply_group_update``);
+* mismatched plan coordinates refuse (``PlanMismatchError``) instead of
+  silently re-pairing recorded scalars with different z streams.
+"""
+from repro.exec.engine import (StepProgram, apply_group_update,
+                               apply_group_updates, as_step_program,
+                               group_key, group_stream_key, slice_group)
+from repro.exec.plan import (ExecPlan, PlanMismatchError, async_worker,
+                             check_replay_plan, local, replay, seed_parallel)
+
+__all__ = [
+    "ExecPlan", "PlanMismatchError", "StepProgram",
+    "apply_group_update", "apply_group_updates", "as_step_program",
+    "async_worker", "check_replay_plan", "group_key", "group_stream_key",
+    "local", "replay", "seed_parallel", "slice_group",
+]

@@ -1,0 +1,467 @@
+"""``StepProgram`` — one mesh-aware ZO step engine for every execution plan.
+
+The repo used to hand-roll four step builders (the facade's local loop,
+seed-parallel collectives, the async gossip worker, ledger replay), and the
+scaling-critical ones bypassed the perturbation-backend layer entirely.  The
+engine collapses them: a ``StepProgram`` lowers any ``repro.zo`` optimizer
+(spsa, n_spsa, one_point, rescaled_spsa, fzoo, plus any transform chain) onto
+an :mod:`repro.exec.plan` and routes **every** parameter write through
+``PerturbBackend`` (``perturb`` / ``perturb_many`` / ``apply_rank1``) — never
+through raw key chains.
+
+The one seed schedule (``group_key``): stream g of step t is
+``fold_in(step_key(base, t), g)`` when ``n_groups > 1``, the unfolded step
+key when ``n_groups == 1``.  This is exactly the local facade's per-seed fold,
+so:
+
+* ``seed_parallel(1)`` is **bitwise-identical** to ``local`` (test-enforced
+  for spsa and fzoo on the xla backend);
+* a local n-SPSA run, a seed-parallel run, and an async staleness-0 round
+  with the same ``n_groups`` record interchangeable ledger entries;
+* ``apply_group_update`` is the ONE write path shared by the live
+  seed-parallel step, async contribution application, and ledger replay —
+  identical floats by construction, which is what makes a ledger written
+  under any plan replay under ``replay()``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.exec import plan as plan_mod
+from repro.exec.plan import ExecPlan, check_replay_plan
+from repro.perturb import StreamRef, check_replay_backend, get_backend, step_key
+from repro.tree_utils import PyTree
+from repro.zo.base import TransformCtx, Updates, ZOState
+from repro.zo.presets import as_zo_optimizer
+from repro.zo.updates import apply_rank1_batch
+
+
+# --------------------------------------------------------------------------- #
+# The one seed schedule
+# --------------------------------------------------------------------------- #
+def group_key(skey0: jax.Array, group: int, n_groups: int) -> jax.Array:
+    """Stream ``group`` of a step: fold when there are several streams, the
+    unfolded step key when there is one (== the local facade's schedule)."""
+    return jax.random.fold_in(skey0, group) if n_groups > 1 else skey0
+
+
+def group_stream_key(base_key: jax.Array, step, group: int,
+                     n_groups: int) -> jax.Array:
+    """run key → step t → group g, composed from the canonical folds."""
+    return group_key(step_key(base_key, step), group, n_groups)
+
+
+# --------------------------------------------------------------------------- #
+# The one write path (live seed-parallel step == async apply == replay)
+# --------------------------------------------------------------------------- #
+def apply_group_update(params: PyTree, skey0: jax.Array, group: int,
+                       n_groups: int, coeff, decay_term, batch_seeds: int,
+                       dist: str, backend) -> PyTree:
+    """Apply one group's rank-1 update(s) through the backend primitive.
+
+    ``coeff`` is the fully η-scaled coefficient — a scalar, or the (B,)
+    per-stream vector of a batched-seed estimator (``apply_rank1_batch``
+    divides by B and folds the per-stream keys itself)."""
+    gkey = group_key(skey0, group, n_groups)
+    if batch_seeds == 1:
+        return backend.apply_rank1(params, StreamRef(gkey), coeff, decay_term,
+                                   dist)
+    return apply_rank1_batch(params, gkey, coeff, decay_term, dist,
+                             backend=backend)
+
+
+def apply_group_updates(params: PyTree, skey0: jax.Array, coeffs: Sequence,
+                        decay_term, n_groups: int, batch_seeds: int,
+                        dist: str, backend) -> PyTree:
+    """All groups of one step, in group order; decoupled decay applied once,
+    on group 0 (matching ``add_weight_decay``'s seed-0 rule)."""
+    p = params
+    for g in range(n_groups):
+        p = apply_group_update(p, skey0, g, n_groups, coeffs[g],
+                               decay_term if g == 0 else 0.0,
+                               batch_seeds, dist, backend)
+    return p
+
+
+def slice_group(batch, group: int, n_groups: int):
+    """Slice ``group``'s shard of the global batch (leading-dim split);
+    identity when there is a single group (bitwise parity with local).
+    Leading dims must divide evenly — shapes are known at trace time, and
+    silently dropping trailing rows would train on truncated data."""
+    if n_groups == 1 or batch is None:
+        return batch
+
+    def cut(x):
+        if jnp.ndim(x) == 0:
+            return x                      # scalar leaves ride along unsliced
+        if x.shape[0] % n_groups:
+            raise ValueError(
+                f"batch leading dim {x.shape[0]} does not divide into "
+                f"n_groups={n_groups} slices; {x.shape[0] % n_groups} "
+                "trailing row(s) would silently never be evaluated — pad or "
+                "resize the batch")
+        per = x.shape[0] // n_groups
+        return jax.lax.dynamic_slice_in_dim(x, group * per, per, axis=0)
+
+    return jax.tree_util.tree_map(cut, batch)
+
+
+# --------------------------------------------------------------------------- #
+# The engine
+# --------------------------------------------------------------------------- #
+class StepProgram:
+    """Lower a ``repro.zo`` optimizer onto an execution plan.
+
+    >>> prog = StepProgram(zo.fzoo(lr=1e-6, batch_seeds=8),
+    ...                    exec.seed_parallel(4))
+    >>> state = prog.init(params, seed=0)
+    >>> step = jax.jit(prog.step_fn(loss_fn), donate_argnums=(0,))
+    >>> params, state, metrics = step(params, state, batch)
+
+    Non-ZO optimizers (the backprop baselines) are accepted for the ``local``
+    plan only and pass straight through (``meta`` reports no plan
+    coordinates, matching their absent seed schedule).
+    """
+
+    def __init__(self, optimizer, plan: Optional[ExecPlan] = None):
+        self.plan = plan if plan is not None else plan_mod.local()
+        if callable(getattr(optimizer, "replay_update", None)) or \
+                getattr(optimizer, "estimator", None) is not None or \
+                (hasattr(optimizer, "eps") and hasattr(optimizer, "dist")):
+            self.opt = as_zo_optimizer(optimizer)
+            self.is_zo = True
+        else:
+            self.opt = optimizer
+            self.is_zo = False
+            if self.plan.kind != "local":
+                raise ValueError(
+                    f"{type(optimizer).__name__} is not a seed-replayable ZO "
+                    f"optimizer; only the local plan can run it "
+                    f"(got {self.plan.kind!r})")
+            return
+        est = self.opt.estimator
+        n = self.plan.n_groups
+        if self.plan.kind in ("seed_parallel", "async_worker"):
+            if est.n_seeds not in (1, n):
+                raise ValueError(
+                    f"estimator {est.name!r} declares n_seeds={est.n_seeds} "
+                    f"but the {self.plan.kind} plan runs n_groups={n}; the "
+                    "plan's groups ARE the seed streams — use n_seeds=1 or "
+                    f"n_seeds={n}")
+            if self.opt.info.get("applier") and \
+                    not (self.plan.kind == "seed_parallel" and n == 1):
+                raise ValueError(
+                    "applier transforms (scale_by_zo_adam / trace) "
+                    "materialize their update from the live tree and "
+                    "g-history; group updates are wire-replayable rank-1 "
+                    "applications — run appliers under the local plan")
+            if not est.replayable and \
+                    not (self.plan.kind == "seed_parallel" and n == 1):
+                raise ValueError(
+                    f"the {est.name!r} estimator updates along D·z "
+                    "(Definition 6), which the plan's rank-1 group updates "
+                    "cannot reproduce; use modify_expectation=True or the "
+                    "local plan")
+            if n > 1 and self.opt.info.get("lr_at") is None:
+                # group plans (and their ledger/wire replay) reconstruct the
+                # update coefficient as (η/n)·g from the recorded schedule;
+                # a chain without scale_by_schedule records no η, so the
+                # live coefficient (raw g) would silently diverge from the
+                # reconstructed one
+                raise ValueError(
+                    f"the {self.plan.kind} plan needs a transform chain with "
+                    "scale_by_schedule (its group updates and their replay "
+                    "reconstruct coefficients as (η/n)·g from the recorded "
+                    "learning rate); compose via zo.mezo/zo.fzoo or add "
+                    "transforms.scale_by_schedule to the chain")
+
+    # -- identity ----------------------------------------------------------- #
+    @property
+    def n_groups(self) -> Optional[int]:
+        """Independent seed streams folded per step at the group level: the
+        plan's groups, or — under the local plan — the estimator's
+        interleaved n_seeds (same fold schedule, so the artifacts are
+        interchangeable)."""
+        if not self.is_zo:
+            return None
+        if self.plan.kind == "local":
+            return int(self.opt.estimator.n_seeds)
+        return int(self.plan.n_groups)
+
+    @property
+    def batch_seeds(self) -> Optional[int]:
+        return self.opt.batch_seeds if self.is_zo else None
+
+    @property
+    def backend_name(self) -> Optional[str]:
+        return self.opt.backend_name if self.is_zo else None
+
+    @property
+    def meta(self) -> dict:
+        """The artifact stamp: everything a resume/replay needs to re-derive
+        (or refuse to re-derive) the run's seed schedule."""
+        return {"perturb_backend": self.backend_name,
+                "batch_seeds": self.batch_seeds,
+                "exec_plan": self.plan.kind if self.is_zo else None,
+                "n_groups": self.n_groups}
+
+    # -- protocol delegation ------------------------------------------------ #
+    def init(self, params: Optional[PyTree] = None, *, seed: int = 0):
+        return self.opt.init(params, seed=seed)
+
+    def restore(self, state, step: int):
+        return self.opt.restore(state, step)
+
+    def step_fn(self, loss_fn) -> Callable:
+        if not self.is_zo or self.plan.kind == "local":
+            return self.opt.step_fn(loss_fn)
+        if self.plan.kind == "seed_parallel":
+            if self.plan.n_groups == 1:
+                # one group == one unfolded seed stream == the local plan;
+                # delegating makes the bitwise guarantee true by construction
+                return self.opt.step_fn(loss_fn)
+            return self._seed_parallel_step_fn(loss_fn)
+        if self.plan.kind == "async_worker":
+            raise ValueError(
+                "the async_worker plan has no monolithic step function — "
+                "drive it through repro.distributed.async_zo.AsyncZOWorker "
+                "(contribution_eval_fn / apply_contribution)")
+        raise ValueError(
+            "the replay plan is ledger-driven (no forward passes): call "
+            "StepProgram.replay(params0, ledger) instead of step_fn")
+
+    # -- seed-parallel lowering (n_groups > 1; n == 1 delegates to local) --- #
+    def _seed_parallel_step_fn(self, loss_fn) -> Callable:
+        opt = self.opt
+        est, tf = opt.estimator, opt.transform
+        n = self.plan.n_groups
+        backend = opt.backend
+        batch_seeds = opt.batch_seeds
+
+        def step(params: PyTree, state: ZOState, batch):
+            skey0 = step_key(state.base_key, state.step)
+            p = params
+            est_state, tf_state = state.est_state, state.tf_state
+            gs, losses, coeffs = [], [], []
+            aux: dict = {}
+            lr_metric = None
+            decay0 = 0.0
+            for g in range(n):
+                skey = group_key(skey0, g, n)
+                e = est.estimate(loss_fn, p, slice_group(batch, g, n), skey,
+                                 est_state)
+                est_state = e.est_state
+                ctx = TransformCtx(step=state.step, base_key=state.base_key,
+                                   key=skey, seed_index=g, n_seeds=n,
+                                   eps=est.eps, dist=est.dist,
+                                   restore=e.restore, backend=backend)
+                u, tf_state = tf.update(Updates(g=e.projected_grad), tf_state,
+                                        ctx)
+                if u.final_params is not None:
+                    # unreachable behind the __init__ applier guard; loud
+                    # (not silently dropped) if that guard is ever relaxed
+                    raise ValueError(
+                        "a transform materialized final_params under a "
+                        "multi-group plan; group updates are rank-1 "
+                        "applications and cannot honor it")
+                # evaluations stay at the step's center; directions are
+                # averaged afterwards through the shared write path
+                p = e.restore()
+                coeffs.append(u.coeff if u.coeff is not None else u.g)
+                if g == 0:
+                    decay0 = u.decay
+                gs.append(u.g)
+                losses.append(e.loss)
+                if e.aux:
+                    aux.update(e.aux)
+                lr_metric = u.lr
+            p = apply_group_updates(p, skey0, coeffs, decay0, n,
+                                    batch_seeds, est.dist, backend)
+            g_mean = jnp.mean(jnp.stack(gs))
+            if lr_metric is None:
+                lr_metric = jnp.float32(1.0)
+            new_state = ZOState(state.step + 1, state.base_key,
+                                est_state, tf_state, g_mean)
+            metrics = {"loss": jnp.mean(jnp.stack(losses)),
+                       "projected_grad": g_mean, "lr": lr_metric, **aux,
+                       "projected_grads": jnp.stack(gs).reshape(-1)}
+            return p, new_state, metrics
+
+        return step
+
+    def shardings(self, params_like: PyTree, batch_like=None,
+                  state_like=None):
+        """(params, state, batch) ``in_shardings`` for jitting the step under
+        the plan's mesh: parameters through the ``sharding.py`` rule engine,
+        optimizer state replicated when ``state_like`` is given (``None`` is
+        returned otherwise — GSPMD then picks the layout; the state is a few
+        scalars, so either is safe), batch leaves split on their leading axis
+        over the mesh's batch axes — MeZO's cross-device traffic stays the
+        loss scalars."""
+        mesh = self.plan.mesh
+        if mesh is None:
+            raise ValueError("this plan carries no mesh; construct it as "
+                             "exec.seed_parallel(n, mesh=...)")
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.sharding import batch_axes, param_shardings
+        pshard = param_shardings(params_like, mesh)
+        sshard = None
+        if state_like is not None:
+            sshard = jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P()), state_like)
+        ba = batch_axes(mesh) or None
+        if batch_like is None:
+            bshard = None
+        else:
+            bshard = jax.tree_util.tree_map(
+                lambda x: NamedSharding(
+                    mesh, P(ba if ba and len(ba) > 1 else (ba[0] if ba else None))
+                    if jnp.ndim(x) else P()),
+                batch_like)
+        return pshard, sshard, bshard
+
+    # -- async building blocks (consumed by distributed.async_zo) ----------- #
+    def contribution_eval_fn(self, loss_fn, worker: int,
+                             est_state=None) -> Callable:
+        """jit-able ``fn(params, base_key, step, batch) -> (g, lr, loss)``:
+        evaluate this worker's seed group of one step through the estimator
+        and the scalar transform chain (what goes on the wire is the
+        post-transform g — the same scalar a seed-parallel step records)."""
+        opt = self.opt
+        est, tf = opt.estimator, opt.transform
+        n = self.plan.n_groups
+
+        def fn(params, base_key, step, batch):
+            skey = group_stream_key(base_key, step, worker, n)
+            e = est.estimate(loss_fn, params, batch, skey,
+                             est_state if est_state is not None
+                             else est.init(None, base_key))
+            ctx = TransformCtx(step=step, base_key=base_key, key=skey,
+                               seed_index=worker, n_seeds=n, eps=est.eps,
+                               dist=est.dist, restore=e.restore,
+                               backend=opt.backend)
+            u, _ = tf.update(Updates(g=e.projected_grad), tf.init(None), ctx)
+            lr = u.lr if u.lr is not None else jnp.float32(1.0)
+            return u.g, lr, e.loss
+
+        return fn
+
+    def apply_contribution_fn(self) -> Callable:
+        """jit-able ``fn(params, skey0, group, g, lr, decay_on) -> params``
+        applying one group's contribution for the step whose key is ``skey0``
+        — the identical floats a ledger replay of that group performs.
+        ``group`` stays a DYNAMIC (traced) argument: it only feeds the
+        ``fold_in`` inside ``group_key``, so one compiled apply kernel serves
+        every worker id (baking it static would retrace once per peer)."""
+        opt = self.opt
+        n = self.plan.n_groups
+        batch_seeds = opt.batch_seeds
+        dist = opt.estimator.dist
+        backend = opt.backend
+        wd = opt.weight_decay
+
+        def fn(params, skey0, group, g, lr, decay_on):
+            coeff = (lr / n) * g
+            decay = (lr * wd) * decay_on
+            return apply_group_update(params, skey0, group, n, coeff, decay,
+                                      batch_seeds, dist, backend)
+
+        return fn
+
+    # -- ledger replay ------------------------------------------------------ #
+    def replay(self, params0: PyTree, ledger, from_idx: int = 0,
+               to_idx: Optional[int] = None) -> PyTree:
+        """Reconstruct parameters from a scalar ledger — no forward passes,
+        no data (paper §2.1), under ANY plan's records.
+
+        Ledger-coordinate checks mirror the artifact stamps: backend
+        (``BackendMismatchError``), batch_seeds, and n_groups
+        (``PlanMismatchError``).  A program built on the ``replay()`` plan is
+        ledger-driven and adopts the ledger's n_groups; any other plan must
+        match it (that is the resume path, where training continues under the
+        active schedule)."""
+        opt = self.opt
+        check_replay_backend(getattr(ledger, "backend", None),
+                             self.backend_name, "trajectory ledger")
+        led_bs = int(getattr(ledger, "batch_seeds", 1))
+        if len(ledger.steps) and led_bs != int(opt.batch_seeds):
+            raise ValueError(
+                f"trajectory ledger records {led_bs} seed scalar(s) per "
+                f"group but the optimizer evaluates batch_seeds="
+                f"{opt.batch_seeds}; the seed fold schedule (and the "
+                "per-step g shape) differ, so replay would misapply the "
+                "updates — replay with a matching fzoo(batch_seeds=...) "
+                "composition")
+        n = led_n = int(getattr(ledger, "n_groups", 1))
+        if self.plan.kind != "replay":    # the replay plan is ledger-driven
+            check_replay_plan(led_n, self.n_groups, "trajectory ledger",
+                              recorded_kind=getattr(ledger, "exec_plan", None),
+                              active_kind=self.plan.kind)
+        if n > 1:
+            if opt.info.get("applier"):
+                raise ValueError(
+                    f"{opt.name}: scalar-ledger replay cannot reproduce "
+                    "applier transforms (scale_by_zo_adam / trace); resume "
+                    "from a full state checkpoint instead of a ledger tail")
+            if not opt.estimator.replayable:
+                raise ValueError(
+                    f"{opt.name}: the {opt.estimator.name!r} estimator "
+                    "updates along D·z (Definition 6), which a (seed, g, lr) "
+                    "ledger entry cannot reproduce; resume from a full state "
+                    "checkpoint")
+            if opt.info.get("lr_at") is None:
+                raise ValueError(
+                    f"{opt.name}: multi-group replay reconstructs "
+                    "coefficients as (η/n)·g from the recorded learning "
+                    "rate, but this transform chain has no "
+                    "scale_by_schedule — the live step applied raw g, which "
+                    "a (seed, g, lr) entry cannot re-scale; resume from a "
+                    "full state checkpoint")
+        base_key = jax.random.PRNGKey(ledger.base_seed)
+        to_idx = len(ledger.steps) if to_idx is None else to_idx
+        batch_seeds = int(opt.batch_seeds)
+        dist = opt.estimator.dist if n > 1 else None
+        backend = opt.backend if n > 1 else None
+        wd = opt.weight_decay if n > 1 else None
+
+        @jax.jit
+        def one(params, step, g, lr):
+            skey0 = step_key(base_key, step)
+            if n == 1:
+                # single-stream entries: the optimizer's own replay primitive
+                # (bitwise with the local and seed_parallel(1) plans)
+                return opt.replay_update(params, skey0, g, lr)
+            g_mat = jnp.reshape(jnp.asarray(g), (n, batch_seeds))
+            coeffs = [(lr / n) * (g_mat[i] if batch_seeds > 1
+                                  else g_mat[i, 0]) for i in range(n)]
+            return apply_group_updates(params, skey0, coeffs, lr * wd, n,
+                                       batch_seeds, dist, backend)
+
+        p = params0
+        for i in range(from_idx, to_idx):
+            p = one(p, jnp.int32(ledger.steps[i]),
+                    jnp.float32(ledger.grads[i]), jnp.float32(ledger.lrs[i]))
+        return p
+
+    def replay_update(self, params, skey, g, lr):
+        """Single-entry delegation (kept for protocol compatibility)."""
+        return self.opt.replay_update(params, skey, g, lr)
+
+
+def as_step_program(optimizer, plan: Optional[ExecPlan] = None) -> StepProgram:
+    """Accept a ``StepProgram`` or anything ``as_zo_optimizer`` accepts (a
+    protocol conformer, a legacy config, a backprop baseline) — the
+    compatibility seam that lets the training loop, checkpoint recovery, and
+    trajectory replay consume the engine while old call sites still pass
+    bare optimizers."""
+    if isinstance(optimizer, StepProgram):
+        if plan is not None and plan != optimizer.plan:
+            raise ValueError("optimizer is already a StepProgram with a "
+                             f"{optimizer.plan.kind!r} plan; cannot re-plan "
+                             f"it as {plan.kind!r} — build a new StepProgram")
+        return optimizer
+    return StepProgram(optimizer, plan)

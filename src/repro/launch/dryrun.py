@@ -28,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import flops as flops_lib
 from repro.analysis import roofline as roofline_lib
+from repro import exec as zexec
 from repro import zo
 from repro.distributed.sharding import (infer_batch_spec,
                                         make_activation_resolver,
@@ -81,7 +82,8 @@ def replicated_tree(tree, mesh):
 
 def _compile_case(cfg, b, cell, mesh, donate: bool = True,
                   backend: str = "xla", estimator: str = "spsa",
-                  batch_seeds: int = 8):
+                  batch_seeds: int = 8, exec_plan: str = "local",
+                  n_groups: int = 1):
     """Lower + compile the cell's step function; returns the compiled exe."""
     specs = b.input_specs(cell)
     params_sds = b.param_shapes()
@@ -99,9 +101,15 @@ def _compile_case(cfg, b, cell, mesh, donate: bool = True,
         else:
             opt = zo.mezo(lr=1e-6, eps=1e-3, estimator=estimator,
                           backend=backend)
-        state_sds = jax.eval_shape(lambda: opt.init(seed=0))
+        # the engine lowers the same composition onto the requested plan;
+        # the dry-run proves each (estimator × backend × plan) cell COMPILES
+        # on the production meshes, not just the blessed local path
+        plan = (zexec.seed_parallel(n_groups, mesh=mesh)
+                if exec_plan == "seed_parallel" else zexec.local())
+        prog = zexec.StepProgram(opt, plan)
+        state_sds = jax.eval_shape(lambda: prog.init(seed=0))
         sshard = replicated_tree(state_sds, mesh)
-        step = opt.step_fn(b.loss_fn())
+        step = prog.step_fn(b.loss_fn())
         jitted = jax.jit(step, in_shardings=(pshard, sshard, bshard),
                          donate_argnums=(0,) if donate else ())
         args = (params_sds, state_sds, specs)
@@ -157,7 +165,8 @@ def calibrate_loop_costs(arch, cell, mesh, overrides: dict):
 def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
              optimizer: str = "mezo", verbose: bool = True,
              calibrate: bool = True, backend: str = "xla",
-             estimator: str = "spsa", batch_seeds: int = 8) -> dict:
+             estimator: str = "spsa", batch_seeds: int = 8,
+             exec_plan: str = "local", n_groups: int = 1) -> dict:
     arch = all_archs()[arch_id]
     cfg = arch.cfg
     if overrides:
@@ -168,13 +177,16 @@ def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
            "chips": chips, "optimizer": optimizer,
            "perturb_backend": backend, "estimator": estimator,
            "batch_seeds": batch_seeds if estimator == "fzoo" else 1,
+           "exec_plan": exec_plan,
+           "n_groups": n_groups if exec_plan == "seed_parallel" else 1,
            "overrides": {k: str(v) for k, v in overrides.items()},
            "status": "ok"}
     t0 = time.time()
     try:
         compiled = _compile_case(cfg, b, cell, mesh, backend=backend,
                                  estimator=estimator,
-                                 batch_seeds=batch_seeds)
+                                 batch_seeds=batch_seeds,
+                                 exec_plan=exec_plan, n_groups=n_groups)
         t_compile = time.time() - t0
         flops_raw, hbm_raw, coll_raw, coll_detail = _cost_triple(compiled)
         rec["raw"] = {"flops": flops_raw, "hbm_bytes": hbm_raw,
@@ -252,6 +264,11 @@ def main():
     ap.add_argument("--backend", default="xla",
                     choices=["xla", "pallas", "pallas-interpret"],
                     help="perturbation backend for the train cells")
+    ap.add_argument("--exec-plan", default="local",
+                    choices=["local", "seed_parallel"],
+                    help="execution plan for the train cells (repro.exec)")
+    ap.add_argument("--n-groups", type=int, default=2,
+                    help="seed groups for --exec-plan seed_parallel")
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
@@ -311,7 +328,9 @@ def main():
                                    calibrate=(mesh_name == "single"),
                                    backend=args.backend,
                                    estimator=args.estimator,
-                                   batch_seeds=args.batch_seeds)
+                                   batch_seeds=args.batch_seeds,
+                                   exec_plan=args.exec_plan,
+                                   n_groups=args.n_groups)
                     if args.tag:
                         rec["tag"] = args.tag
                     f.write(json.dumps(rec) + "\n")

@@ -38,9 +38,14 @@ def main():
     if args.ledger and os.path.exists(args.ledger):
         with open(args.ledger, "rb") as f:
             led = TrajectoryLedger.from_bytes(f.read())
-        # the ledger records which perturbation backend generated its z
-        # streams; replay with the same one (mismatch would raise)
-        params = replay(params, led, zo.mezo(backend=led.backend))
+        # the ledger header records the run's full seed-schedule coordinates
+        # (backend, batch_seeds, n_groups); build the matching composition —
+        # replay is ledger-driven, mismatches would raise
+        if led.batch_seeds > 1:
+            opt = zo.fzoo(batch_seeds=led.batch_seeds, backend=led.backend)
+        else:
+            opt = zo.mezo(backend=led.backend)
+        params = replay(params, led, opt)
         print(f"[serve] replayed {len(led)} ledger steps "
               f"({os.path.getsize(args.ledger)} bytes, "
               f"backend={led.backend})")

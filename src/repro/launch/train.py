@@ -13,6 +13,7 @@ import argparse
 
 import jax
 
+from repro import exec as zexec
 from repro import zo
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import TrajectoryLedger
@@ -45,6 +46,19 @@ def main():
                     choices=["xla", "pallas", "pallas-interpret"],
                     help="perturbation backend (repro.perturb): xla threefry "
                          "or the VMEM-fused pallas kernel")
+    ap.add_argument("--exec-plan", default="local",
+                    choices=["local", "seed_parallel"],
+                    help="execution plan (repro.exec): 'local' is the "
+                         "jit+donate loop step; 'seed_parallel' splits the "
+                         "batch into --n-groups slices, evaluates seed "
+                         "group g on slice g at the step's center, and "
+                         "averages the n rank-1 directions (cross-device "
+                         "traffic: loss scalars only)")
+    ap.add_argument("--n-groups", type=int, default=1,
+                    help="seed groups per step for --exec-plan seed_parallel")
+    ap.add_argument("--seed-parallel", type=int, default=None,
+                    help="DEPRECATED alias for "
+                         "--exec-plan seed_parallel --n-groups N")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="use the arch's reduced smoke config")
@@ -80,6 +94,21 @@ def main():
     else:
         opt = Adam(AdamConfig(lr=args.lr or 1e-3, sgd=True,
                               total_steps=args.steps))
+
+    if args.seed_parallel is not None:       # deprecated alias
+        print("[train] --seed-parallel is deprecated; use "
+              "--exec-plan seed_parallel --n-groups N")
+        args.exec_plan, args.n_groups = "seed_parallel", args.seed_parallel
+    if args.exec_plan == "seed_parallel":
+        if args.optimizer != "mezo":
+            raise SystemExit("--exec-plan seed_parallel needs a "
+                             "seed-replayable ZO optimizer (--optimizer mezo,"
+                             " any --estimator)")
+        if args.batch % args.n_groups:
+            raise SystemExit(f"--batch {args.batch} must divide evenly into "
+                             f"--n-groups {args.n_groups} slices")
+        opt = zexec.StepProgram(opt, zexec.seed_parallel(args.n_groups))
+        print(f"[train] exec plan: seed_parallel(n_groups={args.n_groups})")
 
     ckpt = (CheckpointManager(args.ckpt_dir, interval=args.ckpt_interval)
             if args.ckpt_dir else None)

@@ -67,7 +67,7 @@ estimator × transform composition picks them up through the same kwarg.
 from repro.perturb.base import (BackendMismatchError, PerturbBackend,
                                 available_backends, check_replay_backend,
                                 get_backend, register_backend)
-from repro.perturb.stream import StreamRef, as_stream_ref
+from repro.perturb.stream import StreamRef, as_stream_ref, step_key
 from repro.perturb.xla import XLABackend
 
 register_backend("xla", XLABackend)
@@ -99,5 +99,5 @@ __all__ = [
     "BackendMismatchError", "PerturbBackend", "StreamRef", "as_stream_ref",
     "XLABackend", "PallasBackend",
     "available_backends", "check_replay_backend", "get_backend",
-    "register_backend",
+    "register_backend", "step_key",
 ]

@@ -35,6 +35,18 @@ import jax.numpy as jnp
 _LEAF_STRIDE = 0x1000003
 
 
+def step_key(base_key: jax.Array, step) -> jax.Array:
+    """Per-step key: the paper's 'sample random seed s' for step t.
+
+    THE canonical definition — ``repro.core.perturb.step_key`` and
+    ``repro.perturb.xla.step_key`` are re-exports of this function, and
+    ``StreamRef.derive(base_key, step)`` wraps exactly this fold (bitwise
+    equality is contract-tested), so every execution plan, ledger replayer,
+    and backend derives step seeds from one place.
+    """
+    return jax.random.fold_in(base_key, step)
+
+
 class StreamRef(NamedTuple):
     """Identity of one per-seed perturbation stream.
 
@@ -49,7 +61,7 @@ class StreamRef(NamedTuple):
     def derive(cls, base_key: jax.Array, step,
                seed_index: Optional[int] = None) -> "StreamRef":
         """run key → step t → (optional) seed j, the legacy fold chain."""
-        key = jax.random.fold_in(base_key, step)
+        key = step_key(base_key, step)
         if seed_index is not None:
             key = jax.random.fold_in(key, seed_index)
         return cls(key)

@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.perturb.base import PerturbBackend
-from repro.perturb.stream import StreamRef
+from repro.perturb.stream import StreamRef, step_key  # noqa: F401  (canonical
+# definition lives in repro.perturb.stream; re-exported here for the legacy
+# core.perturb shim surface)
 from repro.tree_utils import PyTree, tree_map_with_index, tree_sq_norm, tree_size
 
 Distribution = Literal["gaussian", "rademacher", "sphere"]
@@ -36,11 +38,6 @@ Distribution = Literal["gaussian", "rademacher", "sphere"]
 def leaf_key(key: jax.Array, leaf_idx: int) -> jax.Array:
     """Stable per-leaf PRNG key."""
     return jax.random.fold_in(key, leaf_idx)
-
-
-def step_key(base_key: jax.Array, step) -> jax.Array:
-    """Per-step key: the paper's 'sample random seed s' for step t."""
-    return jax.random.fold_in(base_key, step)
 
 
 def sample_leaf_z(key: jax.Array, leaf: jnp.ndarray, dist: Distribution = "gaussian",

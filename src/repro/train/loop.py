@@ -9,15 +9,22 @@ Responsibilities:
   * straggler/failure hooks: a HeartbeatMonitor ABC the launcher wires to
     its process manager; ``FailureInjector`` drives the chaos tests.
 
-The loop is optimizer-agnostic: ``optimizer`` is anything conforming to the
-``repro.zo.Optimizer`` protocol — ``init(params, *, seed)`` /
-``step_fn(loss_fn)`` / ``restore(state, step)`` — which covers the ZO
-compositions (``zo.mezo(...)``, ``zo.mezo_adam(...)``, the deprecated
+The loop is execution-engine-aware but optimizer-agnostic: ``optimizer`` is a
+``repro.exec.StepProgram`` (any ``repro.zo`` composition lowered onto any
+execution plan — local, seed_parallel, ...) or a bare ``repro.zo.Optimizer``
+protocol conformer, which is wrapped onto the local plan.  That covers the ZO
+compositions (``zo.mezo(...)``, ``zo.fzoo(...)``, the deprecated
 ``MeZO``/``MeZOAdam``/``MeZOVariant`` shims) and the backprop baselines
 (``train.adam.Adam``) alike.  There is no optimizer-type dispatch here:
 resume bookkeeping goes through the protocol's ``restore``, and ledger
 recording/recovery is enabled purely by passing a ``ledger`` (which requires
 an optimizer whose metrics expose ``projected_grad``/``lr`` — i.e. a ZO one).
+
+Every artifact is stamped with the program's seed-schedule coordinates
+(``perturb_backend``, ``batch_seeds``, ``exec_plan``, ``n_groups``); resuming
+under mismatched coordinates refuses (``BackendMismatchError`` /
+``PlanMismatchError``) instead of silently re-pairing recorded scalars with
+different z streams.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.trajectory import TrajectoryLedger
 from repro.data.pipeline import Pipeline
+from repro.exec import as_step_program, check_replay_plan
 from repro.perturb import check_replay_backend
 from repro.tree_utils import PyTree
 
@@ -80,21 +88,31 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
           log_every: int = 50, donate: bool = True,
           eval_fn: Optional[Callable] = None, eval_every: int = 0,
           verbose: bool = False, seed: int = 0) -> TrainResult:
-    """Run (or resume) a training job.  ``optimizer`` is any
-    ``repro.zo.Optimizer`` protocol conformer."""
-    opt_state = optimizer.init(params, seed=seed)
+    """Run (or resume) a training job.  ``optimizer`` is a
+    ``repro.exec.StepProgram`` or any ``repro.zo.Optimizer`` protocol
+    conformer (wrapped onto the local execution plan)."""
+    program = as_step_program(optimizer)
+    opt_state = program.init(params, seed=seed)
 
-    # the optimizer's perturbation backend (None for non-ZO optimizers) is
-    # stamped into every artifact so replay under the wrong backend — which
-    # would regenerate *different* z and silently diverge — fails loudly
-    backend_name = getattr(optimizer, "backend_name", None)
-    batch_seeds = getattr(optimizer, "batch_seeds", None)
+    # the program's seed-schedule coordinates (None for non-ZO optimizers)
+    # are stamped into every artifact so replay under the wrong backend or
+    # execution plan — which would regenerate *different* z or re-pair the
+    # recorded scalars with different streams — fails loudly
+    meta = program.meta
+    backend_name = meta["perturb_backend"]
     if ledger is not None and backend_name is not None:
         if len(ledger) == 0:
             ledger.backend = backend_name
+            ledger.batch_seeds = int(meta["batch_seeds"])
+            ledger.exec_plan = meta["exec_plan"]
+            ledger.n_groups = int(meta["n_groups"])
         else:
             check_replay_backend(ledger.backend, backend_name,
                                  "the provided trajectory ledger")
+            check_replay_plan(ledger.n_groups, meta["n_groups"],
+                              "the provided trajectory ledger",
+                              recorded_kind=ledger.exec_plan,
+                              active_kind=meta["exec_plan"])
 
     start_step = 0
     # ---- resume ---------------------------------------------------------- #
@@ -104,14 +122,19 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             check_replay_backend(restored["meta"].get("perturb_backend"),
                                  backend_name, "checkpoint")
             ckpt_bs = restored["meta"].get("batch_seeds")
-            if ckpt_bs is not None and batch_seeds is not None \
-                    and int(ckpt_bs) != int(batch_seeds):
+            if ckpt_bs is not None and meta["batch_seeds"] is not None \
+                    and int(ckpt_bs) != int(meta["batch_seeds"]):
                 raise ValueError(
                     f"checkpoint was written by an optimizer with "
                     f"batch_seeds={ckpt_bs} but the active optimizer uses "
-                    f"batch_seeds={batch_seeds}; the seed fold schedule (and "
-                    "the ledger's per-step record shape) differ — resume "
-                    "with a matching fzoo(batch_seeds=...) composition")
+                    f"batch_seeds={meta['batch_seeds']}; the seed fold "
+                    "schedule (and the ledger's per-step record shape) "
+                    "differ — resume with a matching fzoo(batch_seeds=...) "
+                    "composition")
+            check_replay_plan(restored["meta"].get("n_groups"),
+                              meta["n_groups"], "checkpoint",
+                              recorded_kind=restored["meta"].get("exec_plan"),
+                              active_kind=meta["exec_plan"])
             params = restored["params"]
             opt_state = restored["opt_state"] if restored["opt_state"] is not None else opt_state
             start_step = restored["step"]
@@ -119,18 +142,20 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
                 saved = ckpt.load_ledger()
                 if saved is not None and len(saved) and saved.steps[-1] >= start_step:
                     # ledger replay advances params past the tensor ckpt;
-                    # recovery consumes the optimizer protocol directly
+                    # recovery consumes the execution engine directly
                     params, start_step = ckpt.recover_via_ledger(
-                        params, start_step, optimizer)
+                        params, start_step, program)
                     ledger.steps = saved.steps
                     ledger.grads = saved.grads
                     ledger.lrs = saved.lrs
                     ledger.batch_seeds = saved.batch_seeds
+                    ledger.exec_plan = saved.exec_plan
+                    ledger.n_groups = saved.n_groups
             # realign the optimizer's step counter (seed source + lr index)
             # with wherever resume landed — the protocol's resume hook
-            opt_state = optimizer.restore(opt_state, start_step)
+            opt_state = program.restore(opt_state, start_step)
 
-    step_fn = jax.jit(optimizer.step_fn(loss_fn),
+    step_fn = jax.jit(program.step_fn(loss_fn),
                       donate_argnums=(0,) if donate else ())
     losses = []
     t0 = time.time()
@@ -145,8 +170,9 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
                     "ledger recording requires a ZO optimizer whose step "
                     "metrics expose 'projected_grad'/'lr'; "
                     f"{type(optimizer).__name__} does not")
-            # batched-seed estimators expose the per-seed (B,) vector —
-            # record it so replay can refold the B rank-1 updates
+            # multi-stream steps (batched seeds, seed-parallel groups,
+            # interleaved n-SPSA) expose the per-stream vector — record it so
+            # replay can refold the rank-1 updates stream by stream
             g_rec = metrics.get("projected_grads")
             if g_rec is None:
                 g_rec = float(metrics["projected_grad"])
@@ -156,9 +182,7 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             if ckpt is not None:
                 ckpt.save_ledger(ledger)
         if ckpt is not None:
-            ckpt.maybe_save(step + 1, params, opt_state,
-                            meta={"perturb_backend": backend_name,
-                                  "batch_seeds": batch_seeds})
+            ckpt.maybe_save(step + 1, params, opt_state, meta=meta)
         if monitor is not None:
             monitor.beat(step)
         if step % log_every == 0 or step == total_steps - 1:
@@ -170,8 +194,6 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             eval_fn(step + 1, params)
 
     if ckpt is not None:
-        ckpt.maybe_save(total_steps, params, opt_state,
-                        meta={"perturb_backend": backend_name,
-                              "batch_seeds": batch_seeds}, force=True)
+        ckpt.maybe_save(total_steps, params, opt_state, meta=meta, force=True)
     return TrainResult(params, opt_state, losses, total_steps - start_step,
                        start_step)

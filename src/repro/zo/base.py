@@ -23,8 +23,7 @@ from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checka
 import jax
 import jax.numpy as jnp
 
-from repro.core.perturb import step_key
-from repro.perturb import PerturbBackend, StreamRef, get_backend
+from repro.perturb import PerturbBackend, StreamRef, get_backend, step_key
 from repro.tree_utils import PyTree
 
 ZOLossFn = Callable[[PyTree, Any], jnp.ndarray]
@@ -346,7 +345,13 @@ class ZOOptimizer:
                                 est_state, tf_state, g_mean)
             metrics = {"loss": loss, "projected_grad": g_mean,
                        "lr": lr_metric, **aux}
-            if n == 1 and jnp.ndim(gs[0]) > 0:
+            if n > 1:
+                # interleaved n-SPSA: expose the per-seed scalars (fold
+                # schedule fold(skey0, j)) so the ledger records what the
+                # engine's group replay needs — one g per stream, flattened
+                # to the ledger's (n_groups·batch_seeds,) record shape
+                metrics["projected_grads"] = jnp.stack(gs).reshape(-1)
+            elif jnp.ndim(gs[0]) > 0:
                 # batched-seed estimator: expose the per-seed scalars so the
                 # ledger records what replay_update needs (one g per stream)
                 metrics["projected_grads"] = gs[0]

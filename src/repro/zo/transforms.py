@@ -28,8 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import schedules
-from repro.core.perturb import step_key
-from repro.perturb import StreamRef, get_backend
+from repro.perturb import StreamRef, get_backend, step_key
 from repro.tree_utils import PyTree, tree_map_with_index, tree_zeros_like
 from repro.zo.base import TransformCtx, Updates, ZOTransform
 
