@@ -21,6 +21,7 @@ import traceback
 BENCHES = [
     ("storage", "benchmarks.bench_storage"),
     ("perturb", "benchmarks.bench_perturb"),
+    ("select", "benchmarks.bench_select"),
     ("exec", "benchmarks.bench_exec"),
     ("wallclock", "benchmarks.bench_wallclock"),
     ("memory", "benchmarks.bench_memory"),
@@ -34,7 +35,7 @@ BENCHES = [
 
 # CI-per-commit subset: benches that finish in seconds at smoke scale and
 # leave results/*.json artifacts (the perf trajectory per commit).
-SMOKE_BENCHES = "storage,perturb,exec,estimators"
+SMOKE_BENCHES = "storage,perturb,select,exec,estimators"
 
 
 def main() -> None:

@@ -1,5 +1,9 @@
-"""MeZO × PEFT (paper §3 / App. E.5): fine-tune ONLY a LoRA or prefix tree
-with zeroth-order steps; the frozen base model is closed over.
+"""MeZO × PEFT on the unified selection path (paper §3 / App. E.5): the
+frozen base and the PEFT tree ride in ONE merged parameter tree
+(``peft.peft_params``) and a ``repro.select.peft(mode)`` selection scopes the
+optimizer to the PEFT subtree — the base leaves are never perturbed, never
+updated, never decayed (asserted below).  No tree-swap closures: full, LoRA,
+prefix, and block-cyclic sparse runs all use the same optimizer surface.
 
 Also demonstrates the paper's App. F.3 observation: MeZO's convergence rate
 is roughly independent of the number of tuned parameters (full vs LoRA vs
@@ -9,18 +13,18 @@ prefix), supporting the effective-rank theory.
 """
 import jax
 
-from repro import zo
+from repro import select, zo
 from repro.data.synthetic import PromptClassification
 from repro.models import bundle, peft
 from repro.models.config import ModelConfig
-from repro.tree_utils import tree_size
+from repro.tree_utils import tree_max_abs_diff, tree_size
 
 STEPS = 500
 BATCH = 32
 
 
-def run_variant(name, loss_fn, tree0, lr, eps):
-    opt = zo.mezo(lr=lr, eps=eps)
+def run_variant(name, loss_fn, tree0, lr, eps, selection=None):
+    opt = zo.mezo(lr=lr, eps=eps, selection=selection)
     state = opt.init(tree0, seed=0)
     step = jax.jit(opt.step_fn(loss_fn))
     t = tree0
@@ -29,7 +33,10 @@ def run_variant(name, loss_fn, tree0, lr, eps):
         t, state, m = step(t, state, task.batch_for_step(s, BATCH))
         if s % 50 == 0:
             losses.append(float(m["loss"]))
-    print(f"{name:12s} params={tree_size(tree0):8d}  "
+    sel = opt.selection
+    tuned = (tree_size(tree0) if sel is None
+             else sel.selected_size(tree0))
+    print(f"{name:12s} tuned={tuned:8d}/{tree_size(tree0):8d}  "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
     return t
 
@@ -45,12 +52,23 @@ if __name__ == "__main__":
     print("== MeZO full-parameter ==")
     run_variant("full", b.loss_fn(), base, lr=2e-4, eps=1e-3)
 
-    print("== MeZO (LoRA r=8) ==")
-    lora0 = peft.init_lora(cfg, jax.random.PRNGKey(1))
-    run_variant("lora", peft.lora_loss_fn(cfg, base), lora0, lr=1e-3, eps=1e-3)
+    print("== MeZO block-cyclic(4): ~1/4 of the tree perturbed per step ==")
+    run_variant("block_cyc4", b.loss_fn(), base, lr=2e-4, eps=1e-3,
+                selection=select.block_cyclic(4))
 
-    print("== MeZO (prefix m=5, real-activation init) ==")
+    print("== MeZO (LoRA r=8, merged tree + peft selection) ==")
+    lora0 = peft.init_lora(cfg, jax.random.PRNGKey(1))
+    merged = peft.peft_params(base, lora0, "lora")
+    out = run_variant("lora", peft.peft_loss_fn(cfg, "lora"), merged,
+                      lr=1e-3, eps=1e-3, selection=select.peft("lora"))
+    assert tree_max_abs_diff(out["base"], base) == 0.0, \
+        "selection must leave the frozen base bitwise-untouched"
+
+    print("== MeZO (prefix m=5, real-activation init, merged tree) ==")
     pre0 = peft.init_prefix_from_tokens(cfg, base, jax.random.PRNGKey(2), m=5)
-    run_variant("prefix", peft.prefix_loss_fn(cfg, base), pre0, lr=5e-3,
-                eps=1e-1)
-    print("(paper App. F.3: similar convergence despite 100-1000x fewer params)")
+    merged = peft.peft_params(base, pre0, "prefix")
+    out = run_variant("prefix", peft.peft_loss_fn(cfg, "prefix"), merged,
+                      lr=5e-3, eps=1e-1, selection=select.peft("prefix"))
+    assert tree_max_abs_diff(out["base"], base) == 0.0
+    print("(paper App. F.3: similar convergence despite 100-1000x fewer "
+          "params; base tree bitwise-frozen by the selection)")

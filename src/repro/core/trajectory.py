@@ -13,12 +13,14 @@ ledger tail to rejoin *bitwise-identically* (tested in
 tests/test_trajectory.py and tests/test_fault_tolerance.py).
 
 The header records the full seed-schedule coordinates of the run — the
-perturbation backend, ``batch_seeds`` (B streams per group, FZOO), and the
+perturbation backend, ``batch_seeds`` (B streams per group, FZOO), the
 execution plan (``exec_plan``, ``n_groups`` — seed-parallel groups, async
 workers, or local n-SPSA's interleaved seeds, which all share one fold
-schedule).  Replay refuses mismatched coordinates (``BackendMismatchError`` /
-``PlanMismatchError``) instead of silently pairing the recorded scalars with
-different z streams.
+schedule), and the parameter selection (``selection`` spec + ``sel_phase``
+block-schedule offset, ``repro.select``).  Replay refuses mismatched
+coordinates (``BackendMismatchError`` / ``PlanMismatchError`` /
+``SelectionMismatchError``) instead of silently pairing the recorded scalars
+with different z streams or a different parameter support.
 """
 from __future__ import annotations
 
@@ -35,6 +37,7 @@ _MAGIC = b"MZOL1\x00"          # legacy format: no backend record (implies xla)
 _MAGIC2 = b"MZOL2\x00"         # adds the perturbation-backend name
 _MAGIC3 = b"MZOL3\x00"         # adds batch_seeds (B per-seed scalars per step)
 _MAGIC4 = b"MZOL4\x00"         # adds the execution plan (exec_plan, n_groups)
+_MAGIC5 = b"MZOL5\x00"         # adds the parameter selection (spec + phase)
 
 
 @dataclasses.dataclass
@@ -51,17 +54,26 @@ class TrajectoryLedger:
     count and kind (seed-parallel batch groups, async workers, local n-SPSA
     seeds — one shared fold schedule).  Each step's record is the
     ``n_groups × batch_seeds`` per-stream g vector, which is exactly what the
-    engine's group replay needs to refold the rank-1 updates.  Plain B=1
-    single-group runs keep serializing as ``MZOL2`` (and batched single-group
-    runs as ``MZOL3``) so old readers keep working; ``MZOL4`` is written only
-    when ``n_groups > 1``.  All coordinates are fixed per ledger — they are
-    properties of the recorded run."""
+    engine's group replay needs to refold the rank-1 updates.
+
+    ``selection``/``sel_phase`` record the run's parameter selection
+    (``repro.select`` spec string + block-schedule phase offset): the
+    selection decides which leaves each recorded scalar's update touches, so
+    replay under a mismatched selection refuses (``SelectionMismatchError``).
+
+    Plain B=1 single-group full-selection runs keep serializing as ``MZOL2``
+    (batched single-group runs as ``MZOL3``, multi-group runs as ``MZOL4``)
+    so old readers keep working; ``MZOL5`` — the superset header — is written
+    only when the selection is not ``full``.  All coordinates are fixed per
+    ledger — they are properties of the recorded run."""
     base_seed: int
     grad_dtype: str = "float16"       # the paper's 2-bytes-per-step accounting
     backend: str = "xla"              # perturbation backend of the run
     batch_seeds: int = 1              # seed streams (g scalars) per group
     exec_plan: str = "local"          # execution plan kind of the run
     n_groups: int = 1                 # seed groups per step (plan-level)
+    selection: str = "full"           # parameter-selection spec of the run
+    sel_phase: int = 0                # selection block-schedule phase offset
     steps: list = dataclasses.field(default_factory=list)    # step indices
     grads: list = dataclasses.field(default_factory=list)    # projected grads
     lrs: list = dataclasses.field(default_factory=list)      # lr actually used
@@ -100,21 +112,28 @@ class TrajectoryLedger:
     # -- serialization ----------------------------------------------------- #
     def to_bytes(self) -> bytes:
         buf = io.BytesIO()
+        selected = self.selection != "full" or self.sel_phase != 0
         planned = self.n_groups > 1
         batched = self.batch_seeds > 1
-        buf.write(_MAGIC4 if planned else (_MAGIC3 if batched else _MAGIC2))
+        buf.write(_MAGIC5 if selected else
+                  (_MAGIC4 if planned else (_MAGIC3 if batched else _MAGIC2)))
         buf.write(struct.pack("<qi", self.base_seed,
                               1 if self.grad_dtype == "float16" else 4))
         bname = self.backend.encode("utf-8")
         buf.write(struct.pack("<i", len(bname)))
         buf.write(bname)
-        if planned or batched:
+        if selected or planned or batched:
             buf.write(struct.pack("<i", self.batch_seeds))
-        if planned:
+        if selected or planned:
             buf.write(struct.pack("<i", self.n_groups))
             pname = self.exec_plan.encode("utf-8")
             buf.write(struct.pack("<i", len(pname)))
             buf.write(pname)
+        if selected:
+            sname = self.selection.encode("utf-8")
+            buf.write(struct.pack("<i", len(sname)))
+            buf.write(sname)
+            buf.write(struct.pack("<i", self.sel_phase))
         buf.write(struct.pack("<q", len(self.steps)))
         buf.write(np.asarray(self.steps, np.int64).tobytes())
         buf.write(np.asarray(self.grads, self.grad_dtype).tobytes())
@@ -125,21 +144,28 @@ class TrajectoryLedger:
     def from_bytes(cls, raw: bytes) -> "TrajectoryLedger":
         buf = io.BytesIO(raw)
         magic = buf.read(len(_MAGIC))
-        assert magic in (_MAGIC, _MAGIC2, _MAGIC3, _MAGIC4), "not a MeZO ledger"
+        assert magic in (_MAGIC, _MAGIC2, _MAGIC3, _MAGIC4, _MAGIC5), \
+            "not a MeZO ledger"
         seed, dcode = struct.unpack("<qi", buf.read(12))
         backend = "xla"                       # MZOL1 predates backend choice
         batch_seeds = 1
         n_groups = 1
         exec_plan = "local"
-        if magic in (_MAGIC2, _MAGIC3, _MAGIC4):
+        selection = "full"                    # MZOL1-4 predate selections
+        sel_phase = 0
+        if magic != _MAGIC:
             blen, = struct.unpack("<i", buf.read(4))
             backend = buf.read(blen).decode("utf-8")
-        if magic in (_MAGIC3, _MAGIC4):
+        if magic in (_MAGIC3, _MAGIC4, _MAGIC5):
             batch_seeds, = struct.unpack("<i", buf.read(4))
-        if magic == _MAGIC4:
+        if magic in (_MAGIC4, _MAGIC5):
             n_groups, = struct.unpack("<i", buf.read(4))
             plen, = struct.unpack("<i", buf.read(4))
             exec_plan = buf.read(plen).decode("utf-8")
+        if magic == _MAGIC5:
+            slen, = struct.unpack("<i", buf.read(4))
+            selection = buf.read(slen).decode("utf-8")
+            sel_phase, = struct.unpack("<i", buf.read(4))
         n, = struct.unpack("<q", buf.read(8))
         dtype = "float16" if dcode == 1 else "float32"
         itemsize = np.dtype(dtype).itemsize
@@ -149,7 +175,8 @@ class TrajectoryLedger:
         lrs = np.frombuffer(buf.read(4 * n), np.float32)
         led = cls(base_seed=seed, grad_dtype=dtype, backend=backend,
                   batch_seeds=batch_seeds, exec_plan=exec_plan,
-                  n_groups=n_groups)
+                  n_groups=n_groups, selection=selection,
+                  sel_phase=sel_phase)
         led.steps = [int(s) for s in steps]
         if per_step == 1:
             led.grads = [float(g) for g in grads]

@@ -106,12 +106,23 @@ class AsyncZOWorker:
             raise ValueError(
                 f"AsyncZOWorker needs a stateless estimator; "
                 f"{self.opt.estimator.name!r} carries per-step state")
+        # the selection's block-schedule phase is STATIC (it decides which
+        # leaves are touched); workers derive it from the step index in
+        # Python — phase(t) is the same pure function every plan uses, so an
+        # async round's contributions land on the same leaf blocks a
+        # seed-parallel step (or a ledger replay) of that round would touch
+        self._sel = self.prog.selection
         self._jit_eval = jax.jit(self.prog.contribution_eval_fn(
-            loss_fn, worker_id, est_state=self._est_state))
+            loss_fn, worker_id, est_state=self._est_state),
+            static_argnames=("phase",))
         # group feeds only the fold_in inside group_key, which takes traced
         # ints — keeping it dynamic means ONE compiled apply kernel serves
         # every worker id instead of one retrace per peer
-        self._jit_apply = jax.jit(self.prog.apply_contribution_fn())
+        self._jit_apply = jax.jit(self.prog.apply_contribution_fn(),
+                                  static_argnames=("phase",))
+
+    def _phase(self, step: int) -> int:
+        return 0 if self._sel is None else int(self._sel.phase_at(int(step)))
 
     # ---- local estimation (the optimizer's own estimator chain) ---------- #
     def produce(self, batch) -> Contribution:
@@ -119,7 +130,8 @@ class AsyncZOWorker:
         scalar transform chain — what goes on the wire is the post-transform
         g, the same scalar a seed-parallel step of this round records."""
         g, lr, _ = self._jit_eval(self.params, self.base_key,
-                                  jnp.int32(self.step), batch)
+                                  jnp.int32(self.step), batch,
+                                  phase=self._phase(self.step))
         g_wire = (tuple(float(x) for x in g) if jnp.ndim(g) > 0
                   else float(g))
         contrib = Contribution(self.step, self.w, g_wire, float(lr))
@@ -150,7 +162,8 @@ class AsyncZOWorker:
         self.params = self._jit_apply(
             self.params, skey0, jnp.int32(contrib.worker), g,
             jnp.float32(contrib.lr),
-            jnp.float32(1.0 if contrib.worker == 0 else 0.0))
+            jnp.float32(1.0 if contrib.worker == 0 else 0.0),
+            phase=self._phase(contrib.step))
         self.applied.add(key)
         return True
 
@@ -165,7 +178,8 @@ def run_sync_equivalent(workers: list[AsyncZOWorker], batches_for) -> None:
 
 
 def contributions_to_ledger(ledger, contribs: Sequence[Contribution],
-                            n_workers: int) -> tuple[int, int]:
+                            n_workers: int, selection: str = "full",
+                            sel_phase: int = 0) -> tuple[int, int]:
     """Fold a collection of contributions into a trajectory ledger: one
     record per fully-contributed step, streams in worker order — exactly the
     MZOL record a seed-parallel step of the same round appends, so the
@@ -198,6 +212,14 @@ def contributions_to_ledger(ledger, contribs: Sequence[Contribution],
             ledger.n_groups = n
             ledger.exec_plan = "async_worker"
             ledger.batch_seeds = len(g0) if isinstance(g0, tuple) else 1
+        if len(ledger) == 0 and ledger.selection == "full":
+            # the selection spec is not on the wire (contributions are pure
+            # scalars) — callers of selected runs pass it so the assembled
+            # ledger records the right parameter support (stamped even at
+            # n_workers == 1: replaying a selected run's scalars as 'full'
+            # would silently apply them to the whole tree)
+            ledger.selection = selection
+            ledger.sel_phase = int(sel_phase)
         flat: list = []
         for w in range(n):
             g = row[w].projected_grad

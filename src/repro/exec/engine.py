@@ -25,6 +25,7 @@ so:
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 from repro.exec import plan as plan_mod
 from repro.exec.plan import ExecPlan, check_replay_plan
 from repro.perturb import StreamRef, check_replay_backend, get_backend, step_key
+from repro.select import check_replay_selection
 from repro.tree_utils import PyTree
 from repro.zo.base import TransformCtx, Updates, ZOState
 from repro.zo.presets import as_zo_optimizer
@@ -59,30 +61,38 @@ def group_stream_key(base_key: jax.Array, step, group: int,
 # --------------------------------------------------------------------------- #
 def apply_group_update(params: PyTree, skey0: jax.Array, group: int,
                        n_groups: int, coeff, decay_term, batch_seeds: int,
-                       dist: str, backend) -> PyTree:
+                       dist: str, backend, selection=None,
+                       phase: int = 0) -> PyTree:
     """Apply one group's rank-1 update(s) through the backend primitive.
 
     ``coeff`` is the fully η-scaled coefficient — a scalar, or the (B,)
     per-stream vector of a batched-seed estimator (``apply_rank1_batch``
-    divides by B and folds the per-stream keys itself)."""
+    divides by B and folds the per-stream keys itself).  ``selection`` /
+    ``phase`` scope the update to the step's selected leaves — the phase is
+    the STEP's (a pure function of t), shared by every group of the step."""
     gkey = group_key(skey0, group, n_groups)
     if batch_seeds == 1:
-        return backend.apply_rank1(params, StreamRef(gkey), coeff, decay_term,
-                                   dist)
+        ref = StreamRef(gkey)
+        if selection is not None:
+            ref = ref.with_selection(selection, phase)
+        return backend.apply_rank1(params, ref, coeff, decay_term, dist)
     return apply_rank1_batch(params, gkey, coeff, decay_term, dist,
-                             backend=backend)
+                             backend=backend, selection=selection,
+                             phase=phase)
 
 
 def apply_group_updates(params: PyTree, skey0: jax.Array, coeffs: Sequence,
                         decay_term, n_groups: int, batch_seeds: int,
-                        dist: str, backend) -> PyTree:
+                        dist: str, backend, selection=None,
+                        phase: int = 0) -> PyTree:
     """All groups of one step, in group order; decoupled decay applied once,
     on group 0 (matching ``add_weight_decay``'s seed-0 rule)."""
     p = params
     for g in range(n_groups):
         p = apply_group_update(p, skey0, g, n_groups, coeffs[g],
                                decay_term if g == 0 else 0.0,
-                               batch_seeds, dist, backend)
+                               batch_seeds, dist, backend,
+                               selection=selection, phase=phase)
     return p
 
 
@@ -200,13 +210,22 @@ class StepProgram:
         return self.opt.backend_name if self.is_zo else None
 
     @property
+    def selection(self):
+        """The composition's ``repro.select.Selection`` (None = full tree /
+        non-ZO).  Every plan carries it: the schedule phase is a pure
+        function of the step counter, so it is plan-invariant."""
+        return self.opt.selection if self.is_zo else None
+
+    @property
     def meta(self) -> dict:
         """The artifact stamp: everything a resume/replay needs to re-derive
         (or refuse to re-derive) the run's seed schedule."""
         return {"perturb_backend": self.backend_name,
                 "batch_seeds": self.batch_seeds,
                 "exec_plan": self.plan.kind if self.is_zo else None,
-                "n_groups": self.n_groups}
+                "n_groups": self.n_groups,
+                "selection": self.opt.selection_spec if self.is_zo else None,
+                "sel_phase": self.opt.selection_phase if self.is_zo else None}
 
     # -- protocol delegation ------------------------------------------------ #
     def init(self, params: Optional[PyTree] = None, *, seed: int = 0):
@@ -240,8 +259,10 @@ class StepProgram:
         n = self.plan.n_groups
         backend = opt.backend
         batch_seeds = opt.batch_seeds
+        sel = opt.selection
+        n_phases = 1 if sel is None else int(sel.n_phases)
 
-        def step(params: PyTree, state: ZOState, batch):
+        def body(params: PyTree, state: ZOState, batch, phase: int):
             skey0 = step_key(state.base_key, state.step)
             p = params
             est_state, tf_state = state.est_state, state.tf_state
@@ -251,8 +272,12 @@ class StepProgram:
             decay0 = 0.0
             for g in range(n):
                 skey = group_key(skey0, g, n)
-                e = est.estimate(loss_fn, p, slice_group(batch, g, n), skey,
-                                 est_state)
+                if n_phases > 1:
+                    e = est.estimate(loss_fn, p, slice_group(batch, g, n),
+                                     skey, est_state, phase=phase)
+                else:
+                    e = est.estimate(loss_fn, p, slice_group(batch, g, n),
+                                     skey, est_state)
                 est_state = e.est_state
                 ctx = TransformCtx(step=state.step, base_key=state.base_key,
                                    key=skey, seed_index=g, n_seeds=n,
@@ -279,7 +304,8 @@ class StepProgram:
                     aux.update(e.aux)
                 lr_metric = u.lr
             p = apply_group_updates(p, skey0, coeffs, decay0, n,
-                                    batch_seeds, est.dist, backend)
+                                    batch_seeds, est.dist, backend,
+                                    selection=sel, phase=phase)
             g_mean = jnp.mean(jnp.stack(gs))
             if lr_metric is None:
                 lr_metric = jnp.float32(1.0)
@@ -289,6 +315,20 @@ class StepProgram:
                        "projected_grad": g_mean, "lr": lr_metric, **aux,
                        "projected_grads": jnp.stack(gs).reshape(-1)}
             return p, new_state, metrics
+
+        if n_phases == 1:
+            def step(params: PyTree, state: ZOState, batch):
+                return body(params, state, batch, 0)
+        else:
+            # block schedule: same static-phase lax.switch dispatch as the
+            # local facade — phase(t) is a pure function of the step counter,
+            # so the selection schedule is identical under every plan
+            branches = [functools.partial(body, phase=ph)
+                        for ph in range(n_phases)]
+
+            def step(params: PyTree, state: ZOState, batch):
+                return jax.lax.switch(sel.phase_at(state.step), branches,
+                                      params, state, batch)
 
         return step
 
@@ -327,19 +367,27 @@ class StepProgram:
     # -- async building blocks (consumed by distributed.async_zo) ----------- #
     def contribution_eval_fn(self, loss_fn, worker: int,
                              est_state=None) -> Callable:
-        """jit-able ``fn(params, base_key, step, batch) -> (g, lr, loss)``:
-        evaluate this worker's seed group of one step through the estimator
-        and the scalar transform chain (what goes on the wire is the
-        post-transform g — the same scalar a seed-parallel step records)."""
+        """jit-able ``fn(params, base_key, step, batch, phase=0) ->
+        (g, lr, loss)``: evaluate this worker's seed group of one step
+        through the estimator and the scalar transform chain (what goes on
+        the wire is the post-transform g — the same scalar a seed-parallel
+        step records).  ``phase`` is the step's static block-schedule phase
+        (jit it with ``static_argnames=("phase",)``); the worker derives it
+        from its step counter — the same t-pure function every plan uses."""
         opt = self.opt
         est, tf = opt.estimator, opt.transform
         n = self.plan.n_groups
+        sel = opt.selection
 
-        def fn(params, base_key, step, batch):
+        def fn(params, base_key, step, batch, phase=0):
             skey = group_stream_key(base_key, step, worker, n)
-            e = est.estimate(loss_fn, params, batch, skey,
-                             est_state if est_state is not None
-                             else est.init(None, base_key))
+            e_state = (est_state if est_state is not None
+                       else est.init(None, base_key))
+            if sel is None:
+                e = est.estimate(loss_fn, params, batch, skey, e_state)
+            else:
+                e = est.estimate(loss_fn, params, batch, skey, e_state,
+                                 phase=phase)
             ctx = TransformCtx(step=step, base_key=base_key, key=skey,
                                seed_index=worker, n_seeds=n, eps=est.eps,
                                dist=est.dist, restore=e.restore,
@@ -351,24 +399,29 @@ class StepProgram:
         return fn
 
     def apply_contribution_fn(self) -> Callable:
-        """jit-able ``fn(params, skey0, group, g, lr, decay_on) -> params``
-        applying one group's contribution for the step whose key is ``skey0``
-        — the identical floats a ledger replay of that group performs.
-        ``group`` stays a DYNAMIC (traced) argument: it only feeds the
-        ``fold_in`` inside ``group_key``, so one compiled apply kernel serves
-        every worker id (baking it static would retrace once per peer)."""
+        """jit-able ``fn(params, skey0, group, g, lr, decay_on, phase=0) ->
+        params`` applying one group's contribution for the step whose key is
+        ``skey0`` — the identical floats a ledger replay of that group
+        performs.  ``group`` stays a DYNAMIC (traced) argument: it only feeds
+        the ``fold_in`` inside ``group_key``, so one compiled apply kernel
+        serves every worker id (baking it static would retrace once per
+        peer).  ``phase`` IS static (it selects which leaves the update
+        touches — jit with ``static_argnames=("phase",)``): one compiled
+        kernel per schedule phase, not per peer."""
         opt = self.opt
         n = self.plan.n_groups
         batch_seeds = opt.batch_seeds
         dist = opt.estimator.dist
         backend = opt.backend
         wd = opt.weight_decay
+        sel = opt.selection
 
-        def fn(params, skey0, group, g, lr, decay_on):
+        def fn(params, skey0, group, g, lr, decay_on, phase=0):
             coeff = (lr / n) * g
             decay = (lr * wd) * decay_on
             return apply_group_update(params, skey0, group, n, coeff, decay,
-                                      batch_seeds, dist, backend)
+                                      batch_seeds, dist, backend,
+                                      selection=sel, phase=phase)
 
         return fn
 
@@ -387,6 +440,10 @@ class StepProgram:
         opt = self.opt
         check_replay_backend(getattr(ledger, "backend", None),
                              self.backend_name, "trajectory ledger")
+        check_replay_selection(getattr(ledger, "selection", None),
+                               opt.selection_spec, "trajectory ledger",
+                               getattr(ledger, "sel_phase", 0),
+                               opt.selection_phase)
         led_bs = int(getattr(ledger, "batch_seeds", 1))
         if len(ledger.steps) and led_bs != int(opt.batch_seeds):
             raise ValueError(
@@ -424,27 +481,37 @@ class StepProgram:
         base_key = jax.random.PRNGKey(ledger.base_seed)
         to_idx = len(ledger.steps) if to_idx is None else to_idx
         batch_seeds = int(opt.batch_seeds)
+        sel = opt.selection
         dist = opt.estimator.dist if n > 1 else None
         backend = opt.backend if n > 1 else None
         wd = opt.weight_decay if n > 1 else None
 
-        @jax.jit
-        def one(params, step, g, lr):
+        # the block-schedule phase is static (it decides WHICH leaves the
+        # rank-1 update touches), so it is a static jit argument: replay
+        # compiles one kernel per phase, exactly as the live step's
+        # lax.switch carries one branch per phase
+        @functools.partial(jax.jit, static_argnames=("phase",))
+        def one(params, step, g, lr, phase=0):
             skey0 = step_key(base_key, step)
             if n == 1:
                 # single-stream entries: the optimizer's own replay primitive
                 # (bitwise with the local and seed_parallel(1) plans)
-                return opt.replay_update(params, skey0, g, lr)
+                if sel is None:
+                    return opt.replay_update(params, skey0, g, lr)
+                return opt.replay_update(params, skey0, g, lr, phase=phase)
             g_mat = jnp.reshape(jnp.asarray(g), (n, batch_seeds))
             coeffs = [(lr / n) * (g_mat[i] if batch_seeds > 1
                                   else g_mat[i, 0]) for i in range(n)]
             return apply_group_updates(params, skey0, coeffs, lr * wd, n,
-                                       batch_seeds, dist, backend)
+                                       batch_seeds, dist, backend,
+                                       selection=sel, phase=phase)
 
         p = params0
         for i in range(from_idx, to_idx):
+            ph = 0 if sel is None else int(sel.phase_at(int(ledger.steps[i])))
             p = one(p, jnp.int32(ledger.steps[i]),
-                    jnp.float32(ledger.grads[i]), jnp.float32(ledger.lrs[i]))
+                    jnp.float32(ledger.grads[i]), jnp.float32(ledger.lrs[i]),
+                    phase=ph)
         return p
 
     def replay_update(self, params, skey, g, lr):

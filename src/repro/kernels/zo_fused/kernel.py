@@ -15,6 +15,8 @@ a Box–Muller transform built from transcendental-free polynomial log/cos
 (``_det_log`` / ``_det_cos2pi``) with per-stage rounding pins (``_pin``), so
 every jitted graph — single-seed kernel, batched kernel, train step, ledger
 replay, and the pure-jnp oracle in ref.py — generates bit-identical z.
+``dist="rademacher"`` swaps Box–Muller for the sign of one counter stream
+(``rademacher_from_counter``): comparison + select, no rounding at all.
 
 Grid: 1-D over row-blocks of the (padded) 2-D view; BlockSpec keeps one
 (block_rows × 128·lane_cols) tile of x and y in VMEM (~256 KB at f32).
@@ -152,6 +154,32 @@ def gaussian_from_counter(idx: jnp.ndarray, seed: jnp.ndarray,
     return _pin(r * c, pin)
 
 
+def rademacher_from_counter(idx: jnp.ndarray, seed: jnp.ndarray,
+                            pin: bool = False) -> jnp.ndarray:
+    """±1 from the sign of ONE counter stream: u >= ½ → +1, else −1.  Uses
+    the same salt-1 stream the gaussian path reads as u1 (a different dist is
+    a different z law, not a different stream identity).  Comparison + select
+    involve no rounding at all, so the rademacher stream is bitwise-
+    deterministic in every graph without any of the gaussian path's
+    polynomial machinery."""
+    u = _pin(counter_uniform(idx, seed, 1, pin), pin)
+    return _pin(jnp.where(u >= jnp.float32(0.5),
+                          jnp.float32(1.0), jnp.float32(-1.0)), pin)
+
+
+def z_from_counter(idx: jnp.ndarray, seed: jnp.ndarray, dist: str,
+                   pin: bool = False) -> jnp.ndarray:
+    """Dispatch the kernel's in-VMEM z generation by distribution."""
+    if dist == "gaussian":
+        return gaussian_from_counter(idx, seed, pin)
+    if dist == "rademacher":
+        return rademacher_from_counter(idx, seed, pin)
+    raise NotImplementedError(
+        f"zo_fused kernel has no in-kernel generator for dist={dist!r} "
+        "(implemented: gaussian, rademacher; sphere needs the global "
+        "two-pass norm rescale that is not kernel-fused)")
+
+
 def _affine_combine(x: jnp.ndarray, z: jnp.ndarray, a, b,
                     interpret: bool) -> jnp.ndarray:
     """a·x + b·z with rounding pinned under interpret mode (see ``_pin``):
@@ -166,7 +194,8 @@ def _affine_combine(x: jnp.ndarray, z: jnp.ndarray, a, b,
 
 
 def _tile_affine(x: jnp.ndarray, row_block: jnp.ndarray, cols: int,
-                 seed: jnp.ndarray, a, b, interpret: bool) -> jnp.ndarray:
+                 seed: jnp.ndarray, a, b, interpret: bool,
+                 dist: str = "gaussian") -> jnp.ndarray:
     """One VMEM tile's worth of y = a·x + b·z(seed): the counter indices are
     global element positions (row_block picks the tile), so the stream is
     position-stable across padding and blocking.  Shared by the single-seed
@@ -177,28 +206,30 @@ def _tile_affine(x: jnp.ndarray, row_block: jnp.ndarray, cols: int,
     row_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
     col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
     idx = base + row_ids * jnp.uint32(cols) + col_ids
-    z = gaussian_from_counter(idx, seed, pin=interpret)
+    z = z_from_counter(idx, seed, dist, pin=interpret)
     return _affine_combine(x.astype(jnp.float32), z, a, b, interpret)
 
 
 def _zo_affine_kernel(x_ref, seed_ref, a_ref, b_ref, o_ref, *, cols: int,
-                      interpret: bool):
+                      interpret: bool, dist: str):
     i = pl.program_id(0)
     seed = seed_ref[0, 0].astype(jnp.uint32)
     y = _tile_affine(x_ref[...], i, cols, seed, a_ref[0, 0], b_ref[0, 0],
-                     interpret)
+                     interpret, dist)
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
 def zo_affine_2d(x: jnp.ndarray, seed: jnp.ndarray, a: jnp.ndarray,
-                 b: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+                 b: jnp.ndarray, interpret: bool = True,
+                 dist: str = "gaussian") -> jnp.ndarray:
     """y = a·x + b·z on a 2-D array whose shape is (R·BLOCK_ROWS, BLOCK_COLS)."""
     rows, cols = x.shape
     assert rows % BLOCK_ROWS == 0 and cols == BLOCK_COLS, (rows, cols)
     grid = (rows // BLOCK_ROWS,)
     return pl.pallas_call(
-        functools.partial(_zo_affine_kernel, cols=cols, interpret=interpret),
+        functools.partial(_zo_affine_kernel, cols=cols, interpret=interpret,
+                          dist=dist),
         grid=grid,
         in_specs=[
             pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0)),
@@ -215,7 +246,7 @@ def zo_affine_2d(x: jnp.ndarray, seed: jnp.ndarray, a: jnp.ndarray,
 
 
 def _zo_affine_batched_kernel(x_ref, seed_ref, a_ref, b_ref, o_ref, *,
-                              cols: int, interpret: bool):
+                              cols: int, interpret: bool, dist: str):
     # Grid is (row_blocks, batch): the row-block axis is OUTER, so the x tile
     # for row-block i stays resident in VMEM while the inner batch axis
     # generates B z-streams against it (Pallas re-fetches a block only when
@@ -226,13 +257,14 @@ def _zo_affine_batched_kernel(x_ref, seed_ref, a_ref, b_ref, o_ref, *,
     i = pl.program_id(0)
     seed = seed_ref[0, 0].astype(jnp.uint32)
     y = _tile_affine(x_ref[...], i, cols, seed, a_ref[0, 0], b_ref[0, 0],
-                     interpret)
+                     interpret, dist)
     o_ref[0, ...] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
 def zo_affine_2d_batched(x: jnp.ndarray, seeds: jnp.ndarray, a: jnp.ndarray,
-                         b: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+                         b: jnp.ndarray, interpret: bool = True,
+                         dist: str = "gaussian") -> jnp.ndarray:
     """y[j] = a·x + b·z(seeds[j]) for all j in one launch.
 
     ``x`` is the (R·BLOCK_ROWS, BLOCK_COLS) blocked view shared by every
@@ -247,7 +279,7 @@ def zo_affine_2d_batched(x: jnp.ndarray, seeds: jnp.ndarray, a: jnp.ndarray,
     grid = (rows // BLOCK_ROWS, batch)
     return pl.pallas_call(
         functools.partial(_zo_affine_batched_kernel, cols=cols,
-                          interpret=interpret),
+                          interpret=interpret, dist=dist),
         grid=grid,
         in_specs=[
             pl.BlockSpec((BLOCK_ROWS, cols), lambda i, j: (i, 0)),

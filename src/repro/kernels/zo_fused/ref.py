@@ -1,12 +1,13 @@
 """Pure-jnp oracle for the zo_fused kernel — identical counter-hash and
-Box–Muller arithmetic, evaluated array-at-once.
+Box–Muller (or rademacher sign) arithmetic, evaluated array-at-once.
 
-The oracle is jit-compiled on purpose: the kernel's z generator is built from
-rounding-pinned basic ops (see ``kernel._pin``), which makes every JITTED
-graph agree bitwise, but op-by-op eager execution gives LLVM no mul→add
-patterns to contract and so rounds a small fraction of elements differently.
-Keeping the oracle inside jit puts it in the same regime as the
-interpret-mode kernels it checks."""
+The oracle is jit-compiled on purpose: the kernel's gaussian z generator is
+built from rounding-pinned basic ops (see ``kernel._pin``), which makes every
+JITTED graph agree bitwise, but op-by-op eager execution gives LLVM no
+mul→add patterns to contract and so rounds a small fraction of elements
+differently.  Keeping the oracle inside jit puts it in the same regime as the
+interpret-mode kernels it checks.  (The rademacher stream is comparison +
+select — no rounding — but rides the same jitted entry points.)"""
 from __future__ import annotations
 
 import functools
@@ -14,33 +15,35 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.zo_fused.kernel import _affine_combine, gaussian_from_counter
+from repro.kernels.zo_fused.kernel import _affine_combine, z_from_counter
 
 
-@functools.partial(jax.jit, static_argnames=("shape",))
-def _z_for_jit(shape: tuple, seed) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("shape", "dist"))
+def _z_for_jit(shape: tuple, seed, dist: str = "gaussian") -> jnp.ndarray:
     n = 1
     for s in shape:
         n *= s
     idx = jnp.arange(n, dtype=jnp.uint32)
-    return gaussian_from_counter(idx, jnp.asarray(seed, jnp.uint32),
-                                 pin=True).reshape(shape)
+    return z_from_counter(idx, jnp.asarray(seed, jnp.uint32), dist,
+                          pin=True).reshape(shape)
 
 
-def z_for(shape: tuple, seed) -> jnp.ndarray:
-    return _z_for_jit(tuple(shape), seed)
+def z_for(shape: tuple, seed, dist: str = "gaussian") -> jnp.ndarray:
+    return _z_for_jit(tuple(shape), seed, dist)
 
 
-@jax.jit
-def zo_affine_ref(x: jnp.ndarray, seed, a, b) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("dist",))
+def zo_affine_ref(x: jnp.ndarray, seed, a, b,
+                  dist: str = "gaussian") -> jnp.ndarray:
     """y = a·x + b·z with z from the same counter stream as the kernel."""
-    z = _z_for_jit(x.shape, seed)
+    z = _z_for_jit(x.shape, seed, dist)
     return _affine_combine(x.astype(jnp.float32), z,
                            jnp.asarray(a, jnp.float32),
                            jnp.asarray(b, jnp.float32),
                            interpret=True).astype(x.dtype)
 
 
-def zo_affine_batched_ref(x: jnp.ndarray, seeds, a, b) -> jnp.ndarray:
+def zo_affine_batched_ref(x: jnp.ndarray, seeds, a, b,
+                          dist: str = "gaussian") -> jnp.ndarray:
     """Batched oracle: y[j] = zo_affine_ref(x, seeds[j], a, b), stacked."""
-    return jnp.stack([zo_affine_ref(x, s, a, b) for s in seeds])
+    return jnp.stack([zo_affine_ref(x, s, a, b, dist=dist) for s in seeds])

@@ -83,7 +83,7 @@ def replicated_tree(tree, mesh):
 def _compile_case(cfg, b, cell, mesh, donate: bool = True,
                   backend: str = "xla", estimator: str = "spsa",
                   batch_seeds: int = 8, exec_plan: str = "local",
-                  n_groups: int = 1):
+                  n_groups: int = 1, selection: str = "full"):
     """Lower + compile the cell's step function; returns the compiled exe."""
     specs = b.input_specs(cell)
     params_sds = b.param_shapes()
@@ -97,10 +97,10 @@ def _compile_case(cfg, b, cell, mesh, donate: bool = True,
     if cell.kind == "train":
         if estimator == "fzoo":
             opt = zo.fzoo(lr=1e-6, eps=1e-3, batch_seeds=batch_seeds,
-                          backend=backend)
+                          backend=backend, selection=selection)
         else:
             opt = zo.mezo(lr=1e-6, eps=1e-3, estimator=estimator,
-                          backend=backend)
+                          backend=backend, selection=selection)
         # the engine lowers the same composition onto the requested plan;
         # the dry-run proves each (estimator × backend × plan) cell COMPILES
         # on the production meshes, not just the blessed local path
@@ -166,7 +166,8 @@ def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
              optimizer: str = "mezo", verbose: bool = True,
              calibrate: bool = True, backend: str = "xla",
              estimator: str = "spsa", batch_seeds: int = 8,
-             exec_plan: str = "local", n_groups: int = 1) -> dict:
+             exec_plan: str = "local", n_groups: int = 1,
+             selection: str = "full") -> dict:
     arch = all_archs()[arch_id]
     cfg = arch.cfg
     if overrides:
@@ -179,6 +180,7 @@ def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
            "batch_seeds": batch_seeds if estimator == "fzoo" else 1,
            "exec_plan": exec_plan,
            "n_groups": n_groups if exec_plan == "seed_parallel" else 1,
+           "selection": selection,
            "overrides": {k: str(v) for k, v in overrides.items()},
            "status": "ok"}
     t0 = time.time()
@@ -186,7 +188,8 @@ def run_case(arch_id: str, cell, mesh, mesh_name: str, overrides: dict,
         compiled = _compile_case(cfg, b, cell, mesh, backend=backend,
                                  estimator=estimator,
                                  batch_seeds=batch_seeds,
-                                 exec_plan=exec_plan, n_groups=n_groups)
+                                 exec_plan=exec_plan, n_groups=n_groups,
+                                 selection=selection)
         t_compile = time.time() - t0
         flops_raw, hbm_raw, coll_raw, coll_detail = _cost_triple(compiled)
         rec["raw"] = {"flops": flops_raw, "hbm_bytes": hbm_raw,
@@ -269,6 +272,10 @@ def main():
                     help="execution plan for the train cells (repro.exec)")
     ap.add_argument("--n-groups", type=int, default=2,
                     help="seed groups for --exec-plan seed_parallel")
+    ap.add_argument("--select", default="full",
+                    help="parameter selection for the train cells "
+                         "(repro.select spec: full, leaves(<regex>), "
+                         "block_cyclic(<k>), peft(lora|prefix))")
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
@@ -330,7 +337,8 @@ def main():
                                    estimator=args.estimator,
                                    batch_seeds=args.batch_seeds,
                                    exec_plan=args.exec_plan,
-                                   n_groups=args.n_groups)
+                                   n_groups=args.n_groups,
+                                   selection=args.select)
                     if args.tag:
                         rec["tag"] = args.tag
                     f.write(json.dumps(rec) + "\n")

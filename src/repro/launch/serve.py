@@ -39,12 +39,18 @@ def main():
         with open(args.ledger, "rb") as f:
             led = TrajectoryLedger.from_bytes(f.read())
         # the ledger header records the run's full seed-schedule coordinates
-        # (backend, batch_seeds, n_groups); build the matching composition —
-        # replay is ledger-driven, mismatches would raise
+        # (backend, batch_seeds, n_groups, selection); build the matching
+        # composition — replay is ledger-driven, mismatches would raise
+        sel = None
+        if led.selection != "full" or led.sel_phase:
+            from repro.select import parse_selection
+            sel = parse_selection(led.selection)._replace(
+                phase_offset=int(led.sel_phase))
         if led.batch_seeds > 1:
-            opt = zo.fzoo(batch_seeds=led.batch_seeds, backend=led.backend)
+            opt = zo.fzoo(batch_seeds=led.batch_seeds, backend=led.backend,
+                          selection=sel)
         else:
-            opt = zo.mezo(backend=led.backend)
+            opt = zo.mezo(backend=led.backend, selection=sel)
         params = replay(params, led, opt)
         print(f"[serve] replayed {len(led)} ledger steps "
               f"({os.path.getsize(args.ledger)} bytes, "

@@ -46,6 +46,13 @@ def main():
                     choices=["xla", "pallas", "pallas-interpret"],
                     help="perturbation backend (repro.perturb): xla threefry "
                          "or the VMEM-fused pallas kernel")
+    ap.add_argument("--select", default="full",
+                    help="parameter selection (repro.select) for the ZO "
+                         "optimizers: 'full', 'leaves(<regex>)', "
+                         "'block_cyclic(<k>)' (rotating leaf blocks, ~1/k of "
+                         "the tree perturbed per step), or "
+                         "'peft(lora|prefix)' for a merged PEFT tree; "
+                         "recorded in ckpt meta + the MZOL5 ledger header")
     ap.add_argument("--exec-plan", default="local",
                     choices=["local", "seed_parallel"],
                     help="execution plan (repro.exec): 'local' is the "
@@ -75,17 +82,29 @@ def main():
 
     pipe = Pipeline(DataSpec("lm", batch=args.batch, seq=args.seq,
                              vocab=cfg.vocab_size, seed=args.seed))
+    if args.select != "full" and args.optimizer != "mezo":
+        # fail loudly: every other branch would silently train the full tree
+        # (adam/sgd have no selection support; mezo-adam's applier transform
+        # refuses selections at composition time)
+        raise SystemExit(f"--select {args.select!r} requires --optimizer mezo "
+                         f"(got {args.optimizer!r})")
     ledger = None
     if args.optimizer == "mezo":
         if args.estimator == "fzoo":
             opt = zo.fzoo(lr=args.lr or 1e-6, eps=args.eps,
-                          batch_seeds=args.batch_seeds, backend=args.backend)
+                          batch_seeds=args.batch_seeds, backend=args.backend,
+                          selection=args.select)
         else:
             opt = zo.mezo(lr=args.lr or 1e-5, eps=args.eps,
-                          estimator=args.estimator, backend=args.backend)
+                          estimator=args.estimator, backend=args.backend,
+                          selection=args.select)
+        if args.select != "full":
+            print(f"[train] parameter selection: {opt.selection_spec}")
         ledger = TrajectoryLedger(base_seed=args.seed, grad_dtype="float32",
                                   backend=opt.backend_name,
-                                  batch_seeds=opt.batch_seeds)
+                                  batch_seeds=opt.batch_seeds,
+                                  selection=opt.selection_spec,
+                                  sel_phase=opt.selection_phase)
     elif args.optimizer == "mezo-adam":
         opt = zo.mezo_adam(lr=args.lr or 1e-4, eps=args.eps,
                            backend=args.backend)

@@ -1,10 +1,14 @@
 """Parameter-efficient fine-tuning: LoRA and prefix tuning (paper §3 / App. E.5).
 
 MeZO composes with PEFT by construction: the optimizer perturbs whatever tree
-it is given.  Here the *trainable tree* is the PEFT tree; the frozen base
-params are closed over.  ``peft_loss_fn`` produces the ``loss(peft_params,
-batch)`` scalar function MeZO consumes, and the same function works for the
-backprop baselines (``jax.grad`` w.r.t. the PEFT tree).
+it is given.  The unified path merges the frozen base and the PEFT tree into
+ONE parameter tree (``peft_params``) consumed by ``peft_loss_fn``, with a
+``repro.select`` ``peft(mode)`` selection scoping the optimizer to the PEFT
+subtree — the base leaves ride along untouched (zero z generation, zero
+writes, no decay).  This replaces the bespoke tree-swap entry points
+(``lora_loss_fn`` / ``prefix_loss_fn``, kept as deprecated bitwise-equal
+shims): PEFT is now an ordinary parameter selection, composable with every
+estimator, backend, and execution plan.
 
 LoRA (Hu et al. 2022):   W_eff = W + (α/r)·A·B on attention q and v
                          projections (paper's setting, r=8, α=16).
@@ -23,6 +27,7 @@ from repro.models import transformer
 from repro.models.attention import project_qkv
 from repro.models.common import dense_init
 from repro.models.config import ModelConfig
+from repro.select import PEFT_MODES  # one source of truth for valid modes
 
 PREFIX_POS = -2  # sentinel k_pos: always attendable (see attention._mask)
 
@@ -68,9 +73,14 @@ def merge_lora(base_params: dict, lora: dict) -> dict:
 
 
 def lora_loss_fn(cfg: ModelConfig, base_params: dict) -> Callable:
-    base_loss = transformer.train_loss_fn(cfg)
+    """DEPRECATED tree-swap entry point — the unified path is
+    ``peft_loss_fn(cfg, "lora")`` over ``peft_params(base, lora, "lora")``
+    with a ``repro.select.peft("lora")`` selection.  This shim wraps exactly
+    that loss (bitwise-equal, test-enforced in tests/test_select.py),
+    mirroring the ``core/perturb.py`` shim pattern."""
+    unified = peft_loss_fn(cfg, "lora")
     def loss(lora_params, batch):
-        return base_loss(merge_lora(base_params, lora_params), batch)
+        return unified({"base": base_params, "lora": lora_params}, batch)
     return loss
 
 
@@ -177,8 +187,55 @@ def _forward_with_prefix(cfg: ModelConfig, params: dict, prefix: dict, batch):
 
 
 def prefix_loss_fn(cfg: ModelConfig, base_params: dict) -> Callable:
+    """DEPRECATED tree-swap entry point — the unified path is
+    ``peft_loss_fn(cfg, "prefix")`` over ``peft_params(base, prefix,
+    "prefix")`` with a ``repro.select.peft("prefix")`` selection.  Bitwise-
+    equal shim over that loss (test-enforced), mirroring the
+    ``core/perturb.py`` shim pattern."""
+    unified = peft_loss_fn(cfg, "prefix")
     def loss(prefix_params, batch):
-        logits, aux = _forward_with_prefix(cfg, base_params, prefix_params, batch)
-        return transformer.lm_loss(cfg, logits, batch["labels"],
-                                   batch.get("loss_mask"), aux)
+        return unified({"base": base_params, "prefix": prefix_params}, batch)
     return loss
+
+
+# --------------------------------------------------------------------------- #
+# The unified merged-tree path (repro.select integration)
+# --------------------------------------------------------------------------- #
+def peft_params(base_params: dict, peft_tree: dict, mode: str) -> dict:
+    """Merge the frozen base and the PEFT tree into the ONE parameter tree
+    the unified loss consumes: ``{"base": base, mode: peft_tree}``.  The
+    optimizer sees the whole tree; a ``repro.select.peft(mode)`` selection
+    scopes perturbation and updates to the PEFT subtree, so the base leaves
+    are never touched (test-enforced)."""
+    if mode not in PEFT_MODES:
+        raise ValueError(f"unknown peft mode {mode!r}; available: {PEFT_MODES}")
+    return {"base": base_params, mode: peft_tree}
+
+
+def peft_loss_fn(cfg: ModelConfig, mode: str) -> Callable:
+    """``loss(merged, batch)`` over a ``peft_params`` merged tree — the one
+    loss the unified PEFT path uses for MeZO and the backprop baselines
+    alike.  The merge arithmetic is identical to the legacy tree-swap
+    closures, so the deprecated shims are bitwise-equal wrappers of this."""
+    if mode == "lora":
+        base_loss = transformer.train_loss_fn(cfg)
+
+        def loss(merged, batch):
+            return base_loss(merge_lora(merged["base"], merged["lora"]),
+                             batch)
+    elif mode == "prefix":
+        def loss(merged, batch):
+            logits, aux = _forward_with_prefix(cfg, merged["base"],
+                                               merged["prefix"], batch)
+            return transformer.lm_loss(cfg, logits, batch["labels"],
+                                       batch.get("loss_mask"), aux)
+    else:
+        raise ValueError(f"unknown peft mode {mode!r}; available: {PEFT_MODES}")
+    return loss
+
+
+def peft_selection(mode: str):
+    """The ``repro.select`` selection matching a ``peft_params`` merged tree
+    (perturb only the ``mode`` subtree)."""
+    from repro.select import peft as _peft_selection
+    return _peft_selection(mode)

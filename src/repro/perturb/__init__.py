@@ -32,8 +32,9 @@ instead of silently reconstructing different parameters.
     pure memory-bandwidth speed, with zero z traffic.  On TPU it runs
     compiled; off-TPU it transparently falls back to Pallas interpret mode
     (identical arithmetic, jnp-evaluated) so CPU runs and CI exercise the
-    same stream.  Supports gaussian only — rademacher / sphere raise
-    ``NotImplementedError`` (see the matrix in ``repro.perturb.base``).
+    same stream.  Supports gaussian and rademacher (sign of one counter
+    stream, generated in-kernel) — sphere raises ``NotImplementedError``
+    (see the matrix in ``repro.perturb.base``).
 
 ``backend="pallas-interpret"``
     Same stream as ``pallas`` with interpret mode forced — for measuring
@@ -58,9 +59,16 @@ both are bitwise-equal to stacking per-ref ``perturb`` calls
 The default backend honors the ``REPRO_BACKEND`` environment variable (CI's
 pallas-interpret job runs the unmodified suite under the fused kernel).
 
+Parameter selection
+-------------------
+A ``StreamRef`` may carry a ``repro.select.Selection`` (static leaf predicate
++ optional block schedule): both backends *skip* unselected leaves in every
+method — zero z generation and zero writes, not a masked multiply.  See
+:mod:`repro.select`.
+
 Extending
 ---------
-New strategies (sparse/masked perturbation schedules, quantized z) implement
+New strategies (quantized z, mixed-stream formats) implement
 ``PerturbBackend`` and register with ``register_backend``; every existing
 estimator × transform composition picks them up through the same kwarg.
 """

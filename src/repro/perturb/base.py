@@ -14,11 +14,10 @@ story):
     backend         gaussian  rademacher  sphere
     ==============  ========  ==========  ========
     ``xla``         yes       yes         yes
-    ``pallas``      yes       no [1]      no [2]
+    ``pallas``      yes       yes         no [1]
     ==============  ========  ==========  ========
 
-    [1] the fused kernel only implements Box–Muller gaussian generation.
-    [2] sphere needs the global sqrt(d)/‖z‖ rescale — a two-pass norm that is
+    [1] sphere needs the global sqrt(d)/‖z‖ rescale — a two-pass norm that is
         not kernel-fused yet; raising beats silently producing wrong-scale
         perturbations.
 
@@ -102,9 +101,9 @@ class PerturbBackend:
                 f"perturbation backend {self.name!r} does not implement "
                 f"dist={dist!r} (supported: {sorted(self.dists)}).  "
                 "Distribution matrix — xla: gaussian/rademacher/sphere; "
-                "pallas: gaussian only (rademacher is not kernel-implemented; "
-                "sphere needs a two-pass global-norm rescale that is not "
-                "kernel-fused yet).  Use backend='xla' for this dist.")
+                "pallas: gaussian/rademacher (sphere needs a two-pass "
+                "global-norm rescale that is not kernel-fused yet).  "
+                "Use backend='xla' for this dist.")
 
     # -- core tree operations ----------------------------------------------- #
     def perturb(self, params: PyTree, ref: StreamRef, scale,

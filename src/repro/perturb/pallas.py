@@ -20,10 +20,11 @@ jnp ops), so CPU CI and laptops exercise the real backend semantics.
 ``get_backend("pallas")`` auto-selects interpret off-TPU;
 ``get_backend("pallas-interpret")`` forces it (for benchmarking the overhead).
 
-Supported distributions: gaussian only — rademacher is not implemented in
-the kernel, and sphere requires the global sqrt(d)/‖z‖ two-pass rescale that
-is not kernel-fused yet.  Both raise ``NotImplementedError`` loudly (see
-``PerturbBackend.check_dist``) instead of producing wrong-scale perturbations.
+Supported distributions: gaussian (Box–Muller) and rademacher (the sign of
+one counter stream, generated in-kernel).  Sphere requires the global
+sqrt(d)/‖z‖ two-pass rescale that is not kernel-fused yet and raises
+``NotImplementedError`` loudly (see ``PerturbBackend.check_dist``) instead
+of producing wrong-scale perturbations.
 """
 from __future__ import annotations
 
@@ -53,19 +54,21 @@ def _blocked_view(x: jnp.ndarray) -> tuple:
     return jnp.pad(x.reshape(-1), (0, n_pad - n)).reshape(-1, BLOCK_COLS), n
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def zo_affine(x: jnp.ndarray, seed, a, b, interpret: bool = True) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
+def zo_affine(x: jnp.ndarray, seed, a, b, interpret: bool = True,
+              dist: str = "gaussian") -> jnp.ndarray:
     """y = a·x + b·z(seed) for an arbitrary-shape leaf (blocked view, see
     ``_blocked_view``)."""
     flat2d, n = _blocked_view(x)
     y = zo_affine_2d(flat2d, jnp.asarray(seed, jnp.int32), a, b,
-                     interpret=interpret)
+                     interpret=interpret, dist=dist)
     return y.reshape(-1)[:n].reshape(x.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
 def zo_affine_batched(x: jnp.ndarray, seeds: jnp.ndarray, a, b,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: bool = True,
+                      dist: str = "gaussian") -> jnp.ndarray:
     """y[j] = a·x + b·z(seeds[j]) for an arbitrary-shape leaf, one launch.
 
     Same blocked/padded view as :func:`zo_affine`; the kernel's batch grid
@@ -75,7 +78,7 @@ def zo_affine_batched(x: jnp.ndarray, seeds: jnp.ndarray, a, b,
     """
     flat2d, n = _blocked_view(x)
     y = zo_affine_2d_batched(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
-                             interpret=interpret)
+                             interpret=interpret, dist=dist)
     batch = y.shape[0]
     return y.reshape(batch, -1)[:, :n].reshape((batch,) + x.shape)
 
@@ -125,12 +128,18 @@ def mezo_step_kernel(loss_fn, params: PyTree, batch, seed: int, eps: float,
 # Backend adapter
 # --------------------------------------------------------------------------- #
 class PallasBackend(PerturbBackend):
-    """Fused-kernel z streams: VMEM generation on TPU, interpret mode off-TPU."""
+    """Fused-kernel z streams: VMEM generation on TPU, interpret mode off-TPU.
+
+    Selection-aware: a ``StreamRef`` carrying a ``repro.select.Selection``
+    scopes every method to the selected leaves — unselected leaves get no
+    kernel launch at all (zero z generation, zero writes)."""
 
     name = "pallas"
-    dists = frozenset({"gaussian"})
+    dists = frozenset({"gaussian", "rademacher"})
     # z2: transcendental-free polynomial Box–Muller (deterministic across
     # jitted graphs).  z1 artifacts (jnp.log/cos bits) refuse to replay.
+    # (The in-kernel rademacher stream landed under z2 — a new dist adds a
+    # stream, it does not change the gaussian bits, so no bump.)
     stream_version = 2
 
     def __init__(self, interpret: Optional[bool] = None):
@@ -155,16 +164,19 @@ class PallasBackend(PerturbBackend):
 
     def _map(self, params: PyTree, ref: StreamRef, fn) -> PyTree:
         seed = ref.counter_seed()
+        mask = ref.selection_mask(params)
         return tree_map_with_index(
             lambda i, p: fn(p, leaf_seed(seed, i), i)
-            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            and (mask is None or mask[i]) else p, params)
 
     def perturb(self, params: PyTree, ref: StreamRef, scale,
                 dist: str = "gaussian") -> PyTree:
         self.check_dist(dist)
         return self._map(params, ref,
                          lambda p, s, i: zo_affine(p, s, 1.0, scale,
-                                                   interpret=self.interpret))
+                                                   interpret=self.interpret,
+                                                   dist=dist))
 
     def fused_restore_update(self, params_minus: PyTree, ref: StreamRef, eps,
                              lr_g, weight_decay=0.0,
@@ -172,7 +184,8 @@ class PallasBackend(PerturbBackend):
         # decay·(θ − εz + εz) − η·g·z  =  decay·θ_minus + (decay·ε − η·g)·z:
         # restore AND descent collapse into a single kernel pass per leaf
         # (one z regeneration, never in HBM) — one fewer pass than the xla
-        # backend needs for the same fusion.
+        # backend needs for the same fusion.  Unselected leaves were never
+        # perturbed and pass through completely (decay included).
         self.check_dist(dist)
         eps_, lr_g_, wd_ = self._pin_scalars(eps, lr_g, weight_decay)
         decay = 1.0 - wd_
@@ -180,7 +193,8 @@ class PallasBackend(PerturbBackend):
         b = de - lr_g_
         return self._map(params_minus, ref,
                          lambda p, s, i: zo_affine(p, s, decay, b,
-                                                   interpret=self.interpret))
+                                                   interpret=self.interpret,
+                                                   dist=dist))
 
     def apply_rank1(self, params: PyTree, ref: StreamRef, coeff,
                     decay_term=0.0, dist: str = "gaussian",
@@ -193,7 +207,7 @@ class PallasBackend(PerturbBackend):
 
         def one(p, s, i):
             b = -coeff_ if d_leaves is None else -coeff_ * d_leaves[i]
-            return zo_affine(p, s, a, b, interpret=self.interpret)
+            return zo_affine(p, s, a, b, interpret=self.interpret, dist=dist)
 
         return self._map(params, ref, one)
 
@@ -204,24 +218,28 @@ class PallasBackend(PerturbBackend):
                           jnp.issubdtype(like.dtype, jnp.floating)
                           else jnp.float32)
         return zo_affine(zeros, ref.leaf_seed(leaf_index), 0.0, 1.0,
-                         interpret=self.interpret)
+                         interpret=self.interpret, dist=dist)
 
     def perturb_many(self, params: PyTree, refs: Sequence[StreamRef], scale,
                      dist: str = "gaussian") -> PyTree:
         """Genuinely batched θ + scale·z(ref_j): the batched kernel generates
         B z-streams per VMEM tile of each leaf (one launch per leaf, x read
         once per tile) — bitwise-equal to stacking per-ref ``perturb`` calls,
-        contract-tested in tests/test_perturb_backend.py."""
+        contract-tested in tests/test_perturb_backend.py.  Unselected leaves
+        get no launch — they are stacked unperturbed, exactly as masked
+        singles would stack them."""
         self.check_dist(dist)
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
+        mask = refs[0].selection_mask(params)
         seeds0 = jnp.stack([r.counter_seed() for r in refs])
 
         def one(i, p):
-            if not jnp.issubdtype(p.dtype, jnp.floating):
+            if not jnp.issubdtype(p.dtype, jnp.floating) or \
+                    (mask is not None and not mask[i]):
                 return jnp.stack([p] * len(refs))
             seeds = seeds0 + jnp.int32(_LEAF_STRIDE) * jnp.int32(i)
             return zo_affine_batched(p, seeds, 1.0, scale,
-                                     interpret=self.interpret)
+                                     interpret=self.interpret, dist=dist)
 
         return tree_map_with_index(one, params)

@@ -24,7 +24,7 @@ per-seed fold) — existing ledgers and checkpoints replay unchanged.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,17 +54,42 @@ class StreamRef(NamedTuple):
     estimator protocol already passes around.  Wrap an existing key with
     ``StreamRef(key)``; derive one from run coordinates with
     ``StreamRef.derive``.
+
+    ``selection``/``phase`` optionally scope the stream to a parameter
+    subset (``repro.select.Selection`` + its static schedule phase): backends
+    read ``selection_mask`` and *skip* unselected leaves — zero z generation
+    and zero writes for them, not a masked multiply.  Both fields are static
+    trace-time data (the ref never crosses a jit boundary as an argument);
+    the default ``(None, 0)`` is the full selection and keeps every
+    pre-selection code path bitwise-identical.
     """
     key: jax.Array
+    selection: Any = None           # Optional[repro.select.Selection]
+    phase: int = 0                  # static schedule phase (python int)
 
     @classmethod
     def derive(cls, base_key: jax.Array, step,
-               seed_index: Optional[int] = None) -> "StreamRef":
-        """run key → step t → (optional) seed j, the legacy fold chain."""
+               seed_index: Optional[int] = None,
+               selection: Any = None, phase: int = 0) -> "StreamRef":
+        """run key → step t → (optional) seed j, the legacy fold chain —
+        optionally scoped to a parameter selection at a schedule phase."""
         key = step_key(base_key, step)
         if seed_index is not None:
             key = jax.random.fold_in(key, seed_index)
-        return cls(key)
+        return cls(key, selection, phase)
+
+    def with_selection(self, selection, phase: int = 0) -> "StreamRef":
+        """The selection-aware derivation: same stream identity (key bits are
+        untouched — selection scopes *which leaves* consume the stream, not
+        the stream itself), scoped to ``selection`` at ``phase``."""
+        return self._replace(selection=selection, phase=phase)
+
+    def selection_mask(self, params) -> Optional[tuple]:
+        """Static per-leaf active mask for ``params`` (flattening order), or
+        ``None`` when the ref carries no selection (all leaves active)."""
+        if self.selection is None:
+            return None
+        return self.selection.leaf_mask(params, self.phase)
 
     # -- threefry projection (xla backend) ---------------------------------- #
     def leaf_key(self, leaf_index: int) -> jax.Array:

@@ -73,27 +73,40 @@ def sample_z_tree(params: PyTree, key: jax.Array, dist: Distribution = "gaussian
     return z
 
 
-def _sphere_scale(params: PyTree, key: jax.Array) -> jnp.ndarray:
+def _sphere_scale(params: PyTree, key: jax.Array,
+                  mask: Optional[tuple] = None) -> jnp.ndarray:
     """sqrt(d)/||z|| for sphere sampling, computed by regenerating z leaf-wise
-    (two-pass; still never stores the tree)."""
-    d = tree_size(params)
-    sq = jnp.float32(0)
+    (two-pass; still never stores the tree).  Under a selection ``mask`` the
+    sphere lives in the selected subspace: d and ‖z‖ count selected leaves
+    only (unselected leaves consume no z at all)."""
     leaves = jax.tree_util.tree_leaves(params)
+    if mask is None:
+        d = tree_size(params)
+    else:
+        d = sum(int(p.size) for p, m in zip(leaves, mask) if m)
+    sq = jnp.float32(0)
     for i, p in enumerate(leaves):
+        if mask is not None and not mask[i]:
+            continue
         z = sample_leaf_z(leaf_key(key, i), p, "gaussian")
         sq = sq + jnp.sum(z.astype(jnp.float32) ** 2)
     return jnp.sqrt(d / sq)
 
 
-def perturb(params: PyTree, key: jax.Array, scale, dist: Distribution = "gaussian") -> PyTree:
+def perturb(params: PyTree, key: jax.Array, scale, dist: Distribution = "gaussian",
+            mask: Optional[tuple] = None) -> PyTree:
     """θ + scale · z(key)  — the paper's ``PerturbParameters(θ, scale, s)``.
 
     ``scale`` may be a traced scalar (used for the fused restore+update).
-    Regenerating with the same ``key`` always yields the same z.
+    Regenerating with the same ``key`` always yields the same z.  ``mask`` is
+    a static per-leaf selection (repro.select): unselected leaves pass
+    through with zero z generation.
     """
     if dist == "sphere":
-        sph = _sphere_scale(params, key)
+        sph = _sphere_scale(params, key, mask)
     def one(i: int, p: jnp.ndarray) -> jnp.ndarray:
+        if mask is not None and not mask[i]:
+            return p
         z = sample_leaf_z(leaf_key(key, i), p, dist)
         if dist == "sphere":
             z = z * sph.astype(z.dtype)
@@ -103,7 +116,8 @@ def perturb(params: PyTree, key: jax.Array, scale, dist: Distribution = "gaussia
 
 
 def fused_restore_update(params_minus: PyTree, key: jax.Array, eps, lr_g, weight_decay=0.0,
-                         dist: Distribution = "gaussian") -> PyTree:
+                         dist: Distribution = "gaussian",
+                         mask: Optional[tuple] = None) -> PyTree:
     """Given θ − εz (the state after the second perturbation), produce the
     post-step parameters in ONE pass over the tree:
 
@@ -112,12 +126,16 @@ def fused_restore_update(params_minus: PyTree, key: jax.Array, eps, lr_g, weight
 
     regenerating each leaf's z exactly once.  This fuses the paper's
     'reset parameters' and 'descent' loops and halves the number of z
-    regenerations per step (4 -> 3).
+    regenerations per step (4 -> 3).  Unselected ``mask`` leaves were never
+    perturbed, so they pass through completely untouched — including the
+    decay term (a PEFT selection must not decay the frozen base).
     """
     if dist == "sphere":
-        sph = _sphere_scale(params_minus, key)
+        sph = _sphere_scale(params_minus, key, mask)
     decay = 1.0 - weight_decay
     def one(i: int, p: jnp.ndarray) -> jnp.ndarray:
+        if mask is not None and not mask[i]:
+            return p
         z = sample_leaf_z(leaf_key(key, i), p, dist)
         if dist == "sphere":
             z = z * sph.astype(z.dtype)
@@ -130,19 +148,24 @@ def fused_restore_update(params_minus: PyTree, key: jax.Array, eps, lr_g, weight
 
 def apply_rank1(params: PyTree, key: jax.Array, coeff, decay_term=0.0,
                 dist: Distribution = "gaussian",
-                d_tree: Optional[PyTree] = None) -> PyTree:
+                d_tree: Optional[PyTree] = None,
+                mask: Optional[tuple] = None) -> PyTree:
     """θ ← (1 − decay_term)·θ − coeff·z(key), regenerating z leaf by leaf.
 
     ``coeff`` is the full η-scaled scalar (η·g, or η/n·g per seed);
     ``decay_term`` is the decoupled weight-decay coefficient η·λ.  ``d_tree``
     holds one positive scalar per leaf and rescales z (Definition 6's
     block-diagonal D); ``None`` leaves z unscaled (Definition 7 / plain SPSA).
-    Non-floating leaves pass through untouched.
+    Non-floating leaves and unselected ``mask`` leaves pass through untouched
+    (no decay either — the update, decay included, is scoped to the
+    selection).
     """
     d_leaves = jax.tree_util.tree_leaves(d_tree) if d_tree is not None else None
 
     def one(i, p):
         if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p
+        if mask is not None and not mask[i]:
             return p
         z = sample_leaf_z(leaf_key(key, i), p, dist)
         if d_leaves is not None:
@@ -163,7 +186,11 @@ def perturb_jit(params: PyTree, key: jax.Array, scale, dist: Distribution = "gau
 # Backend adapter
 # --------------------------------------------------------------------------- #
 class XLABackend(PerturbBackend):
-    """Threefry z streams, HBM-resident temporaries, all distributions."""
+    """Threefry z streams, HBM-resident temporaries, all distributions.
+
+    Selection-aware: a ``StreamRef`` carrying a ``repro.select.Selection``
+    scopes every method to the selected leaves — unselected leaves are
+    skipped at trace time (zero z generation, zero writes)."""
 
     name = "xla"
     dists = frozenset({"gaussian", "rademacher", "sphere"})
@@ -171,21 +198,23 @@ class XLABackend(PerturbBackend):
     def perturb(self, params: PyTree, ref: StreamRef, scale,
                 dist: str = "gaussian") -> PyTree:
         self.check_dist(dist)
-        return perturb(params, ref.key, scale, dist)
+        return perturb(params, ref.key, scale, dist,
+                       mask=ref.selection_mask(params))
 
     def fused_restore_update(self, params_minus: PyTree, ref: StreamRef, eps,
                              lr_g, weight_decay=0.0,
                              dist: str = "gaussian") -> PyTree:
         self.check_dist(dist)
         return fused_restore_update(params_minus, ref.key, eps, lr_g,
-                                    weight_decay, dist)
+                                    weight_decay, dist,
+                                    mask=ref.selection_mask(params_minus))
 
     def apply_rank1(self, params: PyTree, ref: StreamRef, coeff,
                     decay_term=0.0, dist: str = "gaussian",
                     d_tree: Optional[PyTree] = None) -> PyTree:
         self.check_dist(dist)
         return apply_rank1(params, ref.key, coeff, decay_term, dist,
-                           d_tree=d_tree)
+                           d_tree=d_tree, mask=ref.selection_mask(params))
 
     def leaf_z(self, ref: StreamRef, leaf_index: int, like: jnp.ndarray,
                dist: str = "gaussian") -> jnp.ndarray:
@@ -198,9 +227,13 @@ class XLABackend(PerturbBackend):
         keys instead of B sequential tree passes.  Threefry is a counter-based
         integer hash and the uniform→z conversion is elementwise, so the
         batched lowering is bitwise-equal to stacking per-ref ``perturb``
-        calls (contract-tested)."""
+        calls (contract-tested).  Unselected leaves never enter the vmapped
+        generation; vmap broadcasts them to the batch axis unperturbed —
+        identical to stacking masked singles."""
         self.check_dist(dist)
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
+        mask = refs[0].selection_mask(params)
         keys = jnp.stack([r.key for r in refs])
-        return jax.vmap(lambda k: perturb(params, k, scale, dist))(keys)
+        return jax.vmap(lambda k: perturb(params, k, scale, dist,
+                                          mask=mask))(keys)

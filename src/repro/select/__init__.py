@@ -1,0 +1,35 @@
+"""``repro.select`` — the parameter-selection layer: masked & block-scheduled
+ZO perturbation, honored by every estimator, backend, and execution plan.
+
+One ``Selection`` (a static leaf predicate + an optional per-step block
+schedule) threads through the whole stack:
+
+* ``repro.perturb`` — ``StreamRef`` carries the selection; both backends
+  (``xla``, ``pallas``) *skip* unselected leaves in ``perturb`` /
+  ``fused_restore_update`` / ``apply_rank1`` / ``perturb_many`` (zero z
+  generation, zero writes — not a masked multiply);
+* ``repro.zo`` — every estimator factory accepts ``selection=``; the scalar
+  transform chain is unchanged (selection lives below the scalars);
+* ``repro.exec`` — every plan carries the selection, and the schedule phase
+  is derived from the step counter of the one seed schedule, so it is
+  plan-invariant (a block_cyclic ledger recorded under seed_parallel replays
+  under ``replay()``);
+* persistence — checkpoint meta and the ``MZOL5`` ledger header record the
+  selection spec + phase offset; mismatched replay refuses
+  (``SelectionMismatchError``).
+
+>>> from repro import select, zo
+>>> opt = zo.mezo(lr=1e-6, selection=select.block_cyclic(4))
+>>> opt = zo.fzoo(lr=1e-6, selection="leaves(\\\\['attn'\\\\])")
+>>> opt = zo.mezo(lr=1e-3, selection=select.peft("lora"))   # merged-tree PEFT
+"""
+from repro.select.base import (PEFT_MODES, SELECTION_KINDS, Selection,
+                               SelectionMismatchError, block_cyclic,
+                               check_replay_selection, full, leaves,
+                               parse_selection, peft, resolve_selection)
+
+__all__ = [
+    "PEFT_MODES", "SELECTION_KINDS", "Selection", "SelectionMismatchError",
+    "block_cyclic", "check_replay_selection", "full", "leaves",
+    "parse_selection", "peft", "resolve_selection",
+]

@@ -1,0 +1,274 @@
+"""``Selection`` — which parameter leaves a ZO step perturbs, and when.
+
+MeZO composes with parameter subsets by construction (the optimizer perturbs
+whatever tree it is given — paper §3's PEFT results), and follow-up work
+(Wang et al., 2024) shows *block-scheduled* sparse perturbation cuts both
+compute and estimator variance.  Before this layer the repo had two disjoint
+mechanisms: every estimator perturbed the full tree, and PEFT subsetting only
+worked by swapping the whole params tree (``models/peft.py``).  ``Selection``
+is the one contract both now share:
+
+* a **static leaf predicate** — which leaves of the tree are trainable at a
+  given schedule phase (pure function of the flattened tree structure, so it
+  is decided at trace time: skipped leaves cost *zero* z generation and zero
+  parameter writes, not a masked multiply);
+* an optional **per-step block schedule** — ``n_phases`` rotating blocks with
+  phase(t) = (t + phase_offset) mod n_phases, derived from the step counter
+  of the one seed schedule, so the phase is identical under every execution
+  plan (local, seed_parallel, async_worker, replay).
+
+Built-in selections::
+
+    full()                   # every leaf, every step (the default; zero-cost)
+    leaves(pattern)          # regex over keystr leaf paths, static
+    block_cyclic(k)          # leaf i active at phase i % k; phase = t % k
+    peft("lora" | "prefix")  # the merged-tree PEFT subtree (models/peft.py)
+
+Selections are plain hashable NamedTuples with a canonical string ``spec``
+(``parse_selection`` round-trips it) — the form recorded in checkpoint meta
+and the ``MZOL5`` trajectory-ledger header.  Replaying an artifact under a
+different selection would pair the recorded scalars with different
+perturbation supports, so ``check_replay_selection`` refuses the mismatch
+(``SelectionMismatchError``), mirroring ``BackendMismatchError`` /
+``PlanMismatchError``.
+
+Unselected leaves are **completely untouched** by a step: no perturbation, no
+rank-1 update, and no decoupled weight decay (a ``peft`` selection must not
+decay the frozen base tree).
+"""
+from __future__ import annotations
+
+import re
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+SELECTION_KINDS = ("full", "leaves", "block_cyclic", "peft")
+PEFT_MODES = ("lora", "prefix")
+
+
+class SelectionMismatchError(RuntimeError):
+    """A seed-replay artifact (ledger / checkpoint) was recorded under one
+    parameter selection and is being replayed under another.  The selection
+    decides which leaves each recorded scalar's rank-1 update touches, so
+    continuing would silently apply the updates to a different parameter
+    support — refuse instead."""
+
+
+class Selection(NamedTuple):
+    """One parameter-selection rule: ``kind`` + canonical argument, plus the
+    block-schedule coordinates (``n_phases``, ``phase_offset``).  Hashable and
+    comparable — it rides jit closures and ``functools.partial`` branches as
+    static data."""
+    kind: str
+    arg: str = ""
+    n_phases: int = 1
+    phase_offset: int = 0
+
+    # -- identity ----------------------------------------------------------- #
+    @property
+    def spec(self) -> str:
+        """Canonical string form (``parse_selection`` round-trips it); the
+        identity recorded in checkpoint meta and the MZOL5 ledger header.
+        ``phase_offset`` is recorded separately (the ``sel_phase`` field)."""
+        if self.kind == "full":
+            return "full"
+        if self.kind == "block_cyclic":
+            return f"block_cyclic({self.n_phases})"
+        return f"{self.kind}({self.arg})"
+
+    def is_full(self) -> bool:
+        return self.kind == "full"
+
+    # -- schedule ----------------------------------------------------------- #
+    def phase_at(self, step):
+        """Schedule phase of step t: ``(t + phase_offset) mod n_phases``.
+        A pure function of the step counter — the same coordinate every
+        execution plan folds its seed streams from — so the phase is
+        plan-invariant by construction.  Works on Python ints (replay, async
+        application) and traced ints (the jitted step's ``lax.switch``
+        index) alike."""
+        return (step + self.phase_offset) % self.n_phases
+
+    # -- the static predicate ----------------------------------------------- #
+    def leaf_mask(self, params, phase: int = 0) -> Optional[tuple]:
+        """Per-leaf boolean tuple for ``phase`` (flattening order), or
+        ``None`` for the full selection (the no-overhead signal backends
+        branch on).  Computed from the tree *structure* only — static at
+        trace time, which is what lets backends skip unselected leaves
+        entirely instead of masking them.  Non-floating leaves are never
+        selected (the backends cannot perturb them; counting them would let
+        a block phase — or a regex — select nothing perturbable).  An empty
+        selection fails loudly: a step that perturbs nothing is a
+        configuration error, not a no-op.
+        """
+        if self.kind == "full":
+            return None
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        floating = [jnp.issubdtype(leaf.dtype, jnp.floating)
+                    for _, leaf in flat]
+        if self.kind == "block_cyclic":
+            k = self.n_phases
+            n_float = sum(floating)
+            if n_float < k:
+                raise ValueError(
+                    f"block_cyclic({k}) over a tree with only {n_float} "
+                    f"floating leaves leaves some phases with nothing to "
+                    f"perturb; use k <= {n_float}")
+            ph = int(phase) % k
+            # block indices are assigned over the FLOATING leaves in
+            # flattening order, so every phase owns perturbable leaves even
+            # when integer leaves (token tables, masks) ride in the tree
+            mask, j = [], 0
+            for f in floating:
+                mask.append(bool(f) and (j % k) == ph)
+                j += 1 if f else 0
+            mask = tuple(mask)
+        else:
+            paths = [jax.tree_util.keystr(p) for p, _ in flat]
+            if self.kind == "leaves":
+                rx = re.compile(self.arg)
+                mask = tuple(bool(f) and bool(rx.search(s))
+                             for f, s in zip(floating, paths))
+            elif self.kind == "peft":
+                prefix = f"['{self.arg}']"
+                mask = tuple(bool(f) and s.startswith(prefix)
+                             for f, s in zip(floating, paths))
+            else:
+                raise ValueError(f"unknown selection kind {self.kind!r}")
+            if not any(mask):
+                raise ValueError(
+                    f"selection {self.spec!r} matches no floating leaves of "
+                    f"the parameter tree (paths: {paths[:4]}...); an empty "
+                    "selection would silently train nothing")
+        return mask
+
+    # -- accounting (benchmarks / reporting) -------------------------------- #
+    def selected_size(self, params, phase: int = 0) -> int:
+        """Scalar count of the leaves active at ``phase``."""
+        mask = self.leaf_mask(params, phase)
+        leaves = jax.tree_util.tree_leaves(params)
+        if mask is None:
+            return sum(x.size for x in leaves)
+        return sum(x.size for x, m in zip(leaves, mask) if m)
+
+    def selected_bytes(self, params, phase: int = 0) -> int:
+        """Bytes of the leaves active at ``phase`` — the per-step perturbed
+        (read-modify-write) traffic a backend pays under this selection."""
+        mask = self.leaf_mask(params, phase)
+        leaves = jax.tree_util.tree_leaves(params)
+        if mask is None:
+            return sum(x.size * x.dtype.itemsize for x in leaves)
+        return sum(x.size * x.dtype.itemsize
+                   for x, m in zip(leaves, mask) if m)
+
+
+# --------------------------------------------------------------------------- #
+# Factories
+# --------------------------------------------------------------------------- #
+def full() -> Selection:
+    """Every leaf, every step — the default, and bitwise-identical to not
+    passing a selection at all (estimators normalize it to ``None``)."""
+    return Selection("full")
+
+
+def leaves(pattern: str) -> Selection:
+    """Static leaf selection by regex over ``jax.tree_util.keystr`` paths
+    (e.g. ``leaves(r"\\['attn'\\]")`` perturbs only attention leaves)."""
+    re.compile(pattern)            # fail at construction, not at trace time
+    return Selection("leaves", arg=pattern)
+
+
+def block_cyclic(k: int, phase_offset: int = 0) -> Selection:
+    """k rotating leaf blocks: leaf i is active at phase i mod k, and step t
+    runs phase (t + phase_offset) mod k — each step perturbs ~1/k of the
+    tree, each leaf is visited every k steps (Wang et al., 2024's
+    block-scheduled sparse ZO)."""
+    k = int(k)
+    if k < 1:
+        raise ValueError(f"block_cyclic needs k >= 1, got {k}")
+    return Selection("block_cyclic", n_phases=k,
+                     phase_offset=int(phase_offset) % k)
+
+
+def peft(mode: str) -> Selection:
+    """The merged-tree PEFT selection: perturb only the ``mode`` subtree of a
+    ``models.peft.peft_params(base, tree, mode)`` merged tree — LoRA / prefix
+    become ordinary selections, replacing the bespoke tree-swap path."""
+    if mode not in PEFT_MODES:
+        raise ValueError(f"unknown peft mode {mode!r}; available: {PEFT_MODES}")
+    return Selection("peft", arg=mode)
+
+
+# --------------------------------------------------------------------------- #
+# Spec parsing / normalization
+# --------------------------------------------------------------------------- #
+_SPEC_RE = re.compile(r"^(\w+)\((.*)\)$")
+
+
+def parse_selection(spec: str, phase_offset: int = 0) -> Selection:
+    """Parse a canonical spec string (``Selection.spec`` round-trips):
+    ``"full"``, ``"leaves(<regex>)"``, ``"block_cyclic(<k>)"``,
+    ``"peft(lora|prefix)"``."""
+    spec = spec.strip()
+    if spec == "full":
+        return full()
+    m = _SPEC_RE.match(spec)
+    if m is None:
+        raise ValueError(
+            f"unparseable selection spec {spec!r}; expected one of: full, "
+            "leaves(<regex>), block_cyclic(<k>), peft(lora|prefix)")
+    kind, arg = m.group(1), m.group(2)
+    if kind == "leaves":
+        return leaves(arg)
+    if kind == "block_cyclic":
+        return block_cyclic(int(arg), phase_offset=phase_offset)
+    if kind == "peft":
+        return peft(arg)
+    raise ValueError(f"unknown selection kind {kind!r}; "
+                     f"available: {SELECTION_KINDS}")
+
+
+def resolve_selection(
+        selection: Union[None, str, Selection]) -> Optional[Selection]:
+    """Normalize an estimator-factory ``selection=`` argument: ``None`` and
+    the full selection (object or ``"full"`` spec) become ``None`` — the
+    zero-overhead signal that keeps the default path bitwise-identical to
+    the pre-selection code — and spec strings are parsed."""
+    if selection is None:
+        return None
+    if isinstance(selection, str):
+        selection = parse_selection(selection)
+    if not isinstance(selection, Selection):
+        raise TypeError(f"selection must be a repro.select.Selection or spec "
+                        f"string, got {type(selection).__name__}")
+    if selection.is_full() and selection.phase_offset == 0:
+        return None
+    return selection
+
+
+# --------------------------------------------------------------------------- #
+# Replay-coordinate check (mirrors check_replay_backend / check_replay_plan)
+# --------------------------------------------------------------------------- #
+def check_replay_selection(recorded: Optional[str], active: Optional[str],
+                           what: str,
+                           recorded_phase: Optional[int] = None,
+                           active_phase: Optional[int] = None) -> None:
+    """Raise ``SelectionMismatchError`` if a recorded artifact's selection
+    spec (or schedule phase offset) does not match the active optimizer's.
+    ``None`` on either side (a pre-selection artifact, or a non-ZO optimizer)
+    skips the check; MZOL1–4 ledgers deserialize with ``selection="full"``."""
+    if recorded is None or active is None:
+        return
+    rp = int(recorded_phase or 0)
+    ap = int(active_phase or 0)
+    if recorded != active or rp != ap:
+        raise SelectionMismatchError(
+            f"{what} was recorded under parameter selection {recorded!r} "
+            f"(phase offset {rp}) but the active optimizer runs {active!r} "
+            f"(phase offset {ap}); the selection decides which leaves each "
+            "recorded scalar's rank-1 update touches, so replay would "
+            "silently apply the updates to a different parameter support.  "
+            f"Re-create the optimizer with selection={recorded!r} (e.g. "
+            f"zo.mezo(..., selection={recorded!r})).")

@@ -40,6 +40,7 @@ from repro.core.trajectory import TrajectoryLedger
 from repro.data.pipeline import Pipeline
 from repro.exec import as_step_program, check_replay_plan
 from repro.perturb import check_replay_backend
+from repro.select import check_replay_selection
 from repro.tree_utils import PyTree
 
 
@@ -106,6 +107,8 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
             ledger.batch_seeds = int(meta["batch_seeds"])
             ledger.exec_plan = meta["exec_plan"]
             ledger.n_groups = int(meta["n_groups"])
+            ledger.selection = meta["selection"] or "full"
+            ledger.sel_phase = int(meta["sel_phase"] or 0)
         else:
             check_replay_backend(ledger.backend, backend_name,
                                  "the provided trajectory ledger")
@@ -113,6 +116,11 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
                               "the provided trajectory ledger",
                               recorded_kind=ledger.exec_plan,
                               active_kind=meta["exec_plan"])
+            check_replay_selection(getattr(ledger, "selection", None),
+                                   meta["selection"],
+                                   "the provided trajectory ledger",
+                                   getattr(ledger, "sel_phase", 0),
+                                   meta["sel_phase"])
 
     start_step = 0
     # ---- resume ---------------------------------------------------------- #
@@ -135,6 +143,10 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
                               meta["n_groups"], "checkpoint",
                               recorded_kind=restored["meta"].get("exec_plan"),
                               active_kind=meta["exec_plan"])
+            check_replay_selection(restored["meta"].get("selection"),
+                                   meta["selection"], "checkpoint",
+                                   restored["meta"].get("sel_phase"),
+                                   meta["sel_phase"])
             params = restored["params"]
             opt_state = restored["opt_state"] if restored["opt_state"] is not None else opt_state
             start_step = restored["step"]
@@ -151,6 +163,8 @@ def train(loss_fn: Callable, params: PyTree, optimizer, pipeline: Pipeline,
                     ledger.batch_seeds = saved.batch_seeds
                     ledger.exec_plan = saved.exec_plan
                     ledger.n_groups = saved.n_groups
+                    ledger.selection = saved.selection
+                    ledger.sel_phase = saved.sel_phase
             # realign the optimizer's step counter (seed source + lr index)
             # with wherever resume landed — the protocol's resume hook
             opt_state = program.restore(opt_state, start_step)

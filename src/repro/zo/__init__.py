@@ -50,6 +50,8 @@ Quick start
 >>> from repro import zo
 >>> opt = zo.mezo(lr=1e-6, eps=1e-3)                 # Algorithm 1
 >>> opt = zo.mezo(lr=1e-6, eps=1e-3, backend="pallas")   # z in VMEM, not HBM
+>>> opt = zo.mezo(lr=1e-6, selection="block_cyclic(4)")  # repro.select: ~1/4
+...     # of the tree perturbed per step (zero z generation for the rest)
 >>> opt = zo.fzoo(lr=1e-6, eps=1e-3, batch_seeds=8)  # FZOO: B batched
 ...     # one-sided seed streams per step, one vmapped forward, step size
 ...     # normalized by the std of the B loss differences

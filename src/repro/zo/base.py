@@ -18,6 +18,7 @@ zeroth-order updates (a MeZO step is fully determined by ``(seed, g)`` pairs):
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
@@ -70,7 +71,13 @@ class ZOEstimator(NamedTuple):
     a (B,)-vector of per-seed scalars rather than a scalar.  The transform
     chain applies elementwise, the facade exposes the vector as the
     ``projected_grads`` metric for per-seed ledger recording, and
-    ``replay_update`` replays the B folded rank-1 updates."""
+    ``replay_update`` replays the B folded rank-1 updates.
+
+    ``selection`` is the resolved ``repro.select.Selection`` scoping the
+    estimator's perturbations to a parameter subset (``None`` = full tree —
+    the zero-overhead default).  When the selection carries a block schedule
+    (``n_phases > 1``), ``estimate`` must accept a static ``phase=`` kwarg
+    and the facade dispatches the step over phases."""
     init: Callable[[Optional[PyTree], jax.Array], Any]
     estimate: Callable[..., ZOEstimate]
     n_seeds: int = 1
@@ -80,6 +87,7 @@ class ZOEstimator(NamedTuple):
     replayable: bool = True
     backend: Optional[PerturbBackend] = None
     batch_seeds: int = 1
+    selection: Any = None
 
 
 # --------------------------------------------------------------------------- #
@@ -224,6 +232,13 @@ class ZOOptimizer:
                 "add_weight_decay sets the scalar decay slot, which applier "
                 "transforms (scale_by_zo_adam / trace) bypass — pass "
                 "weight_decay= to the applier transform instead")
+        if getattr(estimator, "selection", None) is not None and \
+                self.transform.info.get("applier"):
+            raise ValueError(
+                "applier transforms (scale_by_zo_adam / trace) materialize "
+                "their update over the FULL tree from the g-history, which "
+                "would write unselected leaves; parameter selections "
+                "(repro.select) compose with rank-1 scalar chains only")
 
     # -- introspection (used for ledger replay and by distributed paths) ---- #
     @property
@@ -250,6 +265,28 @@ class ZOOptimizer:
         return int(getattr(self.estimator, "batch_seeds", 1))
 
     @property
+    def selection(self):
+        """The resolved ``repro.select.Selection`` scoping this composition's
+        perturbations (``None`` = full tree)."""
+        return getattr(self.estimator, "selection", None)
+
+    @property
+    def selection_spec(self) -> str:
+        """Canonical selection spec recorded in checkpoint/ledger metadata
+        (``"full"`` when no selection is set) — replay under a different
+        selection fails loudly (``SelectionMismatchError``) instead of
+        applying the recorded scalars to a different parameter support."""
+        sel = self.selection
+        return "full" if sel is None else sel.spec
+
+    @property
+    def selection_phase(self) -> int:
+        """The selection's block-schedule phase offset (0 when unscheduled);
+        recorded alongside the spec — phase(t) = (t + offset) mod n_phases."""
+        sel = self.selection
+        return 0 if sel is None else int(sel.phase_offset)
+
+    @property
     def weight_decay(self) -> float:
         return self.info.get("weight_decay", 0.0)
 
@@ -272,10 +309,14 @@ class ZOOptimizer:
         ``_replace(step=...)`` in the training loop."""
         return state._replace(step=jnp.int32(step))
 
-    def replay_update(self, params: PyTree, skey: jax.Array, g, lr) -> PyTree:
+    def replay_update(self, params: PyTree, skey: jax.Array, g, lr,
+                      phase: int = 0) -> PyTree:
         """Apply one scalar-ledger entry: θ ← (1−η·λ)·θ − η·g·z(skey).
         Used by trajectory replay and checkpoint recovery — no forward
-        passes, no data access (paper §2.1).
+        passes, no data access (paper §2.1).  ``phase`` is the static
+        block-schedule phase of the replayed step (0 for unscheduled
+        selections) — the caller derives it from the step index exactly as
+        the live step did.
 
         Only rank-1 compositions are replayable from (seed, g, lr) triples:
         an applier transform's step (ZO-Adam / trace) also depends on its
@@ -291,6 +332,7 @@ class ZOOptimizer:
                 f"{self.name}: the {self.estimator.name!r} estimator updates "
                 "along D·z (Definition 6), which a (seed, g, lr) ledger entry "
                 "cannot reproduce; resume from a full state checkpoint")
+        sel = self.selection
         if self.batch_seeds > 1:
             # batched-seed (FZOO) entry: g is the (B,) per-seed vector and the
             # step was B folded rank-1 applications — replay them identically
@@ -298,8 +340,12 @@ class ZOOptimizer:
             return apply_rank1_batch(params, skey, lr * jnp.asarray(g),
                                      lr * self.weight_decay,
                                      dist=self.estimator.dist,
-                                     backend=self.backend)
-        return self.backend.apply_rank1(params, StreamRef(skey), lr * g,
+                                     backend=self.backend,
+                                     selection=sel, phase=phase)
+        ref = StreamRef(skey)
+        if sel is not None:
+            ref = ref.with_selection(sel, phase)
+        return self.backend.apply_rank1(params, ref, lr * g,
                                         lr * self.weight_decay,
                                         self.estimator.dist)
 
@@ -309,8 +355,10 @@ class ZOOptimizer:
         tf = self.transform
         n = est.n_seeds
         backend = self.backend
+        sel = self.selection
+        n_phases = 1 if sel is None else int(sel.n_phases)
 
-        def step(params: PyTree, state: ZOState, batch):
+        def body(params: PyTree, state: ZOState, batch, phase: int):
             skey0 = step_key(state.base_key, state.step)
             p = params
             est_state, tf_state = state.est_state, state.tf_state
@@ -319,7 +367,11 @@ class ZOOptimizer:
             lr_metric = None
             for j in range(n):
                 skey = jax.random.fold_in(skey0, j) if n > 1 else skey0
-                e = est.estimate(loss_fn, p, batch, skey, est_state)
+                if n_phases > 1:
+                    e = est.estimate(loss_fn, p, batch, skey, est_state,
+                                     phase=phase)
+                else:
+                    e = est.estimate(loss_fn, p, batch, skey, est_state)
                 est_state = e.est_state
                 ctx = TransformCtx(step=state.step, base_key=state.base_key,
                                    key=skey, seed_index=j, n_seeds=n,
@@ -356,5 +408,22 @@ class ZOOptimizer:
                 # ledger records what replay_update needs (one g per stream)
                 metrics["projected_grads"] = gs[0]
             return p, new_state, metrics
+
+        if n_phases == 1:
+            def step(params: PyTree, state: ZOState, batch):
+                return body(params, state, batch, 0)
+        else:
+            # block-scheduled selection: the active leaf block is a STATIC
+            # trace-time property (skipped leaves cost zero z generation), so
+            # the step dispatches over the n_phases static bodies with
+            # lax.switch on phase(t) = (t + offset) mod n_phases — a pure
+            # function of the step counter, hence identical under every
+            # execution plan
+            branches = [functools.partial(body, phase=ph)
+                        for ph in range(n_phases)]
+
+            def step(params: PyTree, state: ZOState, batch):
+                return jax.lax.switch(sel.phase_at(state.step), branches,
+                                      params, state, batch)
 
         return step

@@ -12,6 +12,12 @@ z as threefry HBM temporaries, ``"pallas"`` generates z tile-by-tile in VMEM
 via the fused kernel — same estimator chain, different point in the memory
 hierarchy.  Unsupported (backend, dist) pairs fail loudly at factory time.
 
+Every factory also accepts ``selection=`` (a ``repro.select.Selection`` or
+spec string): the perturbation/update chain is scoped to the selected leaves
+— unselected leaves cost zero z generation and are never written.  Block
+schedules (``select.block_cyclic(k)``) make ``estimate`` phase-aware: the
+facade passes the static schedule phase of the step.
+
 * ``spsa``          — two-point SPSA (Definition 1 / Algorithm 1 lines 3–8).
 * ``n_spsa``        — n independent seeds, interleaved updates (Algorithm 2);
                       the facade folds the step key once per seed.
@@ -42,6 +48,7 @@ from repro.core.spsa import OnePointState, one_point_init, zo_grad_norm
 from repro.perturb import StreamRef, get_backend
 from repro.perturb.base import BackendSpec
 from repro.perturb.xla import Distribution
+from repro.select import resolve_selection
 from repro.tree_utils import PyTree, tree_map_with_index
 from repro.zo.base import ZOEstimate, ZOEstimator
 from repro.zo.updates import apply_rank1_batch
@@ -51,20 +58,25 @@ from repro.zo.updates import apply_rank1_batch
 # SPSA (Definition 1) and n-SPSA (Algorithm 2)
 # --------------------------------------------------------------------------- #
 def spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
-         sequential: bool = True, backend: BackendSpec = None) -> ZOEstimator:
+         sequential: bool = True, backend: BackendSpec = None,
+         selection=None) -> ZOEstimator:
     """Two-point SPSA.  ``sequential=True`` is the paper-faithful in-place
     chain θ → θ+εz → θ−εz with a fused restore+descent pass; ``False``
     perturbs from the center twice (one more live buffer, numerically
-    cleaner — θ itself is never touched)."""
+    cleaner — θ itself is never touched).  ``selection`` scopes the
+    perturbation to a parameter subset (``repro.select``); skipped leaves
+    cost zero z generation."""
     be = get_backend(backend)
     be.check_dist(dist)
+    sel = resolve_selection(selection)
 
     def init(params, key):
         del params, key
         return ()
 
-    def estimate(loss_fn, params, batch, key, est_state):
-        ref = StreamRef(key)
+    def estimate(loss_fn, params, batch, key, est_state, phase: int = 0):
+        ref = StreamRef(key) if sel is None else \
+            StreamRef(key).with_selection(sel, phase)
         if sequential:
             p_plus = be.perturb(params, ref, eps, dist)
             l_plus = loss_fn(p_plus, batch)
@@ -96,17 +108,19 @@ def spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
                           est_state=est_state, aux={})
 
     return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
-                       dist=dist, name="spsa", backend=be)
+                       dist=dist, name="spsa", backend=be, selection=sel)
 
 
 def n_spsa(n: int, eps: float = 1e-3, dist: Distribution = "gaussian",
-           sequential: bool = True, backend: BackendSpec = None) -> ZOEstimator:
+           sequential: bool = True, backend: BackendSpec = None,
+           selection=None) -> ZOEstimator:
     """n-SPSA, sequential over seeds (Algorithm 2): the facade runs the
     two-point estimate once per folded seed key and applies each seed's
     update (η/n per seed) before the next seed's perturbation — the same
     one-live-buffer chain as n=1.  The seed-parallel variant that trades this
     for batch slicing lives in ``repro.distributed.collectives``."""
-    base = spsa(eps=eps, dist=dist, sequential=sequential, backend=backend)
+    base = spsa(eps=eps, dist=dist, sequential=sequential, backend=backend,
+                selection=selection)
     return base._replace(n_seeds=int(n), name="n_spsa")
 
 
@@ -114,7 +128,7 @@ def n_spsa(n: int, eps: float = 1e-3, dist: Distribution = "gaussian",
 # FZOO batched seeds (Dang et al., 2025)
 # --------------------------------------------------------------------------- #
 def fzoo(batch_seeds: int = 8, eps: float = 1e-3, dist: Distribution = "gaussian",
-         backend: BackendSpec = None) -> ZOEstimator:
+         backend: BackendSpec = None, selection=None) -> ZOEstimator:
     """Batched-seed one-sided estimator: per step, B seed streams
     z_1..z_B (folded from the step key exactly as ``replay_update`` refolds
     them), ONE batched forward over the stacked θ+εz_j views produced by
@@ -131,6 +145,7 @@ def fzoo(batch_seeds: int = 8, eps: float = 1e-3, dist: Distribution = "gaussian
     separate so the estimator stays a pure gradient estimator."""
     be = get_backend(backend)
     be.check_dist(dist)
+    sel = resolve_selection(selection)
     n_batch = int(batch_seeds)
     if n_batch < 1:
         raise ValueError(f"batch_seeds must be >= 1, got {batch_seeds}")
@@ -139,7 +154,7 @@ def fzoo(batch_seeds: int = 8, eps: float = 1e-3, dist: Distribution = "gaussian
         del params, key
         return ()
 
-    def estimate(loss_fn, params, batch, key, est_state):
+    def estimate(loss_fn, params, batch, key, est_state, phase: int = 0):
         # B == 1 degenerates to one-sided SPSA on the unfolded step key (the
         # property-test contract, and what scalar-ledger replay refolds);
         # B > 1 folds one stream per seed exactly as apply_rank1_batch does.
@@ -148,6 +163,8 @@ def fzoo(batch_seeds: int = 8, eps: float = 1e-3, dist: Distribution = "gaussian
         else:
             refs = [StreamRef(jax.random.fold_in(key, j))
                     for j in range(n_batch)]
+        if sel is not None:
+            refs = [r.with_selection(sel, phase) for r in refs]
         stacked = be.perturb_many(params, refs, eps, dist)
         losses = jax.vmap(lambda p: loss_fn(p, batch))(stacked)
         l0 = loss_fn(params, batch)
@@ -163,7 +180,7 @@ def fzoo(batch_seeds: int = 8, eps: float = 1e-3, dist: Distribution = "gaussian
                 return be.apply_rank1(params, refs[0], coeff, decay_term,
                                       dist)
             return apply_rank1_batch(params, key, coeff, decay_term, dist,
-                                     backend=be)
+                                     backend=be, selection=sel, phase=phase)
 
         def restore():
             return params
@@ -176,26 +193,29 @@ def fzoo(batch_seeds: int = 8, eps: float = 1e-3, dist: Distribution = "gaussian
 
     return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
                        dist=dist, name="fzoo", replayable=True, backend=be,
-                       batch_seeds=n_batch)
+                       batch_seeds=n_batch, selection=sel)
 
 
 # --------------------------------------------------------------------------- #
 # One-point residual feedback (Definition 8)
 # --------------------------------------------------------------------------- #
 def one_point(eps: float = 1e-3, dist: Distribution = "gaussian",
-              backend: BackendSpec = None) -> ZOEstimator:
+              backend: BackendSpec = None, selection=None) -> ZOEstimator:
     """g_t = (L(θ_t + εz_t) − L_prev) / ε — one forward pass per step, the
     previous perturbed loss carried as estimator state.  Twice as fast per
     step as SPSA but far less query-efficient (paper Table 11)."""
     be = get_backend(backend)
     be.check_dist(dist)
+    sel = resolve_selection(selection)
 
     def init(params, key):
         del params, key
         return one_point_init()
 
-    def estimate(loss_fn, params, batch, key, est_state: OnePointState):
-        ref = StreamRef(key)
+    def estimate(loss_fn, params, batch, key, est_state: OnePointState,
+                 phase: int = 0):
+        ref = StreamRef(key) if sel is None else \
+            StreamRef(key).with_selection(sel, phase)
         l_pert = loss_fn(be.perturb(params, ref, eps, dist), batch)
         g = (l_pert - est_state.prev_perturbed_loss) / eps
 
@@ -210,7 +230,7 @@ def one_point(eps: float = 1e-3, dist: Distribution = "gaussian",
                           est_state=OnePointState(l_pert), aux={})
 
     return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
-                       dist=dist, name="one_point", backend=be)
+                       dist=dist, name="one_point", backend=be, selection=sel)
 
 
 # --------------------------------------------------------------------------- #
@@ -267,7 +287,7 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
                   probe_batch: Any = None,
                   probe_eps: float = 1e-4,
                   d_tree: Optional[PyTree] = None,
-                  backend: BackendSpec = None) -> ZOEstimator:
+                  backend: BackendSpec = None, selection=None) -> ZOEstimator:
     """Definition 6 (unbiased, update along D·z) / Definition 7
     (``modify_expectation=True``: biased normalized-gradient estimate, update
     along z).  The D-tree lives in the estimator state, so it rides through
@@ -275,6 +295,7 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
     init-time computation entirely."""
     be = get_backend(backend)
     be.check_dist(dist)
+    sel = resolve_selection(selection)
 
     def init(params, key):
         if d_tree is not None:
@@ -284,13 +305,17 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
         return compute_d_tree(params, key, d_source, probe_loss_fn,
                               probe_batch, probe_eps)
 
-    def estimate(loss_fn, params, batch, key, est_state):
-        ref = StreamRef(key)
+    def estimate(loss_fn, params, batch, key, est_state, phase: int = 0):
+        ref = StreamRef(key) if sel is None else \
+            StreamRef(key).with_selection(sel, phase)
+        mask = ref.selection_mask(params)
         d = est_state
         d_leaves = jax.tree_util.tree_leaves(d)
 
         def pert(i, p, sign):
             if not jnp.issubdtype(p.dtype, jnp.floating):
+                return p
+            if mask is not None and not mask[i]:
                 return p
             z = be.leaf_z(ref, i, p, dist)
             dinv = (1.0 / d_leaves[i]).astype(p.dtype)
@@ -318,4 +343,5 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
     # Definition 6 updates along D·z, which only the live est_state carries.
     return ZOEstimator(init=init, estimate=estimate, n_seeds=1, eps=eps,
                        dist=dist, name="rescaled_spsa",
-                       replayable=bool(modify_expectation), backend=be)
+                       replayable=bool(modify_expectation), backend=be,
+                       selection=sel)

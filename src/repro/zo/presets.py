@@ -38,7 +38,7 @@ def mezo(lr: float = 1e-6, eps: float = 1e-3, n: int = 1,
          total_steps: int = 0, warmup_steps: int = 0,
          sequential_perturb: bool = True,
          clip_projected_grad: float = 0.0,
-         backend: BackendSpec = None) -> ZOOptimizer:
+         backend: BackendSpec = None, selection=None) -> ZOOptimizer:
     """ZO-SGD with in-place seed-replay perturbations (paper Algorithm 1;
     Algorithm 2 when ``n > 1``).  Composition::
 
@@ -47,17 +47,21 @@ def mezo(lr: float = 1e-6, eps: float = 1e-3, n: int = 1,
 
     ``backend`` selects the z-generation strategy (``"xla"`` threefry HBM
     temporaries, ``"pallas"`` VMEM-fused kernel with interpret-mode CPU
-    fallback) — see :mod:`repro.perturb`.
+    fallback) — see :mod:`repro.perturb`.  ``selection`` scopes the
+    perturbation/update to a parameter subset (``repro.select.Selection`` or
+    spec string, e.g. ``"block_cyclic(4)"`` or ``select.peft("lora")``).
     """
     if estimator == "one_point":
-        est = estimators.one_point(eps=eps, dist=dist, backend=backend)
+        est = estimators.one_point(eps=eps, dist=dist, backend=backend,
+                                   selection=selection)
     elif estimator == "spsa":
         est = (estimators.n_spsa(n, eps=eps, dist=dist,
                                  sequential=sequential_perturb,
-                                 backend=backend) if n > 1 else
+                                 backend=backend, selection=selection)
+               if n > 1 else
                estimators.spsa(eps=eps, dist=dist,
                                sequential=sequential_perturb,
-                               backend=backend))
+                               backend=backend, selection=selection))
     else:
         raise ValueError(f"unknown estimator {estimator!r}")
     tf = _scalar_chain(lr, n, weight_decay, lr_schedule, total_steps,
@@ -70,7 +74,7 @@ def fzoo(lr: float = 1e-5, eps: float = 1e-3, batch_seeds: int = 8,
          lr_schedule: str = "constant", total_steps: int = 0,
          warmup_steps: int = 0, clip_projected_grad: float = 0.0,
          std_floor: float = 1e-8,
-         backend: BackendSpec = None) -> ZOOptimizer:
+         backend: BackendSpec = None, selection=None) -> ZOOptimizer:
     """FZOO (Dang et al., 2025): B batched one-sided seed perturbations per
     step — one vmapped forward over the ``perturb_many`` stacked-params view —
     with the step size normalized by the std of the B loss differences.
@@ -88,7 +92,7 @@ def fzoo(lr: float = 1e-5, eps: float = 1e-3, batch_seeds: int = 8,
     VMEM tile).
     """
     est = estimators.fzoo(batch_seeds=batch_seeds, eps=eps, dist=dist,
-                          backend=backend)
+                          backend=backend, selection=selection)
     tfs = [transforms.scale_by_fzoo_std(std_floor)]
     if clip_projected_grad > 0:
         tfs.append(transforms.clip_projected_grad(clip_projected_grad))
@@ -105,12 +109,14 @@ def mezo_adam(lr: float = 1e-4, eps: float = 1e-3, beta1: float = 0.9,
               weight_decay: float = 0.0, lr_schedule: str = "constant",
               total_steps: int = 0, warmup_steps: int = 0,
               clip_projected_grad: float = 0.0,
-              backend: BackendSpec = None) -> ZOOptimizer:
+              backend: BackendSpec = None, selection=None) -> ZOOptimizer:
     """MeZO-Adam / MeZO-momentum (paper §2.2 + App. B.2): the SPSA estimator
     with the Adam preconditioner reconstructed from the scalar g-history
-    (ring buffer of ``window`` scalars) or materialized as the m/v oracle."""
+    (ring buffer of ``window`` scalars) or materialized as the m/v oracle.
+    ``selection`` is accepted for interface symmetry but refused by the
+    facade (applier transforms materialize full-tree updates)."""
     est = estimators.spsa(eps=eps, dist=dist, sequential=True,
-                          backend=backend)
+                          backend=backend, selection=selection)
     adam = transforms.scale_by_zo_adam(
         beta1=beta1, beta2=beta2, adam_eps=adam_eps, materialized=materialized,
         window=window, momentum_only=momentum_only, weight_decay=weight_decay)
@@ -127,7 +133,7 @@ def mezo_rescaled(lr: float = 1e-6, eps: float = 1e-3,
                   weight_decay: float = 0.0, lr_schedule: str = "constant",
                   total_steps: int = 0, warmup_steps: int = 0,
                   clip_projected_grad: float = 0.0,
-                  backend: BackendSpec = None) -> ZOOptimizer:
+                  backend: BackendSpec = None, selection=None) -> ZOOptimizer:
     """Variance/expectation-modified SPSA (paper App. B.3/B.4, Definitions
     6/7): perturb by ε·(d⁻¹⊙z), update along (D or I)·z.  The paper found no
     consistent win over plain MeZO at equal forward budget — kept because it
@@ -135,7 +141,8 @@ def mezo_rescaled(lr: float = 1e-6, eps: float = 1e-3,
     est = estimators.rescaled_spsa(
         eps=eps, dist=dist, d_source=d_source,
         modify_expectation=modify_expectation, probe_loss_fn=probe_loss_fn,
-        probe_batch=probe_batch, probe_eps=probe_eps, backend=backend)
+        probe_batch=probe_batch, probe_eps=probe_eps, backend=backend,
+        selection=selection)
     tf = _scalar_chain(lr, 1, weight_decay, lr_schedule, total_steps,
                        warmup_steps, clip_projected_grad)
     return ZOOptimizer(est, tf, name="mezo_rescaled")
@@ -154,7 +161,8 @@ def from_config(config) -> ZOOptimizer:
                   total_steps=config.total_steps,
                   warmup_steps=config.warmup_steps,
                   clip_projected_grad=config.clip_projected_grad,
-                  backend=getattr(config, "backend", None))
+                  backend=getattr(config, "backend", None),
+                  selection=getattr(config, "selection", None))
     if getattr(config, "d_source", None) is not None:
         return mezo_rescaled(d_source=config.d_source,
                              modify_expectation=config.modify_expectation,

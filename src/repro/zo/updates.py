@@ -34,23 +34,30 @@ from repro.tree_utils import PyTree
 def apply_rank1(params: PyTree, key: jax.Array, coeff, decay_term=0.0,
                 dist: Distribution = "gaussian",
                 d_tree: Optional[PyTree] = None,
-                backend: BackendSpec = None) -> PyTree:
+                backend: BackendSpec = None,
+                selection=None, phase: int = 0) -> PyTree:
     """θ ← (1 − decay_term)·θ − coeff·z(key), regenerating z leaf by leaf.
 
     ``coeff`` is the full η-scaled scalar (η·g, or η/n·g per seed);
     ``decay_term`` is the decoupled weight-decay coefficient η·λ.  ``d_tree``
     holds one positive scalar per leaf and rescales z (Definition 6's
     block-diagonal D); ``None`` leaves z unscaled (Definition 7 / plain SPSA).
-    ``backend`` selects the z-generation strategy (default ``xla``).
+    ``backend`` selects the z-generation strategy (default ``xla``);
+    ``selection``/``phase`` scope the update to a parameter subset
+    (``repro.select`` — unselected leaves are untouched, decay included).
     Non-floating leaves pass through untouched.
     """
-    return get_backend(backend).apply_rank1(params, StreamRef(key), coeff,
+    ref = StreamRef(key)
+    if selection is not None:
+        ref = ref.with_selection(selection, phase)
+    return get_backend(backend).apply_rank1(params, ref, coeff,
                                             decay_term, dist, d_tree=d_tree)
 
 
 def apply_rank1_batch(params: PyTree, skey: jax.Array, coeff_vec,
                       decay_term=0.0, dist: Distribution = "gaussian",
-                      backend: BackendSpec = None) -> PyTree:
+                      backend: BackendSpec = None,
+                      selection=None, phase: int = 0) -> PyTree:
     """The batched-seed (FZOO) step as B sequential rank-1 applications:
 
         for j in 0..B-1:  θ ← (1 − [j==0]·decay)·θ − (coeff_j / B)·z(fold(skey, j))
@@ -58,6 +65,8 @@ def apply_rank1_batch(params: PyTree, skey: jax.Array, coeff_vec,
     ``coeff_vec`` holds one η-scaled coefficient per seed stream (η·g_j for a
     replayed ledger entry; the transform chain's output for a live step);
     ``decay_term`` is the decoupled η·λ, applied once on the first stream.
+    ``selection``/``phase`` scope every stream's update to the same parameter
+    subset (a step has ONE schedule phase — the streams share it).
     This is the ONE code path shared by the live fzoo estimator's
     ``apply_update`` and ``ZOOptimizer.replay_update`` — keeping the fold /
     divide / decay schedule in a single place is what makes a ledger replay
@@ -71,6 +80,8 @@ def apply_rank1_batch(params: PyTree, skey: jax.Array, coeff_vec,
     p = params
     for j in range(n):
         ref = StreamRef(jax.random.fold_in(skey, j))
+        if selection is not None:
+            ref = ref.with_selection(selection, phase)
         p = be.apply_rank1(p, ref, coeff_vec[j] / n,
                            decay_term if j == 0 else 0.0, dist)
     return p

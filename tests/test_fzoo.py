@@ -320,7 +320,10 @@ def test_fzoo_rejects_applier_transforms():
 
 def test_fzoo_pallas_rejects_unsupported_dist():
     with pytest.raises(NotImplementedError, match="pallas"):
-        zo.fzoo(batch_seeds=4, dist="rademacher", backend="pallas")
+        zo.fzoo(batch_seeds=4, dist="sphere", backend="pallas")
+    # rademacher is now generated in-kernel (sign of one counter stream) —
+    # the composition must build instead of raising
+    zo.fzoo(batch_seeds=4, dist="rademacher", backend="pallas")
 
 
 def test_fzoo_forward_count_is_batched():

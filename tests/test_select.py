@@ -1,0 +1,458 @@
+"""Conformance matrix for the parameter-selection layer (``repro.select``).
+
+The matrix: (selection ∈ {full, leaves, block_cyclic}) × (estimator ∈
+{spsa, fzoo}) × (backend ∈ {xla, pallas-interpret}) × (plan ∈ {local,
+seed_parallel(2), replay}), asserting
+
+* ``selection="full"`` is BITWISE-identical to not passing a selection (the
+  pre-selection behavior) for spsa and fzoo on both backends;
+* unselected leaves are completely untouched — no perturbation, no update,
+  no weight decay (the frozen-base guarantee PEFT selections rely on);
+* a ``block_cyclic`` run's MZOL5 ledger round-trips and replays under the
+  ledger-driven ``replay`` plan (replay-vs-replay bitwise, replay-vs-live
+  within the established fp-fusion tolerance), while full-selection ledgers
+  keep serializing as MZOL2/3/4 so MZOL4-era artifacts replay unchanged;
+* mismatched selection coordinates refuse (``SelectionMismatchError``) for
+  ledgers AND checkpoints;
+* the schedule phase is plan-invariant (async staleness-0 ≡ seed_parallel at
+  the same selection/step);
+* the deprecated ``models/peft.py`` tree-swap loss entry points are
+  bitwise-equal shims over the unified merged-tree path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import exec as zexec
+from repro import select, zo
+from repro.core.trajectory import TrajectoryLedger, replay
+from repro.exec import StepProgram
+from repro.perturb import StreamRef, get_backend
+from repro.select import Selection, SelectionMismatchError, parse_selection
+from repro.tree_utils import tree_max_abs_diff
+
+BACKENDS = ["xla", "pallas-interpret"]
+W_ONLY = r"\['w'\]"
+
+
+def make_opt(estimator: str, backend: str, selection=None, lr=1e-3, eps=1e-3,
+             weight_decay=0.0):
+    if estimator == "spsa":
+        return zo.mezo(lr=lr, eps=eps, backend=backend, selection=selection,
+                       weight_decay=weight_decay)
+    if estimator == "fzoo":
+        return zo.fzoo(lr=lr, eps=eps, batch_seeds=3, backend=backend,
+                       selection=selection, weight_decay=weight_decay)
+    raise ValueError(estimator)
+
+
+@pytest.fixture()
+def problem():
+    t = jax.random.normal(jax.random.PRNGKey(0), (16,))
+
+    def loss_fn(p, b):
+        scale = 1.0 if b is None else jnp.mean(b)
+        return scale * (0.5 * jnp.sum((p["w"] - t) ** 2)
+                        + 0.1 * jnp.sum(p["v"] ** 2))
+
+    params = {"v": jnp.ones((8,)), "w": jnp.zeros((16,))}
+    batch = jnp.linspace(0.5, 1.5, 8)
+    return loss_fn, params, batch
+
+
+def run_plan(opt, plan, loss_fn, params, batch, steps=4, seed=3, ledger=None,
+             donate=False):
+    prog = StepProgram(opt, plan)
+    state = prog.init(params, seed=seed)
+    step = jax.jit(prog.step_fn(loss_fn),
+                   donate_argnums=(0,) if donate else ())
+    p = params
+    for i in range(steps):
+        p, state, m = step(p, state, batch)
+        if ledger is not None:
+            g = m.get("projected_grads")
+            ledger.append(i, np.asarray(g) if g is not None
+                          else float(m["projected_grad"]), float(m["lr"]))
+    return p, prog
+
+
+def ledger_for(prog, seed=3):
+    meta = prog.meta
+    return TrajectoryLedger(base_seed=seed, grad_dtype="float32",
+                            backend=meta["perturb_backend"],
+                            batch_seeds=meta["batch_seeds"],
+                            exec_plan=meta["exec_plan"],
+                            n_groups=meta["n_groups"],
+                            selection=meta["selection"],
+                            sel_phase=meta["sel_phase"])
+
+
+# --------------------------------------------------------------------------- #
+# The acceptance guarantee: full selection == pre-selection behavior, bitwise
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("estimator", ["spsa", "fzoo"])
+def test_full_selection_bitwise_identical(problem, estimator, backend):
+    loss_fn, params, batch = problem
+    p_none, _ = run_plan(make_opt(estimator, backend), zexec.local(),
+                         loss_fn, params, batch)
+    p_full, _ = run_plan(make_opt(estimator, backend, selection="full"),
+                         zexec.local(), loss_fn, params, batch)
+    p_fullobj, _ = run_plan(make_opt(estimator, backend,
+                                     selection=select.full()),
+                            zexec.local(), loss_fn, params, batch)
+    assert tree_max_abs_diff(p_none, p_full) == 0.0
+    assert tree_max_abs_diff(p_none, p_fullobj) == 0.0
+    # and the full selection resolves to None (the zero-overhead signal)
+    assert make_opt(estimator, backend, selection="full").selection is None
+
+
+# --------------------------------------------------------------------------- #
+# Unselected leaves are untouched (perturb, update, AND decay)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("estimator", ["spsa", "fzoo"])
+@pytest.mark.parametrize("plan_name", ["local", "sp2"])
+def test_static_selection_freezes_unselected(problem, estimator, backend,
+                                             plan_name):
+    loss_fn, params, batch = problem
+    plan = {"local": zexec.local(),
+            "sp2": zexec.seed_parallel(2)}[plan_name]
+    opt = make_opt(estimator, backend, selection=select.leaves(W_ONLY),
+                   weight_decay=0.1)
+    # donate a copy so the original stays comparable (donation deletes it)
+    p0 = jax.tree_util.tree_map(lambda x: x.copy(), params)
+    p, _ = run_plan(opt, plan, loss_fn, p0, batch, donate=True)
+    # 'v' is unselected: bitwise-identical despite nonzero weight decay
+    assert tree_max_abs_diff({"v": p["v"]}, {"v": params["v"]}) == 0.0
+    assert float(jnp.max(jnp.abs(p["w"] - params["w"]))) > 0.0
+
+
+# --------------------------------------------------------------------------- #
+# The conformance matrix: selection × estimator × backend × plan → replay
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("estimator", ["spsa", "fzoo"])
+@pytest.mark.parametrize("plan_name", ["local", "sp2"])
+@pytest.mark.parametrize("sel", ["leaves", "block_cyclic"])
+def test_selection_ledger_roundtrip(problem, estimator, backend, plan_name,
+                                    sel):
+    loss_fn, params, batch = problem
+    selection = {"leaves": select.leaves(W_ONLY),
+                 "block_cyclic": select.block_cyclic(2)}[sel]
+    plan = {"local": zexec.local(), "sp2": zexec.seed_parallel(2)}[plan_name]
+    opt = make_opt(estimator, backend, selection=selection)
+    prog = StepProgram(opt, plan)
+    led = ledger_for(prog)
+    p_live, _ = run_plan(opt, plan, loss_fn, params, batch, ledger=led)
+    led2 = TrajectoryLedger.from_bytes(led.to_bytes())
+    assert (led2.selection, led2.sel_phase) == (selection.spec, 0)
+    mk = lambda: make_opt(estimator, backend, selection=selection)
+    rec = replay(params, led2, mk())
+    assert tree_max_abs_diff(rec, p_live) < 2e-6
+    # replay is deterministic (bitwise) and plan-programs agree bitwise
+    assert tree_max_abs_diff(rec, replay(params, led2, mk())) == 0.0
+    rec3 = StepProgram(mk(), plan).replay(params, led2)
+    assert tree_max_abs_diff(rec, rec3) == 0.0
+
+
+def test_block_cyclic_phase_rotation(problem):
+    """Phase t touches exactly the leaves with index ≡ t (mod k); the other
+    block is bitwise-frozen for that step.  Leaf order: v=0, w=1."""
+    loss_fn, params, batch = problem
+    opt = make_opt("spsa", "xla", selection=select.block_cyclic(2))
+    state = opt.init(params, seed=3)
+    step = jax.jit(opt.step_fn(loss_fn))
+    p1, state, _ = step(params, state, batch)       # phase 0: leaf 'v'
+    assert tree_max_abs_diff({"w": p1["w"]}, {"w": params["w"]}) == 0.0
+    assert float(jnp.max(jnp.abs(p1["v"] - params["v"]))) > 0.0
+    p2, state, _ = step(p1, state, batch)           # phase 1: leaf 'w'
+    assert tree_max_abs_diff({"v": p2["v"]}, {"v": p1["v"]}) == 0.0
+    assert float(jnp.max(jnp.abs(p2["w"] - p1["w"]))) > 0.0
+
+
+def test_block_cyclic_writes_mzol5_full_stays_legacy(problem):
+    """MZOL5 is written only for non-full selections; full-selection ledgers
+    keep their MZOL2/3/4 magic, so MZOL4-era readers (and artifacts) are
+    untouched."""
+    loss_fn, params, batch = problem
+    opt = make_opt("spsa", "xla", selection=select.block_cyclic(2))
+    prog = StepProgram(opt, zexec.seed_parallel(2))
+    led = ledger_for(prog)
+    p_live, _ = run_plan(opt, zexec.seed_parallel(2), loss_fn, params, batch,
+                         ledger=led)
+    raw = led.to_bytes()
+    assert raw.startswith(b"MZOL5")
+    led2 = TrajectoryLedger.from_bytes(raw)
+    assert (led2.selection, led2.n_groups, led2.exec_plan) == \
+        ("block_cyclic(2)", 2, "seed_parallel")
+    rec = replay(params, led2,
+                 make_opt("spsa", "xla", selection=select.block_cyclic(2)))
+    assert tree_max_abs_diff(rec, p_live) < 2e-6
+
+    # full-selection coordinates serialize exactly as before (MZOL4-era)
+    full_prog = StepProgram(make_opt("spsa", "xla"), zexec.seed_parallel(2))
+    led4 = ledger_for(full_prog)
+    p4, _ = run_plan(make_opt("spsa", "xla"), zexec.seed_parallel(2),
+                     loss_fn, params, batch, ledger=led4)
+    raw4 = led4.to_bytes()
+    assert raw4.startswith(b"MZOL4")
+    led4b = TrajectoryLedger.from_bytes(raw4)
+    assert (led4b.selection, led4b.sel_phase) == ("full", 0)
+    rec4 = replay(params, led4b, make_opt("spsa", "xla"))
+    assert tree_max_abs_diff(rec4, p4) < 2e-6
+    # B=1 single-group full runs stay MZOL2
+    led2b = ledger_for(StepProgram(make_opt("spsa", "xla"), zexec.local()))
+    run_plan(make_opt("spsa", "xla"), zexec.local(), loss_fn, params, batch,
+             ledger=led2b)
+    assert led2b.to_bytes().startswith(b"MZOL2")
+
+
+def test_selection_mismatch_refuses(problem, tmp_path):
+    loss_fn, params, batch = problem
+    opt = make_opt("spsa", "xla", selection=select.block_cyclic(2))
+    prog = StepProgram(opt, zexec.local())
+    led = ledger_for(prog)
+    run_plan(opt, zexec.local(), loss_fn, params, batch, ledger=led)
+    with pytest.raises(SelectionMismatchError, match="block_cyclic"):
+        replay(params, led, make_opt("spsa", "xla"))
+    with pytest.raises(SelectionMismatchError):
+        replay(params, led,
+               make_opt("spsa", "xla", selection=select.leaves(W_ONLY)))
+    # checkpoint meta records the selection; resume under another refuses
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.pipeline import DataSpec, Pipeline
+    from repro.train.loop import train
+
+    def loss2(p, b):
+        return loss_fn(p, None)
+
+    pipe = Pipeline(DataSpec("lm", batch=4, seq=4, vocab=11, seed=1))
+    ck = CheckpointManager(str(tmp_path), interval=2)
+    train(loss2, params, make_opt("spsa", "xla",
+                                  selection=select.block_cyclic(2)),
+          pipe, total_steps=2, ckpt=ck, donate=False)
+    with pytest.raises(SelectionMismatchError):
+        train(loss2, params, make_opt("spsa", "xla"), pipe, total_steps=4,
+              ckpt=ck, donate=False)
+    res = train(loss2, params,
+                make_opt("spsa", "xla", selection=select.block_cyclic(2)),
+                pipe, total_steps=4, ckpt=ck, donate=False)
+    assert res.resumed_from == 2
+
+
+# --------------------------------------------------------------------------- #
+# Plan invariance of the schedule phase: async staleness-0 ≡ seed_parallel
+# --------------------------------------------------------------------------- #
+def test_async_staleness0_selection_matches_seed_parallel(problem):
+    from repro.distributed.async_zo import (AsyncZOWorker,
+                                            contributions_to_ledger)
+    loss_fn, params, batch = problem
+    n = 2
+    sel = select.block_cyclic(2)
+    mk = lambda: make_opt("spsa", "xla", selection=sel)
+    ws = [AsyncZOWorker(w, n, params, loss_fn, mk(), base_seed=3)
+          for w in range(n)]
+
+    def shard(w):
+        per = batch.shape[0] // n
+        return batch[w * per:(w + 1) * per]
+
+    contribs = []
+    for _ in range(4):
+        cs = [w.produce(shard(w.w)) for w in ws]
+        contribs += cs
+        for w in ws:
+            for cb in cs:
+                w.consume(cb)
+    assert tree_max_abs_diff(ws[0].params, ws[1].params) == 0.0
+    p_sp, _ = run_plan(mk(), zexec.seed_parallel(n), loss_fn, params, batch)
+    assert tree_max_abs_diff(ws[0].params, p_sp) < 1e-6
+    led = TrajectoryLedger(base_seed=3, grad_dtype="float32")
+    recorded, skipped = contributions_to_ledger(led, contribs, n_workers=n,
+                                                selection=sel.spec)
+    assert (recorded, skipped) == (4, 0) and led.selection == sel.spec
+    rec = replay(params, TrajectoryLedger.from_bytes(led.to_bytes()), mk())
+    assert tree_max_abs_diff(rec, ws[0].params) < 5e-6
+
+
+# --------------------------------------------------------------------------- #
+# perturb_many under a selection: batched == stacked masked singles, bitwise
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_perturb_many_selection_contract(backend):
+    be = get_backend(backend)
+    params = {"b": jnp.ones((31,)),
+              "w": jax.random.normal(jax.random.PRNGKey(0), (70, 33))}
+    sel = select.leaves(W_ONLY)
+    base = jax.random.PRNGKey(7)
+    refs = [StreamRef(jax.random.fold_in(base, j)).with_selection(sel, 0)
+            for j in range(3)]
+    stacked = be.perturb_many(params, refs, 1e-2)
+    singles = [be.perturb(params, r, 1e-2) for r in refs]
+    want = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *singles)
+    for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # unselected leaf: stacked copies of the original, untouched
+    np.testing.assert_array_equal(
+        np.asarray(stacked["b"]), np.asarray(jnp.stack([params["b"]] * 3)))
+
+
+# --------------------------------------------------------------------------- #
+# Spec round-trip, guardrails
+# --------------------------------------------------------------------------- #
+def test_selection_spec_roundtrip():
+    for sel in (select.full(), select.leaves(W_ONLY),
+                select.block_cyclic(4), select.peft("lora"),
+                select.peft("prefix")):
+        assert parse_selection(sel.spec) == sel
+    assert parse_selection("block_cyclic(3)", phase_offset=2) == \
+        Selection("block_cyclic", n_phases=3, phase_offset=2)
+    with pytest.raises(ValueError, match="unparseable"):
+        parse_selection("bogus")
+    with pytest.raises(ValueError, match="peft mode"):
+        select.peft("adapters")
+    with pytest.raises(ValueError, match="k >= 1"):
+        select.block_cyclic(0)
+
+
+def test_selection_guardrails(problem):
+    loss_fn, params, _ = problem
+    # empty static selection fails loudly at trace time
+    opt = make_opt("spsa", "xla", selection=select.leaves(r"\['nope'\]"))
+    state = opt.init(params, seed=0)
+    with pytest.raises(ValueError, match="matches no floating leaves"):
+        jax.jit(opt.step_fn(loss_fn))(params, state, None)
+    # block_cyclic with more phases than leaves fails loudly
+    opt = make_opt("spsa", "xla", selection=select.block_cyclic(5))
+    state = opt.init(params, seed=0)
+    with pytest.raises(ValueError, match="block_cyclic"):
+        jax.jit(opt.step_fn(loss_fn))(params, state, None)
+    # applier transforms refuse selections (they write the full tree)
+    with pytest.raises(ValueError, match="applier"):
+        zo.mezo_adam(lr=1e-3, selection=select.block_cyclic(2))
+
+
+# --------------------------------------------------------------------------- #
+# PEFT: the deprecated tree-swap entry points are bitwise shims
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def peft_setup():
+    from repro.models import bundle
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="sel-peft", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64,
+                      max_seq=16, dtype="float32")
+    b = bundle(cfg)
+    base = b.init(jax.random.PRNGKey(0))
+    batch = b.make_batch(jax.random.PRNGKey(1), batch=2, seq=8)
+    return cfg, base, batch
+
+
+def test_peft_loss_shims_bitwise(peft_setup):
+    from repro.models import peft
+    cfg, base, batch = peft_setup
+    lora = peft.init_lora(cfg, jax.random.PRNGKey(2))
+    shim = peft.lora_loss_fn(cfg, base)(lora, batch)
+    uni = peft.peft_loss_fn(cfg, "lora")(
+        peft.peft_params(base, lora, "lora"), batch)
+    assert float(shim) == float(uni)
+    pre = peft.init_prefix_from_tokens(cfg, base, jax.random.PRNGKey(3), m=3)
+    shim = peft.prefix_loss_fn(cfg, base)(pre, batch)
+    uni = peft.peft_loss_fn(cfg, "prefix")(
+        peft.peft_params(base, pre, "prefix"), batch)
+    assert float(shim) == float(uni)
+
+
+def test_peft_selection_freezes_base_and_replays(peft_setup):
+    from repro.models import peft
+    cfg, base, batch = peft_setup
+    lora = peft.init_lora(cfg, jax.random.PRNGKey(2))
+    merged = peft.peft_params(base, lora, "lora")
+    sel = peft.peft_selection("lora")
+    assert sel == select.peft("lora")
+    opt = zo.mezo(lr=1e-3, eps=1e-3, weight_decay=0.1, selection=sel)
+    prog = StepProgram(opt, zexec.local())
+    led = ledger_for(prog, seed=0)
+    loss_fn = peft.peft_loss_fn(cfg, "lora")
+    state = prog.init(merged, seed=0)
+    step = jax.jit(prog.step_fn(loss_fn))
+    p = merged
+    for i in range(3):
+        p, state, m = step(p, state, batch)
+        led.append(i, float(m["projected_grad"]), float(m["lr"]))
+    # the frozen base is bitwise-untouched (decay included)
+    assert tree_max_abs_diff(p["base"], base) == 0.0
+    assert tree_max_abs_diff(p["lora"], lora) > 0.0
+    # and the run ledger-replays on the unified path
+    rec = replay(merged, TrajectoryLedger.from_bytes(led.to_bytes()),
+                 zo.mezo(lr=1e-3, eps=1e-3, weight_decay=0.1, selection=sel))
+    assert tree_max_abs_diff(rec["base"], base) == 0.0
+    assert tree_max_abs_diff(rec, p) < 2e-6
+
+
+def test_block_cyclic_assigns_phases_over_floating_leaves_only():
+    """Integer leaves can never be perturbed (the backends skip them), so
+    block phases are assigned over the floating leaves: no phase may end up
+    owning only unperturbable leaves (which would silently train nothing
+    that step)."""
+    params = {"a": jnp.ones((4,)), "idx": jnp.arange(3, dtype=jnp.int32),
+              "z": jnp.ones((2,))}                  # leaves: a, idx, z
+    sel = select.block_cyclic(2)
+    m0 = sel.leaf_mask(params, 0)
+    m1 = sel.leaf_mask(params, 1)
+    assert m0 == (True, False, False)               # a: floating block 0
+    assert m1 == (False, False, True)               # z: floating block 1
+    # every phase selects at least one floating leaf
+    assert any(m0) and any(m1)
+    # a regex matching only the int leaf is an empty (unperturbable)
+    # selection and fails loudly
+    with pytest.raises(ValueError, match="matches no floating leaves"):
+        select.leaves(r"\['idx'\]").leaf_mask(params, 0)
+    # k larger than the floating-leaf count fails loudly too
+    with pytest.raises(ValueError, match="floating leaves"):
+        select.block_cyclic(3).leaf_mask(params, 0)
+
+
+def test_contributions_to_ledger_stamps_selection_at_one_worker(problem):
+    """The selection stamp must not be gated on n_workers > 1: a
+    single-worker selected run recorded as 'full' would replay its scalars
+    onto the whole tree instead of the selected block."""
+    from repro.distributed.async_zo import (AsyncZOWorker,
+                                            contributions_to_ledger)
+    loss_fn, params, _ = problem
+    sel = select.block_cyclic(2)
+    mk = lambda: make_opt("spsa", "xla", selection=sel)
+    w = AsyncZOWorker(0, 1, params, loss_fn, mk(), base_seed=3)
+    contribs = []
+    for _ in range(3):
+        c = w.produce(None)
+        contribs.append(c)
+        w.consume(c)
+    led = TrajectoryLedger(base_seed=3, grad_dtype="float32")
+    recorded, skipped = contributions_to_ledger(led, contribs, n_workers=1,
+                                                selection=sel.spec)
+    assert (recorded, skipped) == (3, 0)
+    assert led.selection == sel.spec
+    rec = replay(params, TrajectoryLedger.from_bytes(led.to_bytes()), mk())
+    assert tree_max_abs_diff(rec, w.params) < 5e-6
+    # ...and replaying it under a full-selection optimizer refuses
+    with pytest.raises(SelectionMismatchError):
+        replay(params, TrajectoryLedger.from_bytes(led.to_bytes()),
+               make_opt("spsa", "xla"))
+
+
+# --------------------------------------------------------------------------- #
+# selected_size / selected_bytes accounting (the bench's perturbed-bytes)
+# --------------------------------------------------------------------------- #
+def test_selected_size_accounting(problem):
+    _, params, _ = problem                    # v: 8 f32, w: 16 f32
+    assert select.full().selected_size(params) == 24
+    sel = select.leaves(W_ONLY)
+    assert sel.selected_size(params) == 16
+    assert sel.selected_bytes(params) == 64
+    bc = select.block_cyclic(2)
+    assert bc.selected_size(params, phase=0) == 8      # leaf 0 = v
+    assert bc.selected_size(params, phase=1) == 16     # leaf 1 = w
