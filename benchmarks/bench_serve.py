@@ -1,0 +1,142 @@
+"""Multi-tenant serving bench: cache hit rate, cold/warm TTFT, and
+materialization cost vs ledger length (repro.serve.tenants).
+
+Three measurements over N synthetic LoRA tenants sharing one frozen base:
+
+  * COLD vs WARM time-to-first-token through one ServeEngine — wave 1 visits
+    every tenant cold (materialization = ledger replay lands in TTFT), wave 2
+    revisits them cache-warm.  The warm wave is ASSERTED to perform zero
+    ``apply_rank1`` folds (the hit path is pure leaf replacement) — the bench
+    fails, not just degrades, if materialization sneaks back onto the hot
+    path.
+  * Hit rate / evictions under a byte budget sized to hold only half the
+    tenants, driven by a skewed request mix (the DeltaCache working-set
+    story).
+  * Materialization µs vs ledger length, raw replay vs compacted delta+tail.
+
+Emits ``name,us_per_call,derived`` CSV rows and a JSON record to
+``results/bench_serve.json`` (CI artifact; ``run.py --smoke`` scale).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit, is_smoke, note, tiny_lm
+from repro.core.trajectory import replay
+from repro.models import bundle
+from repro.serve.engine import ServeEngine
+from repro.serve.tenants import (compact, composition_for_ledger,
+                                 lora_runtime, make_lora_tenants, materialize,
+                                 serve_load, synthetic_requests, tenant_name)
+from repro.serve.tenants.synth import lora_params0
+
+OUT_PATH = os.path.join("results", "bench_serve.json")
+
+N_TENANTS = 8 if is_smoke() else 64
+TRAIN_STEPS = 4 if is_smoke() else 24
+N_REQUESTS = 24 if is_smoke() else 128
+NEW_TOKENS = 4 if is_smoke() else 8
+KEEP_TAIL = 2 if is_smoke() else 8
+
+
+def _pctl(sorted_rows, q):
+    return sorted_rows[min(len(sorted_rows) - 1, int(len(sorted_rows) * q))]
+
+
+def run():
+    cfg = tiny_lm()
+    base = bundle(cfg).init(jax.random.PRNGKey(0))
+    store = make_lora_tenants(cfg, base, N_TENANTS, steps=TRAIN_STEPS,
+                              batch=4)
+    tenants = store.tenants()
+    results: dict = {"smoke": is_smoke(), "n_tenants": N_TENANTS,
+                     "train_steps": TRAIN_STEPS,
+                     "store_bytes": store.nbytes()}
+
+    # -- cold vs warm TTFT (unbounded cache, every tenant twice) ------------ #
+    rt = lora_runtime(cfg, base, store, cache_bytes=1 << 30)
+    engine = ServeEngine(cfg, base, slots=4, max_len=64)
+    wave = [(t, r) for t, (_, r) in zip(
+        tenants, synthetic_requests(N_TENANTS, cfg.vocab_size, tenants,
+                                    seed=1, max_new_tokens=NEW_TOKENS))]
+    cold_rows = serve_load(engine, rt, wave)
+    folds_before_warm = rt.records_replayed
+    wave2 = [(t, r) for t, (_, r) in zip(
+        tenants, synthetic_requests(N_TENANTS, cfg.vocab_size, tenants,
+                                    seed=2, max_new_tokens=NEW_TOKENS))]
+    warm_rows = serve_load(engine, rt, wave2)
+    if rt.records_replayed != folds_before_warm:
+        raise AssertionError(
+            f"warm wave replayed {rt.records_replayed - folds_before_warm} "
+            "ledger records — the cache-hit path must do ZERO apply_rank1 "
+            "folds")
+    cold = sorted(r["ttft_s"] * 1e6 for r in cold_rows)
+    warm = sorted(r["ttft_s"] * 1e6 for r in warm_rows)
+    results["cold_ttft_us"] = {"p50": _pctl(cold, 0.5), "p99": _pctl(cold, 0.99)}
+    results["warm_ttft_us"] = {"p50": _pctl(warm, 0.5), "p99": _pctl(warm, 0.99)}
+    results["warm_zero_folds"] = True
+    emit("serve/cold_ttft_p50", _pctl(cold, 0.5), f"p99={_pctl(cold, 0.99):.0f}us")
+    emit("serve/warm_ttft_p50", _pctl(warm, 0.5), f"p99={_pctl(warm, 0.99):.0f}us")
+
+    # -- hit rate under a half-working-set byte budget ---------------------- #
+    delta_bytes = rt.delta(tenants[0]).nbytes
+    budget = max(delta_bytes, delta_bytes * N_TENANTS // 2)
+    rt2 = lora_runtime(cfg, base, store, cache_bytes=budget)
+    engine2 = ServeEngine(cfg, base, slots=4, max_len=64)
+    tagged = synthetic_requests(N_REQUESTS, cfg.vocab_size, tenants, seed=3,
+                                max_new_tokens=NEW_TOKENS, skew=2.0)
+    rows = serve_load(engine2, rt2, tagged)
+    st = rt2.stats
+    results["budget_bytes"] = budget
+    results["delta_bytes"] = delta_bytes
+    results["hit_rate"] = st["hit_rate"]
+    results["evictions"] = st["evictions"]
+    results["requests"] = len(rows)
+    tput = sum(r["n_out"] for r in rows) / max(sum(r["total_s"] for r in rows),
+                                               1e-9)
+    emit("serve/hit_rate", 0.0,
+         f"{st['hit_rate']:.2f} (evictions={st['evictions']}, "
+         f"budget={budget}B)")
+
+    # -- materialization cost vs ledger length, raw vs compacted ------------ #
+    led = store.ledger(tenant_name(0))
+    opt = composition_for_ledger(led)
+    p0 = lora_params0(cfg, base, led)
+    by_len = {}
+    import time as _t
+    for frac in (0.25, 0.5, 1.0):
+        n = max(1, int(len(led) * frac))
+        t0 = _t.perf_counter()
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(replay(p0, led, opt, to_idx=n))[0])
+        by_len[n] = (_t.perf_counter() - t0) * 1e6
+    comp = compact(p0, led, opt, keep_tail=KEEP_TAIL)
+    t0 = _t.perf_counter()
+    jax.block_until_ready(
+        jax.tree_util.tree_leaves(materialize(p0, comp, opt))[0])
+    comp_us = (_t.perf_counter() - t0) * 1e6
+    results["materialize_us_by_len"] = by_len
+    results["compacted"] = {"us": comp_us, "tail": len(comp.tail),
+                            "record_bytes": comp.nbytes,
+                            "raw_bytes": led.nbytes()}
+    full_us = by_len[max(by_len)]
+    emit("serve/materialize_full", full_us, f"{len(led)}_records")
+    emit("serve/materialize_compacted", comp_us,
+         f"tail={len(comp.tail)},x{full_us / max(comp_us, 1e-9):.1f}")
+    note(f"{N_TENANTS} tenants ({store.nbytes()} B of ledgers): cold TTFT "
+         f"p50 {_pctl(cold, 0.5) / 1e3:.1f} ms vs warm "
+         f"{_pctl(warm, 0.5) / 1e3:.1f} ms (zero folds asserted); hit rate "
+         f"{st['hit_rate']:.2f} at half-working-set budget; throughput "
+         f"{tput:.1f} tok/s")
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+    note(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,11 +1,14 @@
 """Paper §2.1 storage trick: a fine-tuning run serialized as (seed, g_t
 scalars).  Measures REAL ledger bytes from our implementation vs LoRA /
-prefix / full checkpoints for OPT-66B-scale fine-tuning."""
+prefix / full checkpoints for OPT-66B-scale fine-tuning, plus the serving
+layer's compaction trade (raw long-ledger replay vs stored delta + tail)."""
 from __future__ import annotations
+
+import time
 
 import jax
 
-from benchmarks.common import emit, note
+from benchmarks.common import emit, is_smoke, note
 from repro.core import MeZO, MeZOConfig, TrajectoryLedger
 from repro.models import all_archs, peft
 from repro.tree_utils import tree_bytes, tree_size
@@ -43,6 +46,42 @@ def run():
     note(f"ledger(20K steps) {ledger_20k/1e3:.0f} KB vs LoRA "
          f"{lora_b/1e6:.0f} MB vs prefix {pre_b/1e6:.1f} MB vs full "
          f"{full_b/1e9:.0f} GB  (paper: <0.1MB vs 38MB vs 12MB)")
+
+    # -- compaction (repro.serve.tenants): a long-lived tenant's ledger ----- #
+    # raw materialization replays every record; the compacted form stores one
+    # changed-leaf delta + a short replayable tail — O(tail) per cold start.
+    from repro import zo
+    from repro.core.trajectory import replay
+    from repro.serve.tenants import compact, materialize
+    n_steps = 300 if is_smoke() else 10_000
+    keep_tail = 64
+    t2 = jax.random.normal(jax.random.PRNGKey(1), (256,))
+    loss2 = lambda p, b: 0.5 * jnp.sum((p["w"] - t2) ** 2)
+    opt2 = zo.mezo(lr=1e-3, eps=1e-3)
+    params0 = {"w": jnp.zeros((256,))}
+    state2 = opt2.init(params0, seed=0)
+    led2 = TrajectoryLedger(base_seed=0, grad_dtype="float32")
+    step2 = jax.jit(opt2.step_fn(loss2))
+    p = params0
+    for s in range(n_steps):
+        p, state2, m = step2(p, state2, None)
+        led2.append(s, float(m["projected_grad"]), float(m["lr"]))
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(replay(params0, led2, opt2)["w"])
+    raw_us = (time.perf_counter() - t0) * 1e6
+    comp = compact(params0, led2, opt2, keep_tail=keep_tail)
+    t0 = time.perf_counter()
+    jax.block_until_ready(materialize(params0, comp, opt2)["w"])
+    comp_us = (time.perf_counter() - t0) * 1e6
+    emit("storage/compaction_raw_replay", raw_us,
+         f"{n_steps}_steps_{led2.nbytes()}B")
+    emit("storage/compaction_delta_tail", comp_us,
+         f"tail={keep_tail}_{comp.nbytes}B")
+    note(f"compaction: {n_steps}-step ledger ({led2.nbytes()} B) cold-"
+         f"materializes in {raw_us/1e3:.0f} ms raw vs {comp_us/1e3:.0f} ms "
+         f"as delta+{keep_tail}-record tail ({comp.nbytes} B stored, "
+         f"{raw_us/max(comp_us, 1e-9):.1f}x)")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@
 #   Theorem 1 / Lemma 3         -> bench_theory
 #   §Roofline (dry-run derived) -> bench_roofline
 #   Tables 8/9/10/19, ICL column -> bench_variants
+#   §2.1 serving consequence    -> bench_serve (multi-tenant adapter cache)
 #
 # Usage: PYTHONPATH=src python -m benchmarks.run [--only quality,theory]
 #        PYTHONPATH=src python -m benchmarks.run --smoke     # CI per-commit
@@ -28,6 +29,7 @@ BENCHES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("theory", "benchmarks.bench_theory"),
     ("estimators", "benchmarks.bench_estimators"),
+    ("serve", "benchmarks.bench_serve"),
     ("nondiff", "benchmarks.bench_nondiff"),
     ("quality", "benchmarks.bench_quality"),
     ("variants", "benchmarks.bench_variants"),
@@ -35,7 +37,7 @@ BENCHES = [
 
 # CI-per-commit subset: benches that finish in seconds at smoke scale and
 # leave results/*.json artifacts (the perf trajectory per commit).
-SMOKE_BENCHES = "storage,perturb,select,exec,estimators"
+SMOKE_BENCHES = "storage,perturb,select,exec,estimators,serve"
 
 
 def main() -> None:

@@ -25,6 +25,7 @@ with different z streams or a different parameter support.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import io
 import struct
 from typing import Optional
@@ -108,6 +109,48 @@ class TrajectoryLedger:
 
     def __len__(self) -> int:
         return len(self.steps)
+
+    # -- identity / slicing (the serving layer's cache-key primitives) ------ #
+    def content_hash(self, upto: Optional[int] = None) -> str:
+        """Stable hex digest over the header coordinates + the first ``upto``
+        records (all of them when ``None``).  This is THE cache key of the
+        multi-tenant serving layer (``repro.serve.tenants``): two ledgers
+        share a hash iff they would replay the identical parameter delta, so
+        a materialized delta keyed on ``(content_hash, n_records)`` can be
+        reused across processes and hosts.  Records hash over their *stored*
+        (post-quantization) values, so the digest survives a
+        ``to_bytes``/``from_bytes`` round trip (test-enforced)."""
+        n = len(self.steps) if upto is None else int(upto)
+        if not 0 <= n <= len(self.steps):
+            raise ValueError(f"content_hash upto={n} outside the ledger's "
+                             f"{len(self.steps)} records")
+        h = hashlib.sha256()
+        h.update(repr((self.base_seed, self.grad_dtype, self.backend,
+                       self.batch_seeds, self.exec_plan, self.n_groups,
+                       self.selection, self.sel_phase)).encode("utf-8"))
+        h.update(np.asarray(self.steps[:n], np.int64).tobytes())
+        h.update(np.asarray(self.grads[:n], self.grad_dtype).tobytes())
+        h.update(np.asarray(self.lrs[:n], np.float32).tobytes())
+        return h.hexdigest()
+
+    def slice(self, from_idx: int, to_idx: Optional[int] = None) \
+            -> "TrajectoryLedger":
+        """A new ledger with the same header coordinates holding records
+        ``[from_idx, to_idx)``.  Records keep their original step indices, so
+        replaying a slice folds the exact same per-step seeds as replaying
+        the corresponding span of the full ledger — this is what makes a
+        compacted adapter's *tail* (``repro.serve.tenants.compact``) replay
+        bitwise-identically to the full-ledger suffix."""
+        to_idx = len(self.steps) if to_idx is None else int(to_idx)
+        out = TrajectoryLedger(
+            base_seed=self.base_seed, grad_dtype=self.grad_dtype,
+            backend=self.backend, batch_seeds=self.batch_seeds,
+            exec_plan=self.exec_plan, n_groups=self.n_groups,
+            selection=self.selection, sel_phase=self.sel_phase)
+        out.steps = list(self.steps[from_idx:to_idx])
+        out.grads = list(self.grads[from_idx:to_idx])
+        out.lrs = list(self.lrs[from_idx:to_idx])
+        return out
 
     # -- serialization ----------------------------------------------------- #
     def to_bytes(self) -> bytes:

@@ -3,6 +3,13 @@
 Spins up the continuous-batching engine, optionally restoring fine-tuned
 weights from either a tensor checkpoint or a MeZO scalar ledger (the 0.1 MB
 deployment artifact), and runs a synthetic request workload.
+
+Multi-tenant mode (``--tenants N``): trains N synthetic peft(lora) fine-tunes
+over the frozen base, registers their ledgers in an ``AdapterStore``, and
+serves a skewed request mix across all of them through ONE engine —
+materialized deltas ride a byte-budgeted LRU (``--cache-mb``) and long
+ledgers can be folded to delta + tail (``--compact-tail``); see
+``repro.serve.tenants``.
 """
 from __future__ import annotations
 
@@ -12,7 +19,6 @@ import time
 
 import jax
 
-from repro import zo
 from repro.core import TrajectoryLedger, replay
 from repro.models import all_archs, bundle
 from repro.serve.engine import Request, ServeEngine
@@ -28,6 +34,16 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--ledger", default=None,
                     help="MeZO ledger file: replay onto the init params")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="serve N synthetic LoRA tenants over the frozen "
+                         "base through one engine (0 = single-model mode)")
+    ap.add_argument("--cache-mb", type=float, default=64.0,
+                    help="delta-cache byte budget in MB (tenant mode)")
+    ap.add_argument("--compact-every", type=int, default=0,
+                    help="fold each tenant ledger to delta + an N-record "
+                         "replayable tail before serving (0 = no compaction)")
+    ap.add_argument("--tenant-steps", type=int, default=10,
+                    help="fine-tune steps per synthetic tenant")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -39,25 +55,53 @@ def main():
         with open(args.ledger, "rb") as f:
             led = TrajectoryLedger.from_bytes(f.read())
         # the ledger header records the run's full seed-schedule coordinates
-        # (backend, batch_seeds, n_groups, selection); build the matching
+        # (backend, batch_seeds, n_groups, selection); rebuild the matching
         # composition — replay is ledger-driven, mismatches would raise
-        sel = None
-        if led.selection != "full" or led.sel_phase:
-            from repro.select import parse_selection
-            sel = parse_selection(led.selection)._replace(
-                phase_offset=int(led.sel_phase))
-        if led.batch_seeds > 1:
-            opt = zo.fzoo(batch_seeds=led.batch_seeds, backend=led.backend,
-                          selection=sel)
-        else:
-            opt = zo.mezo(backend=led.backend, selection=sel)
-        params = replay(params, led, opt)
+        from repro.serve.tenants import composition_for_ledger
+        params = replay(params, led, composition_for_ledger(led))
         print(f"[serve] replayed {len(led)} ledger steps "
               f"({os.path.getsize(args.ledger)} bytes, "
               f"backend={led.backend})")
 
     engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                          seed=args.seed)
+
+    if args.tenants > 0:
+        from repro.serve.tenants import (lora_runtime, make_lora_tenants,
+                                         serve_load, synthetic_requests)
+        t0 = time.time()
+        store = make_lora_tenants(cfg, params, args.tenants,
+                                  steps=args.tenant_steps,
+                                  seed0=args.seed + 100)
+        print(f"[serve] trained {len(store)} LoRA tenants in "
+              f"{time.time() - t0:.1f}s; ledgers total {store.nbytes()} bytes")
+        runtime = lora_runtime(cfg, params, store,
+                               cache_bytes=int(args.cache_mb * 1e6))
+        if args.compact_every > 0:
+            for t in store.tenants():
+                comp = runtime.compact_tenant(t, keep_tail=args.compact_every)
+            print(f"[serve] compacted every ledger to delta + "
+                  f"{args.compact_every}-record tail "
+                  f"(last: {comp.nbytes} bytes)")
+        tagged = synthetic_requests(args.requests, cfg.vocab_size,
+                                    store.tenants(), seed=args.seed,
+                                    max_new_tokens=args.new_tokens)
+        t0 = time.time()
+        rows = serve_load(engine, runtime, tagged)
+        dt = time.time() - t0
+        tokens = sum(r["n_out"] for r in rows)
+        ttfts = sorted(r["ttft_s"] for r in rows)
+        st = runtime.stats
+        print(f"[serve] {len(rows)} requests / {len(store)} tenants / "
+              f"{tokens} tokens in {dt:.2f}s ({tokens / dt:.1f} tok/s)")
+        print(f"[serve] cache hit rate {st.get('hit_rate', 0):.2f} "
+              f"({st.get('hits', 0)} hits, {st.get('misses', 0)} misses, "
+              f"{st.get('evictions', 0)} evictions); "
+              f"{st['records_replayed']} ledger records replayed")
+        print(f"[serve] TTFT p50 {ttfts[len(ttfts) // 2] * 1e3:.1f} ms / "
+              f"p99 {ttfts[int(len(ttfts) * 0.99)] * 1e3:.1f} ms")
+        return
+
     key = jax.random.PRNGKey(args.seed)
     reqs = []
     for i in range(args.requests):

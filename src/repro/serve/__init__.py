@@ -1,0 +1,14 @@
+"""Serving layer: the continuous-batching engine plus the ledger-native
+multi-tenant adapter runtime.
+
+``repro.serve.engine`` is the slot-based decode engine (one frozen model,
+continuous batching).  ``repro.serve.tenants`` is what makes it a
+*multi-tenant* product: a MeZO fine-tune is fully determined by its scalar
+trajectory ledger (paper §2.1), so per-user adapters are cheap enough to
+store by the thousands and are materialized on demand by ledger replay —
+content-hash keyed, delta-cached, compacted, and batch-served across
+heterogeneous adapters in one decode step.
+"""
+from repro.serve.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -15,10 +15,27 @@ checkpoint/manager.py):
 
 Family dispatch (cache / recurrent state / cross-attention) reuses
 models.registry's prefill/decode fns.
+
+Multi-tenant serving (``repro.serve.tenants``): ``register_adapter`` hands
+the engine a named changed-leaf delta over the frozen base, requests carry an
+``adapter`` name, and each slot remembers which adapter it decodes with.  One
+decode step batches heterogeneous adapters:
+
+  * selection-sized deltas on dense/moe families take the STACKED path — the
+    varying leaves are stacked along a slot axis and one ``jax.vmap`` over
+    slots decodes every adapter in a single call (base leaves broadcast,
+    never duplicated);
+  * full-tree deltas (or recurrent families) fall back to GROUPED decode —
+    one call per distinct adapter, merging only that group's slot rows
+    (cache/state axis 1) into the step result.
+
+Requests with no adapter and engines with no registered adapters take the
+original single-model path unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -36,6 +53,8 @@ class Request:
     prompt_ids: list
     max_new_tokens: int = 16
     temperature: float = 0.0
+    adapter: Optional[str] = None           # registered adapter name, or base
+    times: dict = dataclasses.field(default_factory=dict)  # lifecycle stamps
     out_ids: list = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -71,10 +90,36 @@ class ServeEngine:
         self.active: list[Optional[Request]] = [None] * slots
         self.pos = np.zeros((slots,), np.int32)       # next position per slot
 
+        # adapter identity: name -> delta; per-slot assignment; derived trees
+        self.adapters: dict = {}
+        self.slot_adapter: list[Optional[str]] = [None] * slots
+        self._adapter_params: dict = {None: params}   # name -> full tree view
+        self._mixed_fns: dict = {}       # varying-index tuple -> vmapped decode
+        self._stack_sig = None           # slot_adapter snapshot the stack fits
+        self._stack = None               # (vidx, [stacked leaf arrays])
+
         self._decode = jax.jit(self.bundle.decode_fn())
         self._prefill_len = 64                         # padded prefill width
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("plen",))
+
+    # ------------------------------------------------------------------ #
+    # Adapters
+    # ------------------------------------------------------------------ #
+    def register_adapter(self, name: str, delta) -> None:
+        """Attach a named ``AdapterDelta`` over the frozen base.  Applying a
+        delta is pure leaf replacement, so the per-adapter 'full tree' is a
+        view sharing every unchanged buffer with the base — registering many
+        adapters costs only their delta buffers.  Re-registering the same
+        delta object is a no-op (the cache-hit path)."""
+        if self.adapters.get(name) is delta:
+            return
+        self._adapter_params[name] = delta.apply(self.params)  # shape check
+        self.adapters[name] = delta
+        self._stack_sig = None          # stacked leaves may be stale
+
+    def _params_for(self, adapter: Optional[str]):
+        return self._adapter_params[adapter]
 
     # ------------------------------------------------------------------ #
     def _prefill_impl(self, params, tokens, plen):
@@ -94,7 +139,32 @@ class ServeEngine:
                                 cache_pos=None, ssm_state=ssm_state)
         return r.logits, r.cache, r.ssm_state
 
+    def _prompt_limit(self) -> int:
+        """Longest admissible prompt: the slot cache row must hold the whole
+        prefix (SWA caches are ``sliding_window`` wide) and one decode
+        position must remain below ``max_len``."""
+        limit = self.max_len - 1
+        if self.cache is not None:
+            limit = min(limit, int(self.cache["k"].shape[2]))
+        return limit
+
     def submit(self, req: Request) -> None:
+        limit = self._prompt_limit()
+        if len(req.prompt_ids) > limit:
+            # admitting would write a truncated prefix into the slot's cache
+            # row and decode against silently-corrupt context — refuse here
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt_ids)} tokens "
+                f"exceeds this engine's limit of {limit} (max_len="
+                f"{self.max_len}, cache rows hold "
+                f"{int(self.cache['k'].shape[2]) if self.cache is not None else self.max_len} "
+                "positions); raise max_len or truncate the prompt upstream")
+        if req.adapter is not None and req.adapter not in self.adapters:
+            raise KeyError(
+                f"request {req.rid}: adapter {req.adapter!r} is not "
+                f"registered (have: {sorted(self.adapters)[:8]}); call "
+                "register_adapter first")
+        req.times.setdefault("queued", time.perf_counter())
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -113,8 +183,8 @@ class ServeEngine:
                     plen *= 2
             toks = np.zeros((1, plen), np.int32)
             toks[0, :len(req.prompt_ids)] = req.prompt_ids
-            logits, kv, state = self._prefill(self.params, jnp.asarray(toks),
-                                              plen=plen)
+            logits, kv, state = self._prefill(self._params_for(req.adapter),
+                                              jnp.asarray(toks), plen=plen)
             npr = len(req.prompt_ids)
             # write this request's prefix into the engine-wide slot caches
             if self.cache is not None and kv is not None:
@@ -135,13 +205,109 @@ class ServeEngine:
             tok = self._sample(last, req.temperature)
             req.out_ids.append(int(tok))
             self.active[slot] = req
+            if self.slot_adapter[slot] != req.adapter:
+                self.slot_adapter[slot] = req.adapter
+                self._stack_sig = None
             self.pos[slot] = npr
+            req.times.setdefault("prefill", time.perf_counter())
 
     def _sample(self, logits: jnp.ndarray, temperature: float):
         if temperature <= 0:
             return jnp.argmax(logits)
         self.key, sub = jax.random.split(self.key)
         return jax.random.categorical(sub, logits / temperature)
+
+    # ------------------------------------------------------------------ #
+    # Mixed-adapter decode
+    # ------------------------------------------------------------------ #
+    def _mixed_decode_fn(self, vidx: tuple):
+        """One jitted vmap-over-slots decode for a given set of varying leaf
+        indices.  Base leaves are closure constants (broadcast, in_axes=None
+        in effect); only the ``vidx`` leaves arrive stacked with a leading
+        slot axis.  Inside, each slot re-adds its size-1 batch axis so the
+        registry decode runs its per-slot (continuous-batching) path."""
+        if vidx in self._mixed_fns:
+            return self._mixed_fns[vidx]
+        decode = self.bundle.decode_fn()
+        base_leaves, treedef = jax.tree_util.tree_flatten(self.params)
+
+        def one(varying, token, cpos, cache):
+            leaves = list(base_leaves)
+            for i, v in zip(vidx, varying):
+                leaves[i] = v
+            params = jax.tree_util.tree_unflatten(treedef, leaves)
+            batch = {"token": token[None],                       # (1, 1)
+                     "cache_pos": cpos[None],                    # (1,)
+                     "cache": jax.tree_util.tree_map(
+                         lambda a: a[:, None], cache)}           # (L,1,...)
+            logits, cache_out = decode(params, batch)
+            return logits[0], jax.tree_util.tree_map(
+                lambda a: a[:, 0], cache_out)
+
+        fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 1), out_axes=(0, 1)))
+        self._mixed_fns[vidx] = fn
+        return fn
+
+    def _stacked_leaves(self):
+        """(vidx, stacked) for the current slot→adapter assignment: the union
+        of the live adapters' changed-leaf indices, each stacked (slot axis 0)
+        from the per-adapter value or the base leaf.  Rebuilt only when the
+        assignment changes (``_stack_sig``)."""
+        sig = tuple(self.slot_adapter)
+        if self._stack_sig == sig:
+            return self._stack
+        base_leaves, _ = jax.tree_util.tree_flatten(self.params)
+        names = {a for a in sig if a is not None}
+        vidx = tuple(sorted({i for n in names
+                             for i in self.adapters[n].indices}))
+        by_name = {n: dict(zip(self.adapters[n].indices,
+                               self.adapters[n].values)) for n in names}
+        stacked = [jnp.stack([by_name.get(a, {}).get(i, base_leaves[i])
+                              for a in sig], axis=0) for i in vidx]
+        self._stack_sig, self._stack = sig, (vidx, stacked)
+        return self._stack
+
+    def _grouped_decode(self, toks, live):
+        """Fallback: one decode per distinct live adapter.  Every group call
+        decodes the full slot batch against the PRE-step cache/state, then
+        only that group's slot rows (cache/state axis 1, logits axis 0) are
+        merged into the step result — other slots' rows stay untouched."""
+        groups: dict = {}
+        for s in live:
+            groups.setdefault(self.slot_adapter[s], []).append(s)
+        pre_cache, pre_state = self.cache, self.state
+        new_cache, new_state = pre_cache, pre_state
+        logits_all = None
+        for name, slots_g in groups.items():
+            batch = {"token": jnp.asarray(toks),
+                     "cache_pos": jnp.asarray(self.pos, jnp.int32)}
+            params = self._params_for(name)
+            if self.cfg.family == "ssm":
+                batch["state"] = pre_state
+                logits, state_g = self._decode(params, batch)
+                cache_g = None
+            elif self.cfg.family == "hybrid":
+                batch["cache"], batch["state"] = pre_cache, pre_state
+                logits, (cache_g, state_g) = self._decode(params, batch)
+            else:
+                batch["cache"] = pre_cache
+                logits, cache_g = self._decode(params, batch)
+                state_g = None
+            idx = jnp.asarray(slots_g)
+            if logits_all is None:
+                logits_all = logits
+            else:
+                logits_all = logits_all.at[idx].set(logits[idx])
+            if cache_g is not None:
+                new_cache = jax.tree_util.tree_map(
+                    lambda acc, out: acc.at[:, idx].set(out[:, idx]),
+                    new_cache, cache_g)
+            if state_g is not None:
+                new_state = jax.tree_util.tree_map(
+                    lambda acc, out: acc.at[:, idx].set(out[:, idx]),
+                    new_state, state_g)
+        self.cache, self.state = new_cache, new_state
+        return logits_all
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
@@ -153,30 +319,45 @@ class ServeEngine:
         toks = np.zeros((self.slots, 1), np.int32)
         for s in live:
             toks[s, 0] = self.active[s].out_ids[-1]
-        # per-slot positions: every row decodes at its own absolute position
-        # (continuous batching); inactive rows write masked junk that the
-        # next admission overwrites.
-        batch = {"token": jnp.asarray(toks),
-                 "cache_pos": jnp.asarray(self.pos, jnp.int32)}
-        if self.cfg.family == "ssm":
-            batch["state"] = self.state
-            logits, self.state = self._decode(self.params, batch)
-        elif self.cfg.family == "hybrid":
-            batch["cache"], batch["state"] = self.cache, self.state
-            logits, (self.cache, self.state) = self._decode(self.params, batch)
+        names = {self.slot_adapter[s] for s in live}
+        if names == {None}:
+            # per-slot positions: every row decodes at its own absolute
+            # position (continuous batching); inactive rows write masked junk
+            # that the next admission overwrites.
+            batch = {"token": jnp.asarray(toks),
+                     "cache_pos": jnp.asarray(self.pos, jnp.int32)}
+            if self.cfg.family == "ssm":
+                batch["state"] = self.state
+                logits, self.state = self._decode(self.params, batch)
+            elif self.cfg.family == "hybrid":
+                batch["cache"], batch["state"] = self.cache, self.state
+                logits, (self.cache, self.state) = self._decode(self.params,
+                                                                batch)
+            else:
+                batch["cache"] = self.cache
+                logits, self.cache = self._decode(self.params, batch)
+        elif self.cfg.family in ("dense", "moe") and not any(
+                self.adapters[n].full_tree for n in names if n is not None):
+            vidx, stacked = self._stacked_leaves()
+            fn = self._mixed_decode_fn(vidx)
+            logits, self.cache = fn(stacked, jnp.asarray(toks),
+                                    jnp.asarray(self.pos, jnp.int32),
+                                    self.cache)
         else:
-            batch["cache"] = self.cache
-            logits, self.cache = self._decode(self.params, batch)
+            logits = self._grouped_decode(toks, live)
+        now = time.perf_counter()
         for s in live:
             req = self.active[s]
             tok = int(self._sample(logits[s, 0, :self.cfg.vocab_size],
                                    req.temperature))
             req.out_ids.append(tok)
+            req.times.setdefault("decode", now)
             self.pos[s] += 1
             if ((self.eos_id is not None and tok == self.eos_id)
                     or len(req.out_ids) >= req.max_new_tokens
                     or self.pos[s] >= self.max_len - 1):
                 req.done = True
+                req.times["done"] = time.perf_counter()
                 self.active[s] = None
         return len(live)
 

@@ -1,0 +1,33 @@
+"""Ledger-native multi-tenant adapter serving.
+
+MeZO's storage property (paper §2.1) makes per-user fine-tunes a few KB of
+seeds + scalars, cheap enough to store by the thousands; this package turns
+that into a serving product:
+
+    train → MZOL ledger → AdapterStore (content-hash keyed)
+                       → compact()     (delta + replayable tail, O(tail))
+                       → DeltaCache    (byte-budgeted LRU of materialized
+                                        selection-sized deltas)
+                       → ServeEngine   (cross-adapter batched decode)
+
+Every materialization replays through the SAME ``PerturbBackend.apply_rank1``
+write path training used, so cached, compacted, and freshly-replayed deltas
+are bitwise-equal (test-enforced); identity mismatches refuse loudly
+(``LedgerHashMismatchError``, joining the Backend/Plan/SelectionMismatchError
+family).
+"""
+from repro.serve.tenants.cache import DeltaCache
+from repro.serve.tenants.compact import CompactedAdapter, compact, materialize
+from repro.serve.tenants.runtime import TenantRuntime, composition_for_ledger
+from repro.serve.tenants.store import (AdapterDelta, AdapterStore,
+                                       LedgerHashMismatchError)
+from repro.serve.tenants.synth import (lora_runtime, make_lora_tenants,
+                                       serve_load, synthetic_requests,
+                                       tenant_name)
+
+__all__ = [
+    "AdapterDelta", "AdapterStore", "CompactedAdapter", "DeltaCache",
+    "LedgerHashMismatchError", "TenantRuntime", "compact",
+    "composition_for_ledger", "lora_runtime", "make_lora_tenants",
+    "materialize", "serve_load", "synthetic_requests", "tenant_name",
+]

@@ -1,0 +1,97 @@
+"""Ledger compaction: fold a long trajectory into one delta + replayable tail.
+
+A tenant who fine-tuned for 10k steps costs 10k ``apply_rank1`` folds per cold
+materialization.  Compaction replays the first ``len − keep_tail`` records
+ONCE, stores the resulting changed-leaf delta, and keeps the remaining records
+as a *tail* ledger — so every later materialization is one leaf-replacement
+apply plus O(tail) folds.
+
+The construction is bitwise by design, not by tolerance:
+
+* the prefix delta is extracted from a replay through the SAME
+  ``PerturbBackend.apply_rank1`` path training used, and applying it is pure
+  leaf replacement (no float re-arithmetic);
+* the tail is ``ledger.slice(upto)`` — records keep their original step
+  indices, so the tail's seed folds are the exact folds the full replay would
+  have performed for those steps.
+
+Hence ``materialize(params0, compact(params0, led, opt), opt)`` equals
+``replay(params0, led, opt)`` bit for bit (test-enforced on xla AND
+pallas-interpret).
+
+Identity is hash-anchored: the record carries the full ledger's content hash
+(its ``AdapterStore`` key) and the hash of the folded prefix.  ``materialize``
+re-checks the prefix hash whenever the caller supplies the ledger it believes
+the record compacts — a record paired with a retrained or truncated ledger
+refuses (``LedgerHashMismatchError``) instead of silently serving weights the
+ledger does not describe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+from repro.core.trajectory import TrajectoryLedger, replay
+from repro.serve.tenants.store import AdapterDelta, LedgerHashMismatchError
+from repro.tree_utils import PyTree
+
+
+class CompactedAdapter(NamedTuple):
+    """A folded ledger prefix + its replayable tail.
+
+    ``full_hash`` keys the record to the complete ledger it compacts (the
+    adapter's store key); ``prefix_hash`` = ``ledger.content_hash(upto)``
+    pins exactly which records the delta folded."""
+    full_hash: str
+    prefix_hash: str
+    upto: int
+    delta: AdapterDelta          # changed leaves of replay(params0, led[:upto])
+    tail: TrajectoryLedger       # led[upto:], original step indices
+
+    @property
+    def nbytes(self) -> int:
+        """Stored footprint: delta buffers + serialized tail (the number
+        bench_storage compares against the raw ledger)."""
+        return self.delta.nbytes + self.tail.nbytes()
+
+
+def compact(params0: PyTree, ledger: TrajectoryLedger, optimizer,
+            keep_tail: int = 64) -> CompactedAdapter:
+    """Fold ``ledger``'s first ``len − keep_tail`` records into a stored
+    delta (one full replay, paid once) and keep the last ``keep_tail`` as the
+    replayable tail.  ``keep_tail ≥ len`` degenerates to an empty fold — the
+    record is still valid, just all-tail."""
+    if keep_tail < 0:
+        raise ValueError(f"keep_tail must be >= 0, got {keep_tail}")
+    upto = max(0, len(ledger) - int(keep_tail))
+    mid = replay(params0, ledger, optimizer, to_idx=upto)
+    return CompactedAdapter(
+        full_hash=ledger.content_hash(),
+        prefix_hash=ledger.content_hash(upto),
+        upto=upto,
+        delta=AdapterDelta.diff(params0, mid),
+        tail=ledger.slice(upto))
+
+
+def materialize(params0: PyTree, compacted: CompactedAdapter, optimizer,
+                ledger: Optional[TrajectoryLedger] = None) -> PyTree:
+    """Reconstruct the tuned parameters from a compaction record in O(tail):
+    apply the stored prefix delta, then replay the tail through the same
+    optimizer composition.  Pass the ``ledger`` the record is believed to
+    compact to get the hash cross-check (refuses on mismatch)."""
+    if ledger is not None:
+        if ledger.content_hash() != compacted.full_hash:
+            raise LedgerHashMismatchError(
+                f"compaction record folds a ledger with content hash "
+                f"{compacted.full_hash[:12]}… but was asked to materialize "
+                f"one hashing to {ledger.content_hash()[:12]}…; the tenant "
+                "was retrained — recompact instead of serving stale weights")
+        if ledger.content_hash(compacted.upto) != compacted.prefix_hash:
+            raise LedgerHashMismatchError(
+                f"compaction record folded records [0, {compacted.upto}) "
+                f"with hash {compacted.prefix_hash[:12]}… but the supplied "
+                "ledger's prefix hashes differently; refusing to splice a "
+                "delta onto a tail it does not precede")
+    mid = compacted.delta.apply(params0)
+    if len(compacted.tail) == 0:
+        return mid
+    return replay(mid, compacted.tail, optimizer)

@@ -1,0 +1,186 @@
+"""Content-addressed adapter storage: the ledger IS the fine-tune.
+
+A MeZO fine-tune is fully determined by its trajectory ledger — a few KB of
+seeds + projected-grad scalars (paper §2.1) — so a *store of per-tenant
+fine-tunes* is a store of ledger blobs.  ``AdapterStore`` keeps them
+content-addressed: the key of an adapter is ``(ledger.content_hash(), steps)``
+— two tenants whose ledgers would replay the identical delta share a key (and
+therefore share every cache entry downstream).
+
+``AdapterDelta`` is the materialized form: the subset of parameter leaves a
+replayed ledger actually changed, stored by flattened leaf index.  It is
+*selection-sized* — a ``peft(lora)`` fine-tune's delta holds only the leaves
+the LoRA merge touches; a ``block_cyclic``/``leaves`` fine-tune's delta holds
+only the selected leaves — which is what makes caching thousands of
+materialized adapters per host feasible.  Applying a delta is pure leaf
+replacement (zero arithmetic, zero ``apply_rank1`` folds), so a cached delta
+is bitwise-identical to the fresh replay it was extracted from *by
+construction*.
+
+``LedgerHashMismatchError`` joins the Backend/Plan/SelectionMismatchError
+refusal family: any path that pairs stored artifacts by content hash (blob
+integrity on read, compaction-record vs ledger prefix) refuses loudly on
+mismatch instead of silently serving a different tenant's weights.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trajectory import TrajectoryLedger
+from repro.tree_utils import PyTree
+
+AdapterKey = tuple  # (content_hash: str, n_records: int)
+
+
+class LedgerHashMismatchError(RuntimeError):
+    """Two artifacts that must describe the same recorded trajectory (a
+    stored blob and its content-hash key; a compaction record and the ledger
+    prefix it folded) disagree.  Continuing would silently materialize — and
+    serve — different parameters than the tenant's ledger describes, so
+    refuse instead (mirrors Backend/Plan/SelectionMismatchError)."""
+
+
+class AdapterDelta(NamedTuple):
+    """The changed-leaf subset of a materialized adapter.
+
+    ``indices`` are flattened-leaf positions (``jax.tree_util.tree_flatten``
+    order of the tree it was diffed against), ``values`` the leaf arrays at
+    those positions.  ``n_leaves`` / ``n_float_leaves`` record the diffed
+    tree's totals so ``full_tree`` (every floating leaf changed — the signal
+    the serving engine's batched decode falls back to per-adapter grouping
+    on) is decidable without the tree."""
+    indices: tuple
+    values: tuple
+    n_leaves: int
+    n_float_leaves: int
+
+    @classmethod
+    def diff(cls, base: PyTree, tuned: PyTree) -> "AdapterDelta":
+        """Extract the leaves of ``tuned`` that differ from ``base`` by even
+        one bit.  Replay only ever writes the leaves it updates, so the diff
+        recovers exactly the replayed support; a selected leaf that happens
+        to round-trip to its base value is *safely* droppable (applying the
+        delta still reproduces ``tuned`` bitwise)."""
+        b_leaves, b_def = jax.tree_util.tree_flatten(base)
+        t_leaves, t_def = jax.tree_util.tree_flatten(tuned)
+        if b_def != t_def:
+            raise ValueError("AdapterDelta.diff needs structurally identical "
+                             f"trees; got {b_def} vs {t_def}")
+        idx, vals = [], []
+        n_float = 0
+        for i, (b, t) in enumerate(zip(b_leaves, t_leaves)):
+            if jnp.issubdtype(jnp.asarray(b).dtype, jnp.floating):
+                n_float += 1
+            nb, nt = np.asarray(b), np.asarray(t)
+            if nb.shape != nt.shape or nb.dtype != nt.dtype \
+                    or nb.tobytes() != nt.tobytes():
+                idx.append(i)
+                vals.append(jnp.asarray(t))
+        return cls(tuple(idx), tuple(vals), len(b_leaves), n_float)
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes the delta's buffers occupy — the unit the ``DeltaCache``
+        budget is accounted in."""
+        return sum(int(v.size) * v.dtype.itemsize for v in self.values)
+
+    @property
+    def full_tree(self) -> bool:
+        """True when every floating leaf changed (a full fine-tune): the
+        batched-decode stacking would duplicate the whole model per slot, so
+        the engine groups these per adapter instead."""
+        return len(self.indices) >= self.n_float_leaves
+
+    def apply(self, base: PyTree) -> PyTree:
+        """``base`` with the delta's leaves swapped in — pure structural leaf
+        replacement (no copies, no arithmetic): the returned tree references
+        the stored buffers directly, so applying a cached delta costs zero
+        ``apply_rank1`` folds and zero parameter-sized traffic."""
+        leaves, treedef = jax.tree_util.tree_flatten(base)
+        for i, v in zip(self.indices, self.values):
+            if leaves[i].shape != v.shape or leaves[i].dtype != v.dtype:
+                raise ValueError(
+                    f"delta leaf {i} has shape/dtype {v.shape}/{v.dtype} but "
+                    f"the base tree's leaf is {leaves[i].shape}/"
+                    f"{leaves[i].dtype}; this delta was extracted against a "
+                    "different parameter tree")
+            leaves[i] = v
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AdapterStore:
+    """Content-addressed store of tenant fine-tune artifacts.
+
+    Tenants map to adapter keys; keys map to serialized ledger blobs (the
+    MZOL wire format — what a training host would ship) and, optionally, a
+    compaction record (``repro.serve.tenants.compact``).  Two tenants with
+    identical ledgers share one blob and one key — dedup falls out of content
+    addressing.  ``ledger()`` re-verifies the content hash on read, so a
+    corrupted or mis-filed blob refuses (``LedgerHashMismatchError``) instead
+    of materializing silently wrong weights."""
+
+    def __init__(self):
+        self._blobs: dict = {}          # content_hash -> bytes
+        self._tenants: dict = {}        # tenant -> AdapterKey
+        self._compacted: dict = {}      # content_hash -> CompactedAdapter
+
+    # -- writes ------------------------------------------------------------- #
+    def put(self, tenant, ledger: TrajectoryLedger) -> AdapterKey:
+        """Register ``tenant``'s fine-tune; returns its content-hash key."""
+        chash = ledger.content_hash()
+        key = (chash, len(ledger))
+        self._blobs.setdefault(chash, ledger.to_bytes())
+        self._tenants[tenant] = key
+        return key
+
+    def put_compacted(self, tenant, compacted) -> None:
+        """Attach a compaction record to ``tenant``'s adapter (keyed on the
+        same content hash, so equal ledgers share the compacted form too)."""
+        chash, n = self.key(tenant)
+        if compacted.full_hash != chash:
+            raise LedgerHashMismatchError(
+                f"compaction record was built from a ledger with content "
+                f"hash {compacted.full_hash[:12]}… but tenant {tenant!r}'s "
+                f"stored ledger hashes to {chash[:12]}…; attaching it would "
+                "materialize a different tenant's parameters")
+        self._compacted[chash] = compacted
+
+    # -- reads -------------------------------------------------------------- #
+    def tenants(self) -> list:
+        return sorted(self._tenants)
+
+    def key(self, tenant) -> AdapterKey:
+        if tenant not in self._tenants:
+            raise KeyError(f"unknown tenant {tenant!r}; registered: "
+                           f"{self.tenants()[:8]}...")
+        return self._tenants[tenant]
+
+    def ledger(self, tenant) -> TrajectoryLedger:
+        """Deserialize ``tenant``'s ledger, re-verifying its content hash —
+        the read-side half of the refuse-on-mismatch contract."""
+        chash, _ = self.key(tenant)
+        led = TrajectoryLedger.from_bytes(self._blobs[chash])
+        actual = led.content_hash()
+        if actual != chash:
+            raise LedgerHashMismatchError(
+                f"stored blob for adapter {chash[:12]}… deserializes to a "
+                f"ledger with content hash {actual[:12]}…; the artifact was "
+                "corrupted or mis-filed — refusing to materialize from it")
+        return led
+
+    def compacted(self, tenant):
+        """The tenant's compaction record, or ``None``."""
+        chash, _ = self.key(tenant)
+        return self._compacted.get(chash)
+
+    def nbytes(self) -> int:
+        """Total stored ledger bytes (the 'thousands of fine-tunes per host'
+        accounting: a few KB per tenant, before any compaction records)."""
+        return sum(len(b) for b in self._blobs.values())
+
+    def __len__(self) -> int:
+        return len(self._tenants)

@@ -1,0 +1,146 @@
+"""Synthetic many-tenant fixtures: train N LoRA tenants, generate load.
+
+The acceptance scenario of the serving layer — N peft(lora) fine-tunes over
+ONE frozen base, each persisted as nothing but its scalar ledger — needs to
+be constructible cheaply in tests, the example, the bench, and the launcher.
+This module is that shared fixture:
+
+* ``make_lora_tenants`` trains N tiny LoRA runs (one jitted step function,
+  reused across tenants — only the seed and LoRA init differ) and registers
+  each ledger in an ``AdapterStore``.  The ledger's ``base_seed`` doubles as
+  the tenant's LoRA-init seed, so the ledger alone determines the adapter —
+  a serving host reconstructs the tenant from the 0.1 MB artifact and the
+  shared base, nothing else.
+* ``lora_runtime`` builds the matching ``TenantRuntime`` (params0 from the
+  ledger seed, ``merge_lora`` as the serve map).
+* ``synthetic_requests`` / ``serve_load`` generate a skewed request mix over
+  the tenants and drive one engine through it, returning per-request
+  timestamp trails (the bench's TTFT source).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import zo
+from repro.core.trajectory import TrajectoryLedger
+from repro.data.synthetic import PromptClassification
+from repro.models.config import ModelConfig
+from repro.models.peft import init_lora, merge_lora, peft_loss_fn
+from repro.select import peft as peft_select
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.tenants.cache import DeltaCache
+from repro.serve.tenants.runtime import TenantRuntime
+from repro.serve.tenants.store import AdapterStore
+
+LORA_RANK = 2          # one convention shared by trainer and serving host
+LORA_ALPHA = 16.0
+LORA_TARGETS = ("wq", "wv")
+
+
+def tenant_name(i: int) -> str:
+    return f"tenant-{i:03d}"
+
+
+def lora_params0(cfg: ModelConfig, base_params, ledger: TrajectoryLedger):
+    """The tenant's training start tree, reconstructed from the ledger alone:
+    merged ``{"base", "lora"}`` with the LoRA init seeded by ``base_seed``."""
+    lora = init_lora(cfg, jax.random.PRNGKey(ledger.base_seed),
+                     rank=LORA_RANK, alpha=LORA_ALPHA, targets=LORA_TARGETS)
+    return {"base": base_params, "lora": lora}
+
+
+def lora_runtime(cfg: ModelConfig, base_params, store: AdapterStore,
+                 cache_bytes: int = 0) -> TenantRuntime:
+    """A ``TenantRuntime`` for LoRA tenants over ``base_params``: the serving
+    delta is ``merge_lora(base, tuned_lora)`` diffed against the base — the
+    targeted attention leaves only, ~r/d of the parameter bytes."""
+    return TenantRuntime(
+        base_params, store,
+        cache=DeltaCache(cache_bytes) if cache_bytes > 0 else None,
+        params0_fn=lambda led: lora_params0(cfg, base_params, led),
+        serve_map=lambda merged: merge_lora(merged["base"], merged["lora"]))
+
+
+def make_lora_tenants(cfg: ModelConfig, base_params, n_tenants: int,
+                      steps: int = 10, batch: int = 8, lr: float = 2e-4,
+                      eps: float = 1e-3, backend=None,
+                      seed0: int = 100) -> AdapterStore:
+    """Train ``n_tenants`` LoRA fine-tunes of the shared frozen base, each on
+    its own synthetic task, recording ONLY the scalar ledger (grad_dtype
+    float32 → bitwise replay).  One composition and one jitted step serve all
+    tenants; per-tenant state differs only in seed and LoRA init, so tenant
+    i+1 reuses tenant 0's compilation."""
+    opt = zo.mezo(lr=lr, eps=eps, backend=backend,
+                  selection=peft_select("lora"))
+    step = jax.jit(opt.step_fn(peft_loss_fn(cfg, "lora")))
+    store = AdapterStore()
+
+    def clamp(batch):
+        # the task's class-band token ids reach ~210 regardless of its vocab
+        # arg; fold them into this model's vocab (an out-of-range id would
+        # gather NaN embeddings and poison every projected grad)
+        return {**batch, "tokens": batch["tokens"] % cfg.vocab_size,
+                "labels": batch["labels"] % cfg.vocab_size}
+
+    for i in range(n_tenants):
+        bseed = seed0 + i
+        task = PromptClassification(vocab=cfg.vocab_size, seed=bseed)
+        led = TrajectoryLedger(
+            base_seed=bseed, grad_dtype="float32",
+            backend=opt.backend_name, batch_seeds=opt.batch_seeds,
+            selection=opt.selection_spec, sel_phase=opt.selection_phase)
+        p = lora_params0(cfg, base_params, led)
+        state = opt.init(p, seed=bseed)
+        for s in range(steps):
+            p, state, m = step(p, state, clamp(task.batch_for_step(s, batch)))
+            led.append(s, float(m["projected_grad"]), float(m["lr"]))
+        store.put(tenant_name(i), led)
+    return store
+
+
+# --------------------------------------------------------------------------- #
+# Load generation + the shared serve driver
+# --------------------------------------------------------------------------- #
+def synthetic_requests(n_requests: int, vocab_size: int, tenants: list,
+                       seed: int = 0, max_new_tokens: int = 8,
+                       skew: float = 2.0) -> list:
+    """``[(tenant, Request), ...]`` with a skewed tenant popularity (low
+    indices hot — ``skew > 1`` concentrates traffic, which is what gives a
+    byte-budgeted cache something to exploit; ``skew=1`` is uniform)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        t = tenants[int(len(tenants) * rng.random() ** skew)]
+        plen = int(rng.integers(2, 9))
+        prompt = [int(x) for x in rng.integers(1, vocab_size - 1, plen)]
+        out.append((t, Request(i, prompt, max_new_tokens=max_new_tokens)))
+    return out
+
+
+def serve_load(engine: ServeEngine, runtime: TenantRuntime,
+               tagged_requests: list) -> list:
+    """Drive ``engine`` through ``(tenant, Request)`` pairs: materialize (or
+    cache-hit) each tenant's delta, register it, submit, and drain.  The
+    queued stamp is taken BEFORE materialization so a cold adapter's replay
+    cost lands in its requests' time-to-first-token — exactly the cold/warm
+    spread the bench reports.  Returns per-request timing rows."""
+    for tenant, req in tagged_requests:
+        req.times.setdefault("queued", time.perf_counter())
+        if tenant is not None:
+            engine.register_adapter(tenant, runtime.delta(tenant))
+            req.adapter = tenant
+        engine.submit(req)
+    engine.run()
+    rows = []
+    for tenant, req in tagged_requests:
+        q = req.times["queued"]
+        rows.append({
+            "rid": req.rid, "tenant": tenant,
+            "n_out": len(req.out_ids),
+            "ttft_s": req.times.get("prefill", q) - q,
+            "total_s": req.times.get("done", q) - q,
+        })
+    return rows

@@ -1,0 +1,305 @@
+"""Multi-tenant adapter serving (repro.serve.tenants): the cache, compaction,
+and cross-adapter batching invariants.
+
+The load-bearing claims, each bitwise where the design promises bitwise:
+a cached delta IS the fresh replay (same apply_rank1 write path, xla AND
+pallas-interpret); a compacted ledger materializes the same params as a full
+replay; the byte-budgeted LRU evicts; a mixed-adapter batched decode emits
+token-for-token what per-adapter sequential decode emits; and identity
+mismatches refuse loudly (LedgerHashMismatchError + engine guardrails)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.trajectory import TrajectoryLedger, replay
+from repro.models import bundle
+from repro.models.config import ModelConfig
+from repro.models.peft import merge_lora
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.tenants import (AdapterDelta, AdapterStore, DeltaCache,
+                                 LedgerHashMismatchError, compact,
+                                 composition_for_ledger, lora_runtime,
+                                 make_lora_tenants, materialize, serve_load,
+                                 synthetic_requests, tenant_name)
+from repro.serve.tenants.synth import lora_params0
+
+BACKENDS = ["xla", "pallas-interpret"]
+if os.environ.get("REPRO_BACKEND"):
+    BACKENDS = [os.environ["REPRO_BACKEND"].replace("pallas", "pallas-interpret")
+                if os.environ["REPRO_BACKEND"] == "pallas"
+                else os.environ["REPRO_BACKEND"]]
+
+
+def tiny_cfg():
+    return ModelConfig(name="tenants-lm", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                       vocab_size=128, max_seq=64, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def base_setup():
+    cfg = tiny_cfg()
+    params = bundle(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def assert_trees_bitwise(a, b, msg=""):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes(), msg
+
+
+# --------------------------------------------------------------------------- #
+# content_hash (the cache-key primitive)
+# --------------------------------------------------------------------------- #
+def test_content_hash_roundtrip_and_sensitivity():
+    led = TrajectoryLedger(base_seed=7, grad_dtype="float16")
+    for s in range(5):
+        led.append(s, 0.25 * (s + 1), 1e-4)
+    # survives serialization (records hash post-quantization values)
+    led2 = TrajectoryLedger.from_bytes(led.to_bytes())
+    assert led2.content_hash() == led.content_hash()
+    # prefix hashing matches a truncated ledger
+    led3 = led.slice(0, 3)
+    assert led.content_hash(upto=3) == led3.content_hash()
+    # any record or header coordinate changes the digest
+    led4 = TrajectoryLedger.from_bytes(led.to_bytes())
+    led4.grads[2] = float(np.float16(9.0))
+    assert led4.content_hash() != led.content_hash()
+    led5 = TrajectoryLedger.from_bytes(led.to_bytes())
+    led5.base_seed = 8
+    assert led5.content_hash() != led.content_hash()
+    with pytest.raises(ValueError):
+        led.content_hash(upto=99)
+
+
+def test_store_refuses_corrupted_blob():
+    led = TrajectoryLedger(base_seed=1)
+    led.append(0, 0.5, 1e-4)
+    other = TrajectoryLedger(base_seed=2)
+    other.append(0, 0.25, 1e-4)
+    store = AdapterStore()
+    key = store.put("t", led)
+    assert store.key("t") == key
+    store._blobs[key[0]] = other.to_bytes()     # simulate a mis-filed blob
+    with pytest.raises(LedgerHashMismatchError):
+        store.ledger("t")
+    with pytest.raises(KeyError):
+        store.key("unknown")
+
+
+# --------------------------------------------------------------------------- #
+# cached delta ≡ fresh replay, per backend
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_cached_delta_bitwise_equals_fresh_replay(base_setup, backend):
+    cfg, base = base_setup
+    store = make_lora_tenants(cfg, base, 2, steps=3, batch=4, backend=backend)
+    rt = lora_runtime(cfg, base, store, cache_bytes=10_000_000)
+    delta = rt.delta(tenant_name(0))
+    folds = rt.records_replayed
+    assert folds == 3                     # the cold materialization replayed
+    assert rt.delta(tenant_name(0)) is delta   # hit: same buffers
+    assert rt.records_replayed == folds        # ...and zero further folds
+
+    led = store.ledger(tenant_name(0))
+    assert led.backend == composition_for_ledger(led).backend_name
+    tuned = replay(lora_params0(cfg, base, led), led,
+                   composition_for_ledger(led))
+    fresh = merge_lora(tuned["base"], tuned["lora"])
+    assert_trees_bitwise(delta.apply(base), fresh,
+                         f"cached delta != fresh replay under {backend}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_compaction_bitwise_equals_full_replay(base_setup, backend):
+    cfg, base = base_setup
+    store = make_lora_tenants(cfg, base, 1, steps=6, batch=4, backend=backend,
+                              seed0=300)
+    led = store.ledger(tenant_name(0))
+    opt = composition_for_ledger(led)
+    p0 = lora_params0(cfg, base, led)
+    full = replay(p0, led, opt)
+    for keep_tail in (0, 2, 6, 99):
+        comp = compact(p0, led, opt, keep_tail=keep_tail)
+        assert comp.upto == max(0, 6 - keep_tail)
+        assert len(comp.tail) == 6 - comp.upto
+        assert_trees_bitwise(materialize(p0, comp, opt, ledger=led), full,
+                             f"compacted (tail={keep_tail}) != full replay")
+
+
+def test_compaction_refuses_mismatched_ledger(base_setup):
+    cfg, base = base_setup
+    store = make_lora_tenants(cfg, base, 2, steps=4, batch=4, seed0=400)
+    led_a = store.ledger(tenant_name(0))
+    led_b = store.ledger(tenant_name(1))
+    opt = composition_for_ledger(led_a)
+    comp = compact(lora_params0(cfg, base, led_a), led_a, opt, keep_tail=1)
+    with pytest.raises(LedgerHashMismatchError):
+        materialize(lora_params0(cfg, base, led_b), comp, opt, ledger=led_b)
+    store2 = AdapterStore()
+    store2.put("b", led_b)
+    with pytest.raises(LedgerHashMismatchError):
+        store2.put_compacted("b", comp)
+
+
+def test_runtime_uses_compacted_tail(base_setup):
+    cfg, base = base_setup
+    store = make_lora_tenants(cfg, base, 1, steps=8, batch=4, seed0=500)
+    rt = lora_runtime(cfg, base, store, cache_bytes=10_000_000)
+    t = tenant_name(0)
+    full_delta = rt.delta(t)
+    assert rt.records_replayed == 8
+    comp = rt.compact_tenant(t, keep_tail=2)
+    assert comp.upto == 6 and len(comp.tail) == 2
+    rt.cache._entries.clear()             # force a cold re-materialization
+    rt.cache.bytes = 0
+    rt2_folds = rt.records_replayed
+    delta2 = rt.delta(t)
+    assert rt.records_replayed == rt2_folds + 2   # O(tail), not O(steps)
+    assert_trees_bitwise(delta2.apply(base), full_delta.apply(base),
+                         "compacted materialization != full")
+
+
+# --------------------------------------------------------------------------- #
+# DeltaCache: byte-budgeted LRU
+# --------------------------------------------------------------------------- #
+def _delta_of_bytes(n_floats, tag):
+    v = jnp.full((n_floats,), float(tag), jnp.float32)
+    return AdapterDelta((0,), (v,), 1, 1)
+
+
+def test_delta_cache_lru_eviction_under_byte_budget():
+    cache = DeltaCache(budget_bytes=1024)          # holds two 100-float deltas
+    d = {k: _delta_of_bytes(100, i) for i, k in enumerate("abc")}
+    cache.put("a", d["a"])
+    cache.put("b", d["b"])
+    assert cache.get("a") is d["a"]                # refresh a: b is now LRU
+    cache.put("c", d["c"])                         # 1200 B > budget -> evict b
+    assert cache.get("b") is None
+    assert cache.get("a") is d["a"] and cache.get("c") is d["c"]
+    assert cache.evictions == 1 and cache.bytes == 800
+    # an entry bigger than the whole budget is refused, not destructive
+    assert not cache.put("big", _delta_of_bytes(1000, 9))
+    assert cache.oversize == 1 and len(cache) == 2
+    stats = cache.stats
+    assert stats["hits"] == 3 and stats["misses"] == 1
+    with pytest.raises(ValueError):
+        DeltaCache(0)
+
+
+def test_adapter_delta_diff_and_apply_are_exact(base_setup):
+    _, base = base_setup
+    leaves, treedef = jax.tree_util.tree_flatten(base)
+    changed = list(leaves)
+    changed[1] = changed[1] + jnp.float32(0.125)
+    tuned = jax.tree_util.tree_unflatten(treedef, changed)
+    delta = AdapterDelta.diff(base, tuned)
+    assert delta.indices == (1,)
+    assert not delta.full_tree
+    assert_trees_bitwise(delta.apply(base), tuned)
+    # applying against a differently-shaped tree refuses
+    small = jax.tree_util.tree_unflatten(
+        treedef, [l[..., :1] for l in leaves])
+    with pytest.raises(ValueError):
+        delta.apply(small)
+
+
+# --------------------------------------------------------------------------- #
+# Engine: mixed-adapter batching + guardrails + timestamps
+# --------------------------------------------------------------------------- #
+def _sequential_reference(cfg, base, rt, tagged, n_new):
+    """Per-adapter sequential decode: one single-slot engine per request."""
+    outs = []
+    for tenant, req in tagged:
+        e1 = ServeEngine(cfg, base, slots=1, max_len=48)
+        if tenant is not None:
+            e1.register_adapter(tenant, rt.delta(tenant))
+        r1 = Request(req.rid, list(req.prompt_ids), max_new_tokens=n_new,
+                     adapter=tenant)
+        e1.submit(r1)
+        e1.run()
+        outs.append(r1.out_ids)
+    return outs
+
+
+def test_mixed_adapter_batch_matches_sequential(base_setup):
+    cfg, base = base_setup
+    store = make_lora_tenants(cfg, base, 3, steps=3, batch=4, seed0=600)
+    rt = lora_runtime(cfg, base, store, cache_bytes=10_000_000)
+    engine = ServeEngine(cfg, base, slots=3, max_len=48)
+    tagged = synthetic_requests(7, cfg.vocab_size, store.tenants(), seed=2,
+                                max_new_tokens=5)
+    tagged[3] = (None, tagged[3][1])      # one base-model request in the mix
+    serve_load(engine, rt, tagged)
+    want = _sequential_reference(cfg, base, rt, tagged, 5)
+    for (tenant, req), ref in zip(tagged, want):
+        assert req.out_ids == ref, (tenant, req.rid, req.out_ids, ref)
+
+
+def test_full_tree_delta_takes_grouped_path(base_setup):
+    cfg, base = base_setup
+    noisy = jax.tree_util.tree_map(
+        lambda a: a + jnp.asarray(0.01, a.dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, base)
+    full_delta = AdapterDelta.diff(base, noisy)
+    assert full_delta.full_tree
+    engine = ServeEngine(cfg, base, slots=2, max_len=48)
+    engine.register_adapter("full", full_delta)
+    reqs = [Request(0, [3, 5, 7], max_new_tokens=4, adapter="full"),
+            Request(1, [11, 13], max_new_tokens=4)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run()
+    for r, (params, name) in zip(reqs, [(noisy, "full"), (base, None)]):
+        e1 = ServeEngine(cfg, base, slots=1, max_len=48)
+        if name:
+            e1.register_adapter(name, full_delta)
+        r1 = Request(r.rid, list(r.prompt_ids), max_new_tokens=4, adapter=name)
+        e1.submit(r1)
+        e1.run()
+        assert r1.out_ids == r.out_ids
+
+
+def test_engine_refuses_overlong_prompt_and_unknown_adapter(base_setup):
+    cfg, base = base_setup
+    engine = ServeEngine(cfg, base, slots=1, max_len=16)
+    with pytest.raises(ValueError, match="exceeds this engine's limit"):
+        engine.submit(Request(0, list(range(1, 20)), max_new_tokens=2))
+    with pytest.raises(KeyError, match="not registered"):
+        engine.submit(Request(1, [1, 2], adapter="ghost"))
+    assert not engine.queue               # nothing was half-admitted
+
+
+def test_request_timestamp_trail(base_setup):
+    cfg, base = base_setup
+    engine = ServeEngine(cfg, base, slots=1, max_len=32)
+    r = Request(0, [4, 5, 6], max_new_tokens=3)
+    engine.submit(r)
+    engine.run()
+    assert r.done
+    ts = r.times
+    assert set(ts) >= {"queued", "prefill", "decode", "done"}
+    assert ts["queued"] <= ts["prefill"] <= ts["decode"] <= ts["done"]
+
+
+# --------------------------------------------------------------------------- #
+# The acceptance scenario: 64 LoRA tenants through one engine
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_64_tenant_acceptance(base_setup):
+    cfg, base = base_setup
+    store = make_lora_tenants(cfg, base, 64, steps=2, batch=4, seed0=700)
+    rt = lora_runtime(cfg, base, store, cache_bytes=200_000_000)
+    engine = ServeEngine(cfg, base, slots=4, max_len=48)
+    tagged = synthetic_requests(24, cfg.vocab_size, store.tenants(), seed=3,
+                                max_new_tokens=4)
+    serve_load(engine, rt, tagged)
+    want = _sequential_reference(cfg, base, rt, tagged, 4)
+    for (tenant, req), ref in zip(tagged, want):
+        assert req.out_ids == ref, (tenant, req.rid)
+    assert rt.stats["hit_rate"] > 0       # repeated tenants hit the cache
