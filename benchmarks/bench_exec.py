@@ -1,5 +1,5 @@
-"""Execution-engine bench: local vs seed-parallel step wall-clock plus the
-per-step bytes-on-wire story.
+"""Execution-engine bench: local vs seed-parallel step wall-clock, buffer
+donation, and the per-step bytes-on-wire / bytes-live story.
 
 The engine's pitch is that estimator × backend × plan is a full matrix, so
 this bench times the SAME optimizer composition lowered onto different plans
@@ -10,11 +10,20 @@ this bench times the SAME optimizer composition lowered onto different plans
                            center (2n forwards over 1/n-sized slices: ≈ the
                            local step's FLOPs, n× direction averaging).
 
+Each plan is measured twice — through the plain jitted step and through
+``StepProgram.compiled_step_fn`` (donated parameter buffer) — and the
+compiled executable's ``memory_analysis`` is recorded per variant: the
+MeZO claim is inference-memory training, so *peak live parameter bytes*
+(arguments + outputs + XLA temporaries, donation aliasing netted out by the
+compiler) is the number that has to stay flat as the plan fans out.  The
+seed-parallel update chain is ONE fused ``affine_many`` application since
+the multi-seed kernel landed, so the n_groups sweep also traces that
+before/after.
+
 Bytes-on-wire per step (what a multi-host deployment would move):
 
   * seed-parallel: the 2n loss scalars (2 × f32 per group) — MeZO's entire
     inter-replica traffic;
-  * async: one (step, worker, g, lr) contribution per worker (~16 B);
   * a DP backprop baseline would all-reduce the full gradient (4·|θ| bytes)
     — the contrast column.
 
@@ -25,6 +34,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax
 
@@ -42,11 +52,52 @@ BATCH = 8 if is_smoke() else 32
 SEQ = 32 if is_smoke() else 64
 
 
-def _step_time_us(prog, loss_fn, params, batch):
+def _mem_stats(compiled) -> dict:
+    """Executable-level memory analysis (None-safe: some backends return
+    nothing).  ``peak_live_bytes`` = args + outputs + temps − donation
+    aliasing, the buffer footprint a training host must actually hold."""
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        arg = int(m.argument_size_in_bytes)
+        out = int(m.output_size_in_bytes)
+        tmp = int(m.temp_size_in_bytes)
+        alias = int(getattr(m, "alias_size_in_bytes", 0))
+        return {"arg_bytes": arg, "out_bytes": out, "temp_bytes": tmp,
+                "alias_bytes": alias,
+                "peak_live_bytes": arg + out + tmp - alias}
+    except Exception:                                   # pragma: no cover
+        return {}
+
+
+def _measure_plain(prog, loss_fn, params, batch):
     state = prog.init(params, seed=0)
     step = jax.jit(prog.step_fn(loss_fn))
-    return time_fn(step, params, state, batch,
-                   warmup=2, iters=3 if is_smoke() else 7)
+    t = time_fn(step, params, state, batch,
+                warmup=2, iters=3 if is_smoke() else 7)
+    mem = _mem_stats(step.lower(params, state, batch).compile())
+    return t, mem
+
+
+def _measure_donated(prog, loss_fn, params, batch):
+    """Donated steps consume their parameter buffer: re-feed the returned
+    params each call (time_fn would replay a deleted buffer)."""
+    state = prog.init(params, seed=0)
+    step = prog.compiled_step_fn(loss_fn)
+    mem = _mem_stats(step.lower(params, state, batch).compile())
+    p = jax.tree_util.tree_map(lambda x: x + 0, params)   # private copy
+    for _ in range(2):                                    # warmup
+        p, state, _ = step(p, state, batch)
+    jax.block_until_ready(p)
+    ts = []
+    for _ in range(3 if is_smoke() else 7):
+        t0 = time.perf_counter()
+        p, state, _ = step(p, state, batch)
+        jax.block_until_ready(p)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6, mem
 
 
 def run() -> None:
@@ -56,24 +107,46 @@ def run() -> None:
     loss_fn = b.loss_fn()
     batch = lm_batch(1, 0, BATCH, SEQ, cfg.vocab_size)
     n_params = tree_size(params)
+    param_bytes = 4 * int(n_params)
 
     records = []
     mk = lambda: zo.mezo(lr=1e-5, eps=1e-3)
-    t_local = _step_time_us(zexec.StepProgram(mk(), zexec.local()),
-                            loss_fn, params, batch)
-    emit("exec/local_spsa", t_local, "plan=local")
-    records.append({"plan": "local", "n_groups": 1, "us_per_step": t_local,
-                    "wire_bytes_per_step": 0})
+
+    def one_plan(name, plan, n_groups, wire):
+        prog = zexec.StepProgram(mk(), plan)
+        t_plain, mem_plain = _measure_plain(prog, loss_fn, params, batch)
+        t_don, mem_don = _measure_donated(prog, loss_fn, params, batch)
+        peak_p = mem_plain.get("peak_live_bytes")
+        peak_d = mem_don.get("peak_live_bytes")
+        deriv = f"donated={t_don:.1f}us;wire_B={wire}"
+        if peak_p and peak_d:
+            deriv += (f";peak_live_MB={peak_p / 1e6:.2f}"
+                      f";peak_live_donated_MB={peak_d / 1e6:.2f}")
+        emit(f"exec/{name}", t_plain, deriv)
+        records.append({"plan": name.split("_")[0] if "parallel" not in name
+                        else "seed_parallel",
+                        "n_groups": n_groups,
+                        "us_per_step": t_plain,
+                        "us_per_step_donated": t_don,
+                        "wire_bytes_per_step": wire,
+                        "memory": mem_plain,
+                        "memory_donated": mem_don})
+        return t_plain
+
+    t_local = one_plan("local_spsa", zexec.local(), 1, 0)
     for n in GROUPS:
-        t_sp = _step_time_us(
-            zexec.StepProgram(mk(), zexec.seed_parallel(n)),
-            loss_fn, params, batch)
-        wire = 8 * n          # 2n loss scalars, f32
-        emit(f"exec/seed_parallel_{n}", t_sp,
-             f"vs_local={t_sp / t_local:.2f}x;wire_B={wire}")
-        records.append({"plan": "seed_parallel", "n_groups": n,
-                        "us_per_step": t_sp, "wire_bytes_per_step": wire,
-                        "vs_local": t_sp / t_local})
+        t_sp = one_plan(f"seed_parallel_{n}", zexec.seed_parallel(n), n,
+                        8 * n)
+        records[-1]["vs_local"] = t_sp / t_local
+        note(f"seed_parallel({n}): {t_sp / t_local:.2f}x local")
+
+    don = [r for r in records if r["memory"] and r["memory_donated"]]
+    for r in don:
+        pl, dn = (r["memory"]["peak_live_bytes"],
+                  r["memory_donated"]["peak_live_bytes"])
+        note(f"{r['plan']}(n={r['n_groups']}): peak live {pl / 1e6:.2f} MB "
+             f"-> {dn / 1e6:.2f} MB donated "
+             f"(params themselves: {param_bytes / 1e6:.2f} MB)")
 
     dp_grad_bytes = 4 * n_params
     note(f"bytes-on-wire contrast: seed-parallel(4) moves 32 B/step; a DP "
@@ -84,7 +157,9 @@ def run() -> None:
 
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as f:
-        json.dump({"model_params": int(n_params), "batch": BATCH, "seq": SEQ,
+        json.dump({"model_params": int(n_params),
+                   "param_bytes": param_bytes,
+                   "batch": BATCH, "seq": SEQ,
                    "smoke": is_smoke(), "records": records,
                    "dp_gradient_allreduce_bytes": int(dp_grad_bytes)},
                   f, indent=2)

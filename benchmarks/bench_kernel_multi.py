@@ -1,0 +1,88 @@
+"""Fused multi-seed kernel vs the per-seed chain it replaces.
+
+The ``zo_fused_multi`` pitch is HBM arithmetic: a B-stream update chain as B
+single-seed ``zo_affine`` launches reads and writes θ through HBM B times,
+the fused chain kernel exactly once; the B-way fan-out re-reads x B times
+per-seed, once fused.  On a CPU host both lowerings run through the Pallas
+interpreter, so wall-clock here measures launch/interpretation overhead
+rather than memory bandwidth — but that overhead scales with launch count
+the same way HBM traffic does, so fused < per-seed at B ≥ 4 is still the
+pass/fail line (the bandwidth claim itself is the TPU nightly's job).
+
+Output: CSV rows plus ``results/bench_kernel_multi.json`` with the fused and
+per-seed timings per B for both shapes of the kernel (chain and fan-out).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, is_smoke, note, time_fn
+from repro.perturb import pallas as pallas_mod
+
+OUT_PATH = os.path.join("results", "bench_kernel_multi.json")
+
+BS = (1, 4, 8)
+
+
+def _chain_seq(x, seeds, a, b):
+    for j in range(seeds.shape[0]):
+        x = pallas_mod.zo_affine(x, int(seeds[j]), float(a[j]), float(b[j]),
+                                 interpret=True)
+    return x
+
+
+def _fanout_seq(x, seeds, a, b):
+    return jnp.stack([
+        pallas_mod.zo_affine(x, int(seeds[j]), float(a[j]), float(b[j]),
+                             interpret=True)
+        for j in range(seeds.shape[0])])
+
+
+def run() -> None:
+    rows = 256 if is_smoke() else 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, 512))
+    iters = 3 if is_smoke() else 5
+    records = []
+    for B in BS:
+        seeds = jnp.arange(B, dtype=jnp.int32) * 7 + 11
+        a = jnp.linspace(0.9, 1.0, B)
+        b = jnp.linspace(-0.02, 0.02, B)
+
+        t_chain = time_fn(pallas_mod.zo_affine_chain, x, seeds, a, b,
+                          warmup=1, iters=iters)
+        t_chain_seq = time_fn(_chain_seq, x, seeds, a, b,
+                              warmup=1, iters=iters)
+        emit(f"kernel_multi/chain_B{B}", t_chain,
+             f"per_seed={t_chain_seq:.1f}us;speedup={t_chain_seq / t_chain:.2f}x")
+
+        t_fan = time_fn(pallas_mod.zo_affine_multi, x, seeds, a, b,
+                        warmup=1, iters=iters)
+        t_fan_seq = time_fn(_fanout_seq, x, seeds, a, b,
+                            warmup=1, iters=iters)
+        emit(f"kernel_multi/fanout_B{B}", t_fan,
+             f"per_seed={t_fan_seq:.1f}us;speedup={t_fan_seq / t_fan:.2f}x")
+
+        records.append({"B": B, "elements": int(x.size),
+                        "chain_fused_us": t_chain,
+                        "chain_per_seed_us": t_chain_seq,
+                        "fanout_fused_us": t_fan,
+                        "fanout_per_seed_us": t_fan_seq})
+        if B >= 4:
+            status = ("fused wins" if t_chain < t_chain_seq
+                      else "fused SLOWER — regression")
+            note(f"B={B} chain: fused {t_chain:.0f}us vs per-seed "
+                 f"{t_chain_seq:.0f}us ({status})")
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"rows": rows, "cols": 512, "smoke": is_smoke(),
+                   "interpret": True, "records": records}, f, indent=2)
+    note(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ BENCHES = [
     ("perturb", "benchmarks.bench_perturb"),
     ("select", "benchmarks.bench_select"),
     ("exec", "benchmarks.bench_exec"),
+    ("kernel_multi", "benchmarks.bench_kernel_multi"),
     ("wallclock", "benchmarks.bench_wallclock"),
     ("memory", "benchmarks.bench_memory"),
     ("roofline", "benchmarks.bench_roofline"),
@@ -37,7 +38,7 @@ BENCHES = [
 
 # CI-per-commit subset: benches that finish in seconds at smoke scale and
 # leave results/*.json artifacts (the perf trajectory per commit).
-SMOKE_BENCHES = "storage,perturb,select,exec,estimators,serve"
+SMOKE_BENCHES = "storage,perturb,select,exec,kernel_multi,estimators,serve"
 
 
 def main() -> None:

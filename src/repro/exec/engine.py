@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.exec import plan as plan_mod
 from repro.exec.plan import ExecPlan, check_replay_plan
-from repro.perturb import StreamRef, check_replay_backend, get_backend, step_key
+from repro.perturb import StreamRef, check_replay_backend, step_key
 from repro.select import check_replay_selection
 from repro.tree_utils import PyTree
 from repro.zo.base import TransformCtx, Updates, ZOState
@@ -86,14 +86,35 @@ def apply_group_updates(params: PyTree, skey0: jax.Array, coeffs: Sequence,
                         dist: str, backend, selection=None,
                         phase: int = 0) -> PyTree:
     """All groups of one step, in group order; decoupled decay applied once,
-    on group 0 (matching ``add_weight_decay``'s seed-0 rule)."""
-    p = params
+    on group 0 (matching ``add_weight_decay``'s seed-0 rule).
+
+    The whole step's n_groups × batch_seeds streams are flattened — in the
+    exact order the per-group sequential fold applies them — into ONE
+    ``backend.affine_many`` call: on xla that call IS the sequential
+    ``apply_rank1`` fold (bitwise the pre-fusion path), on pallas it is the
+    fused chain kernel, θ round-tripping HBM once for the entire step's
+    update chain instead of once per stream."""
+    refs, cs, ds = [], [], []
     for g in range(n_groups):
-        p = apply_group_update(p, skey0, g, n_groups, coeffs[g],
-                               decay_term if g == 0 else 0.0,
-                               batch_seeds, dist, backend,
-                               selection=selection, phase=phase)
-    return p
+        gkey = group_key(skey0, g, n_groups)
+        decay_g = decay_term if g == 0 else 0.0
+        if batch_seeds == 1:
+            ref = StreamRef(gkey)
+            if selection is not None:
+                ref = ref.with_selection(selection, phase)
+            refs.append(ref)
+            cs.append(coeffs[g])
+            ds.append(decay_g)
+        else:
+            cvec = jnp.asarray(coeffs[g])
+            for j in range(batch_seeds):
+                ref = StreamRef(jax.random.fold_in(gkey, j))
+                if selection is not None:
+                    ref = ref.with_selection(selection, phase)
+                refs.append(ref)
+                cs.append(cvec[j] / batch_seeds)
+                ds.append(decay_g if j == 0 else 0.0)
+    return backend.affine_many(params, refs, cs, ds, dist)
 
 
 def slice_group(batch, group: int, n_groups: int):
@@ -251,6 +272,18 @@ class StepProgram:
         raise ValueError(
             "the replay plan is ledger-driven (no forward passes): call "
             "StepProgram.replay(params0, ledger) instead of step_fn")
+
+    def compiled_step_fn(self, loss_fn, donate: bool = True) -> Callable:
+        """``step_fn`` jitted with the parameter buffer DONATED (matching
+        ``train.loop``'s jit): θ, the perturbed views, and θ_new alias one
+        HBM allocation across the perturb → loss → update chain instead of
+        holding a second parameter-sized buffer live per step — the paper's
+        inference-memory property, and the fix for the seed-parallel
+        CPU-mesh overhead measured in benchmarks/bench_exec.py.  Callers
+        must treat the passed params as consumed and continue from the
+        returned tree (``params, state, metrics = step(params, ...)``)."""
+        return jax.jit(self.step_fn(loss_fn),
+                       donate_argnums=(0,) if donate else ())
 
     # -- seed-parallel lowering (n_groups > 1; n == 1 delegates to local) --- #
     def _seed_parallel_step_fn(self, loss_fn) -> Callable:

@@ -176,8 +176,11 @@ def z_from_counter(idx: jnp.ndarray, seed: jnp.ndarray, dist: str,
         return rademacher_from_counter(idx, seed, pin)
     raise NotImplementedError(
         f"zo_fused kernel has no in-kernel generator for dist={dist!r} "
-        "(implemented: gaussian, rademacher; sphere needs the global "
-        "two-pass norm rescale that is not kernel-fused)")
+        "(implemented: gaussian, rademacher).  sphere is a *scaled* gaussian "
+        "stream: the backend measures ‖z‖ with the zo_sqnorm kernel "
+        "(kernels/zo_fused/multi.py, pass 1) and folds sqrt(d)/‖z‖ into the "
+        "affine b coefficient (pass 2) — call the affine kernels with "
+        "dist='gaussian' and the rescaled b, as PallasBackend does")
 
 
 def _affine_combine(x: jnp.ndarray, z: jnp.ndarray, a, b,

@@ -47,3 +47,23 @@ def zo_affine_batched_ref(x: jnp.ndarray, seeds, a, b,
                           dist: str = "gaussian") -> jnp.ndarray:
     """Batched oracle: y[j] = zo_affine_ref(x, seeds[j], a, b), stacked."""
     return jnp.stack([zo_affine_ref(x, s, a, b, dist=dist) for s in seeds])
+
+
+def zo_affine_multi_ref(x: jnp.ndarray, seeds, a, b,
+                        dist: str = "gaussian") -> jnp.ndarray:
+    """Fan-out oracle with per-stream coefficients:
+    y[j] = zo_affine_ref(x, seeds[j], a[j], b[j]), stacked."""
+    return jnp.stack([zo_affine_ref(x, s, aj, bj, dist=dist)
+                      for s, aj, bj in zip(seeds, a, b)])
+
+
+def zo_affine_chain_ref(x: jnp.ndarray, seeds, a, b,
+                        dist: str = "gaussian") -> jnp.ndarray:
+    """Chained oracle: the sequential per-seed fold
+    ``for j: x = zo_affine_ref(x, seeds[j], a[j], b[j])`` that the fused
+    chain kernel (``multi.zo_affine_chain_2d``) collapses into one launch —
+    each fold rounds through x's dtype exactly as a separate launch would."""
+    y = x
+    for s, aj, bj in zip(seeds, a, b):
+        y = zo_affine_ref(y, s, aj, bj, dist=dist)
+    return y

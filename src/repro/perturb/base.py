@@ -14,12 +14,14 @@ story):
     backend         gaussian  rademacher  sphere
     ==============  ========  ==========  ========
     ``xla``         yes       yes         yes
-    ``pallas``      yes       yes         no [1]
+    ``pallas``      yes       yes         yes [1]
     ==============  ========  ==========  ========
 
-    [1] sphere needs the global sqrt(d)/‖z‖ rescale — a two-pass norm that is
-        not kernel-fused yet; raising beats silently producing wrong-scale
-        perturbations.
+    [1] sphere on pallas is the kernel-fused two-pass rescale: pass 1
+        accumulates ‖z‖² tile-by-tile with the ``zo_sqnorm`` kernel (z is
+        measured, never materialized), pass 2 folds sqrt(d)/‖z‖ into the
+        affine b coefficient — the gaussian/rademacher counter streams are
+        untouched, so no ``stream_id`` bump.
 
 Unsupported combinations raise ``NotImplementedError`` at backend-resolution
 or call time with the matrix above spelled out.
@@ -72,6 +74,23 @@ def check_replay_backend(recorded: Optional[str], active: Optional[str],
             f"backend={recorded!r} (e.g. zo.mezo(..., backend={recorded!r})).")
 
 
+def per_stream_scales(scale, n_refs: int):
+    """Normalize ``perturb_many``'s ``scale`` argument: ``None`` for a shared
+    scalar (the historical contract — backends keep their original batched
+    graph for it), else the per-stream list.  A 1-D sequence/array must have
+    one entry per ref."""
+    if isinstance(scale, (tuple, list)):
+        per = list(scale)
+    elif jnp.ndim(scale) == 1:
+        per = [scale[j] for j in range(scale.shape[0])]
+    else:
+        return None
+    if len(per) != n_refs:
+        raise ValueError(
+            f"per-stream scale has {len(per)} entries for {n_refs} refs")
+    return per
+
+
 class PerturbBackend:
     """Interface.  All parameter-writing methods take a ``StreamRef`` and
     regenerate z internally — z is never part of any signature.
@@ -101,9 +120,8 @@ class PerturbBackend:
                 f"perturbation backend {self.name!r} does not implement "
                 f"dist={dist!r} (supported: {sorted(self.dists)}).  "
                 "Distribution matrix — xla: gaussian/rademacher/sphere; "
-                "pallas: gaussian/rademacher (sphere needs a two-pass "
-                "global-norm rescale that is not kernel-fused yet).  "
-                "Use backend='xla' for this dist.")
+                "pallas: gaussian/rademacher/sphere (kernel-fused two-pass "
+                "rescale).  Use backend='xla' for this dist.")
 
     # -- core tree operations ----------------------------------------------- #
     def perturb(self, params: PyTree, ref: StreamRef, scale,
@@ -138,22 +156,60 @@ class PerturbBackend:
     # -- batched multi-seed entry point (FZOO-style estimators) ------------- #
     def perturb_many(self, params: PyTree, refs: Sequence[StreamRef], scale,
                      dist: str = "gaussian") -> PyTree:
-        """θ + scale · z(ref_j) for each ref, stacked on a new leading axis:
+        """θ + scale_j · z(ref_j) for each ref, stacked on a new leading axis:
         each leaf of the result has shape ``(len(refs), *leaf.shape)``.
+        ``scale`` is a shared scalar, or a length-``len(refs)`` sequence of
+        per-stream scalars (the ±ε antithetic fan-out of two-point SPSA).
 
         Default implementation stacks per-ref ``perturb`` calls — bitwise
         identical to the sequential path by construction.  Both shipped
         backends override it with genuinely vectorized generation (``xla``:
-        vmapped threefry over stacked keys; ``pallas``: the batched-seed
-        kernel, B z-streams per VMEM tile) under the contract that the
-        result stays bitwise-equal to stacked singles — the extension point
-        batched-seed estimators (``zo.fzoo``; FZOO, Dang et al., 2025) build
-        on."""
+        vmapped threefry over stacked keys; ``pallas``: the batched-seed /
+        fused-multi kernel, B z-streams per VMEM tile) under the contract
+        that the result stays bitwise-equal to stacked singles — the
+        extension point batched-seed estimators (``zo.fzoo``; FZOO, Dang
+        et al., 2025) build on."""
         self.check_dist(dist)
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
-        cols = [self.perturb(params, r, scale, dist) for r in refs]
+        per = per_stream_scales(scale, len(refs))
+        cols = [self.perturb(params, r, scale if per is None else per[j],
+                             dist) for j, r in enumerate(refs)]
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cols)
+
+    # -- fused multi-stream write path (one pass, B chained rank-1s) -------- #
+    def affine_many(self, params: PyTree, refs: Sequence[StreamRef],
+                    coeffs: Sequence, decay_terms: Sequence,
+                    dist: str = "gaussian") -> PyTree:
+        """The chained multi-stream rank-1 update — the one multi-seed write
+        path:
+
+            for j in stream order:
+                θ ← (1 − decay_terms[j]) · θ − coeffs[j] · z(ref_j)
+
+        One contract serves FZOO's B folded per-seed updates
+        (``zo.updates.apply_rank1_batch``), the seed-parallel engine's
+        whole-step group-update chain (``exec.engine.apply_group_updates``),
+        and batched ledger replay — all three delegate here.
+
+        This default implementation IS the ``xla`` fallback: a literal
+        sequential ``apply_rank1`` fold, bitwise-identical to the pre-fusion
+        write path by construction.  The ``pallas`` backend overrides it with
+        the fused chain kernel (all B streams folded per resident VMEM tile —
+        one HBM round-trip of θ instead of B) under the contract that the
+        result stays bitwise-equal to this sequential fold."""
+        self.check_dist(dist)
+        if not refs:
+            raise ValueError("affine_many needs at least one StreamRef")
+        if not (len(refs) == len(coeffs) == len(decay_terms)):
+            raise ValueError(
+                f"affine_many needs one coefficient and one decay term per "
+                f"stream; got {len(refs)} refs, {len(coeffs)} coeffs, "
+                f"{len(decay_terms)} decay terms")
+        p = params
+        for ref, coeff, decay in zip(refs, coeffs, decay_terms):
+            p = self.apply_rank1(p, ref, coeff, decay, dist)
+        return p
 
 
 # --------------------------------------------------------------------------- #

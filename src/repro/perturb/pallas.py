@@ -20,11 +20,19 @@ jnp ops), so CPU CI and laptops exercise the real backend semantics.
 ``get_backend("pallas")`` auto-selects interpret off-TPU;
 ``get_backend("pallas-interpret")`` forces it (for benchmarking the overhead).
 
-Supported distributions: gaussian (Box–Muller) and rademacher (the sign of
-one counter stream, generated in-kernel).  Sphere requires the global
-sqrt(d)/‖z‖ two-pass rescale that is not kernel-fused yet and raises
-``NotImplementedError`` loudly (see ``PerturbBackend.check_dist``) instead
-of producing wrong-scale perturbations.
+Supported distributions: gaussian (Box–Muller), rademacher (the sign of one
+counter stream, generated in-kernel), and sphere — the kernel-fused two-pass
+rescale: pass 1 measures ‖z‖² tile-by-tile with the ``zo_sqnorm`` kernel (z
+is generated in VMEM and reduced, never materialized), pass 2 folds
+sqrt(d)/‖z‖ into the affine b coefficient of any affine kernel.  The sphere
+direction IS the gaussian counter stream (same salt-1/2 reads), so adding it
+changes no gaussian/rademacher bits and needs no ``stream_id`` bump.
+
+Multi-seed work goes through the fused-multi kernels
+(``kernels/zo_fused/multi.py``): ``perturb_many`` fans B perturbed views out
+of one HBM read of x per tile, and ``affine_many`` folds B chained rank-1
+updates into one HBM round-trip of θ — both under bitwise stacked/sequential
+-singles contracts.
 """
 from __future__ import annotations
 
@@ -36,7 +44,9 @@ import jax.numpy as jnp
 
 from repro.kernels.zo_fused.kernel import (BLOCK_COLS, BLOCK_ROWS,
                                            zo_affine_2d, zo_affine_2d_batched)
-from repro.perturb.base import PerturbBackend
+from repro.kernels.zo_fused.multi import (zo_affine_chain_2d,
+                                          zo_affine_multi_2d, zo_sqnorm_2d)
+from repro.perturb.base import PerturbBackend, per_stream_scales
 from repro.perturb.stream import _LEAF_STRIDE, StreamRef
 from repro.tree_utils import PyTree, tree_map_with_index
 
@@ -81,6 +91,34 @@ def zo_affine_batched(x: jnp.ndarray, seeds: jnp.ndarray, a, b,
                              interpret=interpret, dist=dist)
     batch = y.shape[0]
     return y.reshape(batch, -1)[:, :n].reshape((batch,) + x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
+def zo_affine_multi(x: jnp.ndarray, seeds: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray, interpret: bool = True,
+                    dist: str = "gaussian") -> jnp.ndarray:
+    """y[j] = a_j·x + b_j·z(seeds[j]) for an arbitrary-shape leaf, one
+    launch — :func:`zo_affine_batched` generalized to per-stream affine
+    coefficients (the fused-multi fan-out kernel).  Batch slices are
+    bitwise-equal to per-stream ``zo_affine`` singles."""
+    flat2d, n = _blocked_view(x)
+    y = zo_affine_multi_2d(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
+                           interpret=interpret, dist=dist)
+    batch = y.shape[0]
+    return y.reshape(batch, -1)[:, :n].reshape((batch,) + x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
+def zo_affine_chain(x: jnp.ndarray, seeds: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray, interpret: bool = True,
+                    dist: str = "gaussian") -> jnp.ndarray:
+    """Chained y = fold_j (a_j·y + b_j·z(seeds[j])) for an arbitrary-shape
+    leaf in ONE launch — bitwise-equal to the sequential per-stream
+    ``zo_affine`` chain while x round-trips HBM once instead of B times."""
+    flat2d, n = _blocked_view(x)
+    y = zo_affine_chain_2d(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
+                           interpret=interpret, dist=dist)
+    return y.reshape(-1)[:n].reshape(x.shape)
 
 
 def leaf_seed(seed: int, leaf_idx: int) -> jnp.ndarray:
@@ -135,11 +173,13 @@ class PallasBackend(PerturbBackend):
     kernel launch at all (zero z generation, zero writes)."""
 
     name = "pallas"
-    dists = frozenset({"gaussian", "rademacher"})
+    dists = frozenset({"gaussian", "rademacher", "sphere"})
     # z2: transcendental-free polynomial Box–Muller (deterministic across
     # jitted graphs).  z1 artifacts (jnp.log/cos bits) refuse to replay.
     # (The in-kernel rademacher stream landed under z2 — a new dist adds a
-    # stream, it does not change the gaussian bits, so no bump.)
+    # stream, it does not change the gaussian bits, so no bump.  sphere is
+    # the gaussian stream × a wrapper-level sqrt(d)/‖z‖ scalar — the counter
+    # reads are identical, so again no bump.)
     stream_version = 2
 
     def __init__(self, interpret: Optional[bool] = None):
@@ -170,9 +210,50 @@ class PallasBackend(PerturbBackend):
             if jnp.issubdtype(p.dtype, jnp.floating)
             and (mask is None or mask[i]) else p, params)
 
+    def _sphere_scale(self, params: PyTree, ref: StreamRef) -> jnp.ndarray:
+        """sqrt(d)/‖z(ref)‖ over the selected floating leaves — pass 1 of the
+        kernel-fused two-pass sphere rescale.  ‖z‖² is accumulated leaf by
+        leaf by the ``zo_sqnorm`` kernel on the SAME per-leaf counter streams
+        the affine kernels read (z is generated in VMEM and reduced, never
+        materialized); d counts the same subspace.  Every float stage is
+        pinned so the scalar rounds identically in every consuming graph
+        (perturb / fused restore / rank-1 / the fused multi passes) — the
+        live == replay bitwise contract extends to sphere."""
+        seed = ref.counter_seed()
+        mask = ref.selection_mask(params)
+        d = 0
+        sq = None
+        for i, p in enumerate(jax.tree_util.tree_leaves(params)):
+            if not jnp.issubdtype(p.dtype, jnp.floating):
+                continue
+            if mask is not None and not mask[i]:
+                continue
+            d += int(p.size)
+            part = zo_sqnorm_2d(int(p.size), leaf_seed(seed, i),
+                                interpret=self.interpret)
+            sq = part if sq is None else self._pin_scalars(sq + part)[0]
+        if sq is None:
+            raise ValueError(
+                "sphere perturbation needs at least one selected floating "
+                "leaf (the sqrt(d)/‖z‖ rescale is undefined on an empty "
+                "subspace)")
+        (ratio,) = self._pin_scalars(jnp.float32(d) / sq)
+        return self._pin_scalars(jnp.sqrt(ratio))[0]
+
     def perturb(self, params: PyTree, ref: StreamRef, scale,
                 dist: str = "gaussian") -> PyTree:
         self.check_dist(dist)
+        if dist == "sphere":
+            # pass 2: the global rescale rides the affine b coefficient of
+            # the plain gaussian-stream kernel — one extra scalar mul, no
+            # second z generation
+            (b,) = self._pin_scalars(
+                jnp.asarray(scale, jnp.float32) *
+                self._sphere_scale(params, ref))
+            return self._map(params, ref,
+                             lambda p, s, i: zo_affine(
+                                 p, s, 1.0, b, interpret=self.interpret,
+                                 dist="gaussian"))
         return self._map(params, ref,
                          lambda p, s, i: zo_affine(p, s, 1.0, scale,
                                                    interpret=self.interpret,
@@ -191,10 +272,15 @@ class PallasBackend(PerturbBackend):
         decay = 1.0 - wd_
         (de,) = self._pin_scalars(decay * eps_)
         b = de - lr_g_
+        kdist = dist
+        if dist == "sphere":
+            (b,) = self._pin_scalars(
+                b * self._sphere_scale(params_minus, ref))
+            kdist = "gaussian"
         return self._map(params_minus, ref,
                          lambda p, s, i: zo_affine(p, s, decay, b,
                                                    interpret=self.interpret,
-                                                   dist=dist))
+                                                   dist=kdist))
 
     def apply_rank1(self, params: PyTree, ref: StreamRef, coeff,
                     decay_term=0.0, dist: str = "gaussian",
@@ -204,10 +290,18 @@ class PallasBackend(PerturbBackend):
         a = 1.0 - decay_
         d_leaves = (jax.tree_util.tree_leaves(d_tree)
                     if d_tree is not None else None)
+        # unlike xla's apply_rank1 (whose sphere callers pre-scale the
+        # coefficient), the pallas primitive applies the sphere rescale
+        # itself — live steps, affine_many, and ledger replay all route
+        # through here, so the scalar is folded identically everywhere
+        sph = self._sphere_scale(params, ref) if dist == "sphere" else None
+        kdist = "gaussian" if dist == "sphere" else dist
 
         def one(p, s, i):
             b = -coeff_ if d_leaves is None else -coeff_ * d_leaves[i]
-            return zo_affine(p, s, a, b, interpret=self.interpret, dist=dist)
+            if sph is not None:
+                (b,) = self._pin_scalars(b * sph)
+            return zo_affine(p, s, a, b, interpret=self.interpret, dist=kdist)
 
         return self._map(params, ref, one)
 
@@ -217,29 +311,94 @@ class PallasBackend(PerturbBackend):
         zeros = jnp.zeros(like.shape, like.dtype if
                           jnp.issubdtype(like.dtype, jnp.floating)
                           else jnp.float32)
+        # sphere: direction only, like the xla backend — the global
+        # sqrt(d)/‖z‖ rescale needs the full tree and is applied by callers
+        kdist = "gaussian" if dist == "sphere" else dist
         return zo_affine(zeros, ref.leaf_seed(leaf_index), 0.0, 1.0,
-                         interpret=self.interpret, dist=dist)
+                         interpret=self.interpret, dist=kdist)
 
     def perturb_many(self, params: PyTree, refs: Sequence[StreamRef], scale,
                      dist: str = "gaussian") -> PyTree:
-        """Genuinely batched θ + scale·z(ref_j): the batched kernel generates
-        B z-streams per VMEM tile of each leaf (one launch per leaf, x read
-        once per tile) — bitwise-equal to stacking per-ref ``perturb`` calls,
-        contract-tested in tests/test_perturb_backend.py.  Unselected leaves
-        get no launch — they are stacked unperturbed, exactly as masked
-        singles would stack them."""
+        """Genuinely batched θ + scale_j·z(ref_j): one kernel launch per leaf
+        generates B z-streams per VMEM tile (x read once per tile) —
+        bitwise-equal to stacking per-ref ``perturb`` calls, contract-tested
+        in tests/test_perturb_backend.py.  A shared scalar ``scale`` runs the
+        original batched kernel; per-stream scales (and sphere, whose
+        per-stream ‖z_j‖ rescales differ) run the fused-multi fan-out with
+        per-stream b_j.  Unselected leaves get no launch — they ride along
+        as a copy-free broadcast view, bitwise what stacking masked singles
+        yields."""
         self.check_dist(dist)
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
         mask = refs[0].selection_mask(params)
         seeds0 = jnp.stack([r.counter_seed() for r in refs])
+        per = per_stream_scales(scale, len(refs))
+        kdist = dist
+        if dist == "sphere":
+            base = [scale] * len(refs) if per is None else per
+            per = [self._pin_scalars(jnp.asarray(s, jnp.float32) *
+                                     self._sphere_scale(params, r))[0]
+                   for s, r in zip(base, refs)]
+            kdist = "gaussian"
+        if per is not None:
+            b_vec = jnp.stack([jnp.asarray(s, jnp.float32) for s in per])
+            a_vec = jnp.ones_like(b_vec)
 
         def one(i, p):
             if not jnp.issubdtype(p.dtype, jnp.floating) or \
                     (mask is not None and not mask[i]):
-                return jnp.stack([p] * len(refs))
+                return jnp.broadcast_to(p, (len(refs),) + p.shape)
             seeds = seeds0 + jnp.int32(_LEAF_STRIDE) * jnp.int32(i)
-            return zo_affine_batched(p, seeds, 1.0, scale,
-                                     interpret=self.interpret, dist=dist)
+            if per is None:
+                return zo_affine_batched(p, seeds, 1.0, scale,
+                                         interpret=self.interpret, dist=kdist)
+            return zo_affine_multi(p, seeds, a_vec, b_vec,
+                                   interpret=self.interpret, dist=kdist)
+
+        return tree_map_with_index(one, params)
+
+    def affine_many(self, params: PyTree, refs: Sequence[StreamRef],
+                    coeffs: Sequence, decay_terms: Sequence,
+                    dist: str = "gaussian") -> PyTree:
+        """The fused chain kernel: all B streams of the multi-seed update
+        chain folded per resident VMEM tile — θ round-trips HBM once instead
+        of B times.  Bitwise-equal to the base class's sequential
+        ``apply_rank1`` fold (contract-tested): per-stream scalars are pinned
+        exactly as ``apply_rank1`` pins them, and the chain kernel casts to
+        the leaf dtype between streams, reproducing the write/read rounding
+        boundary of B separate launches."""
+        self.check_dist(dist)
+        if not refs:
+            raise ValueError("affine_many needs at least one StreamRef")
+        if not (len(refs) == len(coeffs) == len(decay_terms)):
+            raise ValueError(
+                f"affine_many needs one coefficient and one decay term per "
+                f"stream; got {len(refs)} refs, {len(coeffs)} coeffs, "
+                f"{len(decay_terms)} decay terms")
+        mask = refs[0].selection_mask(params)
+        seeds0 = jnp.stack([r.counter_seed() for r in refs])
+        kdist = "gaussian" if dist == "sphere" else dist
+        a_list, b_list = [], []
+        for j, ref in enumerate(refs):
+            coeff_, decay_ = self._pin_scalars(coeffs[j], decay_terms[j])
+            a = 1.0 - decay_
+            b = -coeff_
+            if dist == "sphere":
+                # ‖z_j‖ depends only on (seed_j, leaf sizes, mask), never on
+                # the evolving θ — the chained fold sees the exact scalars
+                # the sequential one would
+                (b,) = self._pin_scalars(b * self._sphere_scale(params, ref))
+            a_list.append(jnp.asarray(a, jnp.float32))
+            b_list.append(jnp.asarray(b, jnp.float32))
+        a_vec, b_vec = jnp.stack(a_list), jnp.stack(b_list)
+
+        def one(i, p):
+            if not jnp.issubdtype(p.dtype, jnp.floating) or \
+                    (mask is not None and not mask[i]):
+                return p
+            seeds = seeds0 + jnp.int32(_LEAF_STRIDE) * jnp.int32(i)
+            return zo_affine_chain(p, seeds, a_vec, b_vec,
+                                   interpret=self.interpret, dist=kdist)
 
         return tree_map_with_index(one, params)

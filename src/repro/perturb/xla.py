@@ -26,7 +26,7 @@ from typing import Literal, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.perturb.base import PerturbBackend
+from repro.perturb.base import PerturbBackend, per_stream_scales
 from repro.perturb.stream import StreamRef, step_key  # noqa: F401  (canonical
 # definition lives in repro.perturb.stream; re-exported here for the legacy
 # core.perturb shim surface)
@@ -224,16 +224,32 @@ class XLABackend(PerturbBackend):
     def perturb_many(self, params: PyTree, refs: Sequence[StreamRef], scale,
                      dist: str = "gaussian") -> PyTree:
         """Vectorized threefry: one vmapped perturb over the stacked per-seed
-        keys instead of B sequential tree passes.  Threefry is a counter-based
-        integer hash and the uniform→z conversion is elementwise, so the
-        batched lowering is bitwise-equal to stacking per-ref ``perturb``
-        calls (contract-tested).  Unselected leaves never enter the vmapped
-        generation; vmap broadcasts them to the batch axis unperturbed —
-        identical to stacking masked singles."""
+        keys (and, when given, per-stream scales) instead of B sequential
+        tree passes.  Threefry is a counter-based integer hash and the
+        uniform→z conversion is elementwise, so the batched lowering is
+        bitwise-equal to stacking per-ref ``perturb`` calls
+        (contract-tested).  Unselected leaves never enter the vmapped
+        generation and are returned as copy-free ``broadcast_to`` views
+        (not B materialized HBM copies) — bitwise what stacking masked
+        singles yields."""
         self.check_dist(dist)
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
         mask = refs[0].selection_mask(params)
         keys = jnp.stack([r.key for r in refs])
-        return jax.vmap(lambda k: perturb(params, k, scale, dist,
-                                          mask=mask))(keys)
+        per = per_stream_scales(scale, len(refs))
+        if per is None:
+            stacked = jax.vmap(lambda k: perturb(params, k, scale, dist,
+                                                 mask=mask))(keys)
+        else:
+            scales = jnp.stack([jnp.asarray(s, jnp.float32) for s in per])
+            stacked = jax.vmap(lambda k, s: perturb(params, k, s, dist,
+                                                    mask=mask))(keys, scales)
+        if mask is None:
+            return stacked
+        flat, treedef = jax.tree_util.tree_flatten(stacked)
+        out = [jnp.broadcast_to(p, (len(refs),) + p.shape)
+               if not mask[i] else st
+               for i, (p, st) in
+               enumerate(zip(jax.tree_util.tree_leaves(params), flat))]
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -70,18 +70,26 @@ def apply_rank1_batch(params: PyTree, skey: jax.Array, coeff_vec,
     This is the ONE code path shared by the live fzoo estimator's
     ``apply_update`` and ``ZOOptimizer.replay_update`` — keeping the fold /
     divide / decay schedule in a single place is what makes a ledger replay
-    perform arithmetic identical to the recorded step."""
+    perform arithmetic identical to the recorded step.
+
+    The fold itself is handed to the backend as ONE ``affine_many`` call:
+    the ``xla`` fallback is the literal sequential chain above (bitwise the
+    pre-fusion path by construction), while ``pallas`` runs the fused chain
+    kernel — all B streams folded per resident VMEM tile, one HBM round-trip
+    of θ instead of B (bitwise-equal to the sequential chain,
+    contract-tested)."""
     be = get_backend(backend)
     coeff_vec = jnp.asarray(coeff_vec)
     if coeff_vec.ndim != 1:
         raise ValueError(f"apply_rank1_batch needs a (B,) coefficient "
                          f"vector; got shape {coeff_vec.shape}")
     n = coeff_vec.shape[0]
-    p = params
+    refs, coeffs, decays = [], [], []
     for j in range(n):
         ref = StreamRef(jax.random.fold_in(skey, j))
         if selection is not None:
             ref = ref.with_selection(selection, phase)
-        p = be.apply_rank1(p, ref, coeff_vec[j] / n,
-                           decay_term if j == 0 else 0.0, dist)
-    return p
+        refs.append(ref)
+        coeffs.append(coeff_vec[j] / n)
+        decays.append(decay_term if j == 0 else 0.0)
+    return be.affine_many(params, refs, coeffs, decays, dist)

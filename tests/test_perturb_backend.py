@@ -137,6 +137,27 @@ def test_perturb_many_matches_stacked_singles(backend, B):
     assert many["w"].shape == (B, 70, 33)
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_perturb_many_unselected_leaves_broadcast_bitwise(backend):
+    """Unselected (and non-floating) leaves are returned as copy-free
+    ``broadcast_to`` views rather than B materialized stacked copies — the
+    bits must be exactly what the old ``jnp.stack([p] * B)`` produced."""
+    from repro import select
+    be = get_backend(backend)
+    params = {"b": jnp.ones((31,)),
+              "w": jax.random.normal(jax.random.PRNGKey(0), (70, 33))}
+    sel = select.leaves(r"\['w'\]")
+    refs = [StreamRef.derive(jax.random.PRNGKey(7), 0, j).with_selection(
+        sel, 0) for j in range(4)]
+    many = be.perturb_many(params, refs, 1e-2)
+    np.testing.assert_array_equal(
+        np.asarray(many["b"]), np.asarray(jnp.stack([params["b"]] * 4)))
+    assert many["b"].shape == (4, 31)
+    # selected leaf still perturbs per stream
+    assert not np.array_equal(np.asarray(many["w"][0]),
+                              np.asarray(many["w"][1]))
+
+
 def test_pallas_batched_kernel_generates_b_streams_per_tile():
     """The batched kernel's per-stream slices equal single-seed kernel calls
     bitwise (one launch, B z-streams against each resident x tile)."""
@@ -152,18 +173,62 @@ def test_pallas_batched_kernel_generates_b_streams_per_tile():
 
 
 # --------------------------------------------------------------------------- #
-# Distribution matrix: loud failure, no wrong-scale silent fallback
+# Distribution matrix: pallas now covers all three dists; unknown names
+# still fail loudly (no wrong-scale silent fallback)
 # --------------------------------------------------------------------------- #
-def test_pallas_unsupported_dists_raise():
+def test_pallas_supports_full_dist_matrix():
+    """Sphere joined the pallas matrix via the kernel-fused two-pass rescale
+    (``zo_sqnorm`` pass + b-folded gaussian affine).  Every documented dist
+    must now perturb on either backend, and the estimator factory composes."""
+    be = get_backend("pallas")
+    params = tree_a()
+    ref = StreamRef.derive(jax.random.PRNGKey(0), 0)
+    for dist in ("gaussian", "rademacher", "sphere"):
+        out = be.perturb(params, ref, 1e-3, dist=dist)
+        assert out["w"].shape == (70, 33)
+    zo.mezo(lr=1e-3, eps=1e-3, dist="sphere", backend="pallas")
+
+
+def test_pallas_sphere_matches_xla_semantics():
+    """Pallas sphere uses the same z ⋅ sqrt(d)/‖z‖ construction as xla (over
+    its own counter stream): the perturbation offset has squared norm ≈ d·ε²
+    — the defining property of uniform-on-the-sphere scaling."""
+    be = get_backend("pallas")
+    params = {"w": jnp.zeros((300, 40)), "b": jnp.zeros((77,))}
+    ref = StreamRef.derive(jax.random.PRNGKey(0), 2)
+    out = be.perturb(params, ref, 1e-3, dist="sphere")
+    sq = sum(float(jnp.sum(jnp.asarray(x, jnp.float32) ** 2))
+             for x in jax.tree_util.tree_leaves(out))
+    d = 300 * 40 + 77
+    np.testing.assert_allclose(sq, d * 1e-6, rtol=1e-3)
+
+
+def test_pallas_sphere_does_not_disturb_gaussian_bits():
+    """Adding sphere must not have moved the gaussian/rademacher streams: the
+    kernel is still called with the same seeds and the same coefficients, so
+    the ref-oracle equalities (and hence every pre-PR ledger) still hold."""
+    z = pallas_mod.zo_affine(jnp.zeros((100,)), 5, 0.0, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(z),
+                                  np.asarray(zo_ref.z_for((100,), 5)))
+    zr = pallas_mod.zo_affine(jnp.zeros((100,)), 5, 0.0, 1.0, interpret=True,
+                              dist="rademacher")
+    np.testing.assert_array_equal(
+        np.asarray(zr), np.asarray(zo_ref.z_for((100,), 5,
+                                                dist="rademacher")))
+
+
+def test_pallas_stream_id_unchanged_by_sphere():
+    """Sphere is a wrapper-level scalar on the existing gaussian stream —
+    no new z generator, so the recorded stream identity must NOT bump (a
+    bump would refuse replay of every ledger recorded since z2)."""
+    assert get_backend("pallas").stream_id == "pallas+z2"
+
+
+def test_unknown_dist_still_raises():
     be = get_backend("pallas")
     with pytest.raises(NotImplementedError, match="pallas"):
         be.perturb(tree_a(), StreamRef.derive(jax.random.PRNGKey(0), 0),
-                   1e-3, dist="sphere")
-
-
-def test_pallas_unsupported_dist_raises_at_factory_time():
-    with pytest.raises(NotImplementedError, match="sphere"):
-        zo.mezo(lr=1e-3, eps=1e-3, dist="sphere", backend="pallas")
+                   1e-3, dist="cauchy")
 
 
 # --------------------------------------------------------------------------- #
