@@ -38,7 +38,7 @@ BENCHES = [
 
 # CI-per-commit subset: benches that finish in seconds at smoke scale and
 # leave results/*.json artifacts (the perf trajectory per commit).
-SMOKE_BENCHES = "storage,perturb,select,exec,kernel_multi,estimators,serve"
+SMOKE_BENCHES = "storage,perturb,select,exec,kernel_multi,estimators,serve,quality"
 
 
 def main() -> None:

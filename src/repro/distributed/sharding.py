@@ -66,6 +66,10 @@ _PARAM_RULES: list[tuple[str, Sequence[int], str]] = [
     (r"\['moe'\]\['router'\]$",     (),         "tp"),
     (r"\['moe'\]\['w[13]'\]$",      (-3, -1),   "moe"),
     (r"\['moe'\]\['w2'\]$",         (-3, -2),   "moe"),
+    # grouped expert layout (cfg.expert_groups > 1): each "eg{j}" sub-leaf
+    # holds E/G experts on the same (-3) experts dim — same sharding rules
+    (r"\['moe'\]\['eg\d+'\]\['w[13]'\]$", (-3, -1), "moe"),
+    (r"\['moe'\]\['eg\d+'\]\['w2'\]$",    (-3, -2), "moe"),
     # Hymba SSM projections
     (r"\['ssm'\]\['in_proj'\]$",    (-1,),      "tp"),
     (r"\['ssm'\]\['out_proj'\]$",   (-2,),      "tp"),

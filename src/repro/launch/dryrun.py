@@ -275,7 +275,9 @@ def main():
     ap.add_argument("--select", default="full",
                     help="parameter selection for the train cells "
                          "(repro.select spec: full, leaves(<regex>), "
-                         "block_cyclic(<k>), peft(lora|prefix))")
+                         "block_cyclic(<k>), peft(lora|prefix), "
+                         "moe_experts(<G>)) or 'auto' for the registry's "
+                         "per-family default")
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
@@ -328,6 +330,13 @@ def main():
                         print(f"[dryrun] {arch_id} {args.cell}: skipped "
                               f"(N/A per DESIGN.md §4)", flush=True)
                         continue
+                selection = args.select
+                if selection == "auto":
+                    # registry per-family default (same hook as launch/train)
+                    from repro.models import default_selection
+                    selection = default_selection(
+                        dataclasses.replace(cfg, **overrides)
+                        if overrides else cfg)
                 for cell in cells:
                     # the roofline table is single-pod; the multi-pod pass
                     # proves the 'pod' axis shards (compile success + memory)
@@ -338,7 +347,7 @@ def main():
                                    batch_seeds=args.batch_seeds,
                                    exec_plan=args.exec_plan,
                                    n_groups=args.n_groups,
-                                   selection=args.select)
+                                   selection=selection)
                     if args.tag:
                         rec["tag"] = args.tag
                     f.write(json.dumps(rec) + "\n")

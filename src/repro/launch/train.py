@@ -18,7 +18,7 @@ from repro import zo
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import TrajectoryLedger
 from repro.data.pipeline import DataSpec, Pipeline
-from repro.models import all_archs, bundle
+from repro.models import FAMILY_ARCHS, OBJECTIVES, all_archs, bundle
 from repro.train.adam import Adam, AdamConfig
 from repro.train.loop import HeartbeatMonitor, train
 from repro.tree_utils import tree_size
@@ -27,6 +27,13 @@ from repro.tree_utils import tree_size
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--model-family", default=None,
+                    choices=sorted(FAMILY_ARCHS),
+                    help="architecture-family quickstart: picks the "
+                         "representative registry arch for the family "
+                         "(overrides --arch); e.g. --model-family moe "
+                         "--select auto runs mixtral with expert-wise "
+                         "selection")
     ap.add_argument("--optimizer", default="mezo",
                     choices=["mezo", "mezo-adam", "adam", "sgd"])
     ap.add_argument("--estimator", default="spsa",
@@ -50,9 +57,26 @@ def main():
                     help="parameter selection (repro.select) for the ZO "
                          "optimizers: 'full', 'leaves(<regex>)', "
                          "'block_cyclic(<k>)' (rotating leaf blocks, ~1/k of "
-                         "the tree perturbed per step), or "
-                         "'peft(lora|prefix)' for a merged PEFT tree; "
+                         "the tree perturbed per step), "
+                         "'peft(lora|prefix)' for a merged PEFT tree, "
+                         "'moe_experts(<G>)' (router frozen, one expert "
+                         "group per step; needs --expert-groups G), or "
+                         "'auto' for the registry's per-family default; "
                          "recorded in ckpt meta + the MZOL5 ledger header")
+    ap.add_argument("--objective", default="ce", choices=list(OBJECTIVES),
+                    help="training objective: 'ce' (cross-entropy) or the "
+                         "non-differentiable 'accuracy'/'f1' metrics (paper "
+                         "§3.3) — zero gradient a.e., so they require a ZO "
+                         "optimizer (--optimizer mezo)")
+    ap.add_argument("--expert-groups", type=int, default=None,
+                    help="MoE only: split the expert tensors into G leaf "
+                         "groups (cfg.expert_groups) so moe_experts(G) "
+                         "selection can cycle one group per step")
+    ap.add_argument("--scan-mode", default=None,
+                    choices=["chunk", "fused_recurrent"],
+                    help="ssm/hybrid forward mode: 'chunk' (chunked-matmul, "
+                         "default) or 'fused_recurrent' (exact per-token "
+                         "recurrence; parity-tested oracle)")
     ap.add_argument("--exec-plan", default="local",
                     choices=["local", "seed_parallel"],
                     help="execution plan (repro.exec): 'local' is the "
@@ -73,15 +97,35 @@ def main():
     ap.add_argument("--ckpt-interval", type=int, default=100)
     args = ap.parse_args()
 
+    if args.model_family is not None:
+        args.arch = FAMILY_ARCHS[args.model_family]
     arch = all_archs()[args.arch]
     cfg = arch.smoke_cfg if args.smoke else arch.cfg
+    if args.expert_groups is not None:
+        if not cfg.n_experts:
+            raise SystemExit(f"--expert-groups needs an MoE arch "
+                             f"(got {args.arch!r}, family {cfg.family!r})")
+        cfg = cfg.replace(expert_groups=args.expert_groups)
+    if args.scan_mode is not None:
+        cfg = cfg.replace(scan_mode=args.scan_mode)
     b = bundle(cfg)
+    if args.select == "auto":
+        # the registry's per-family default (MoE: expert-wise cycling with
+        # the router frozen; everything else: full)
+        args.select = b.default_selection()
+        print(f"[train] --select auto -> {args.select!r}")
     params = b.init(jax.random.PRNGKey(args.seed))
     print(f"[train] {cfg.name}: {tree_size(params)/1e6:.1f} M params, "
           f"optimizer={args.optimizer}")
 
     pipe = Pipeline(DataSpec("lm", batch=args.batch, seq=args.seq,
                              vocab=cfg.vocab_size, seed=args.seed))
+    if args.objective != "ce" and args.optimizer not in ("mezo", "mezo-adam"):
+        # argmax metrics have zero gradient a.e. — backprop would "train"
+        # without ever changing the loss; refuse instead of silently stalling
+        raise SystemExit(f"--objective {args.objective!r} is "
+                         "non-differentiable and needs a ZO optimizer "
+                         f"(--optimizer mezo); got {args.optimizer!r}")
     if args.select != "full" and args.optimizer != "mezo":
         # fail loudly: every other branch would silently train the full tree
         # (adam/sgd have no selection support; mezo-adam's applier transform
@@ -131,7 +175,8 @@ def main():
 
     ckpt = (CheckpointManager(args.ckpt_dir, interval=args.ckpt_interval)
             if args.ckpt_dir else None)
-    res = train(b.loss_fn(), params, opt, pipe, total_steps=args.steps,
+    res = train(b.loss_fn(objective=args.objective), params, opt, pipe,
+                total_steps=args.steps,
                 ckpt=ckpt, ledger=ledger, monitor=HeartbeatMonitor(),
                 log_every=max(args.steps // 10, 1), verbose=True,
                 seed=args.seed)

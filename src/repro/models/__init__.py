@@ -1,7 +1,10 @@
 from repro.models.config import (ALL_CELLS, DECODE_32K, LONG_500K, ModelConfig,
                                  PREFILL_32K, ShapeCell, TRAIN_4K, cells_for)
-from repro.models.registry import Arch, Bundle, all_archs, bundle, get, register
+from repro.models.registry import (Arch, Bundle, FAMILY_ARCHS, OBJECTIVES,
+                                   all_archs, bundle, default_selection,
+                                   family_arch, get, register)
 
 __all__ = ["ModelConfig", "ShapeCell", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
            "LONG_500K", "ALL_CELLS", "cells_for", "Arch", "Bundle", "register",
-           "get", "all_archs", "bundle"]
+           "get", "all_archs", "bundle", "FAMILY_ARCHS", "OBJECTIVES",
+           "default_selection", "family_arch"]

@@ -42,6 +42,13 @@ class ModelConfig:
     top_k: int = 0
     moe_group_size: int = 512        # GShard-style dispatch group length
     capacity_factor: float = 1.25
+    # Grouped expert layout for expert-wise ZO selection: when > 1 the expert
+    # tensors are split into ``expert_groups`` separate leaves ("eg0".."egG-1",
+    # n_experts/G experts each) so ``select.moe_experts(G)`` can cycle the
+    # perturbation over one group per step at LEAF granularity (sub-leaf
+    # selection is a deferred follow-up).  0/1 keep the legacy stacked layout
+    # bitwise-unchanged.
+    expert_groups: int = 0
 
     # attention extent
     sliding_window: int = 0          # 0 = global causal
@@ -50,6 +57,11 @@ class ModelConfig:
     ssm_state: int = 0
     ssm_heads: int = 0               # Hymba: number of parallel mamba heads
     scan_chunk: int = 32             # chunk length for SSD/WKV matmul forms
+    # forward mode for the recurrent families (fla-style dual-mode idiom):
+    # "chunk" = chunked-matmul SSD/WKV form (MXU-native, the default);
+    # "fused_recurrent" = exact per-token lax.scan recurrence (the oracle).
+    # Parity between the two is test-enforced (tests/test_zoo_conformance.py).
+    scan_mode: str = "chunk"
 
     # encoder-decoder (Whisper)
     encoder_layers: int = 0

@@ -18,16 +18,63 @@ import jax.numpy as jnp
 from repro.models.common import activation, dense_init, shard_hint
 
 
-def moe_params(cfg, kg, dtype) -> dict:
-    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+def expert_group_count(cfg) -> int:
+    """Number of expert-wise selection groups for ``cfg`` (≥ 1).
+
+    ``cfg.expert_groups`` in (0, 1) means the legacy single-leaf layout
+    (``w1: (E, d, ff)`` …); G > 1 means ``moe_params`` splits the expert
+    tensors into G "eg{j}" sub-leaves of E/G experts each so that
+    ``select.moe_experts(G)`` can cycle perturbation over one group per step.
+    """
+    G = int(cfg.expert_groups or 0)
+    if G <= 1:
+        return 1
+    if cfg.n_experts % G:
+        raise ValueError(
+            f"expert_groups={G} does not divide n_experts={cfg.n_experts}; "
+            "expert-wise selection needs equal-sized groups")
+    return G
+
+
+def _expert_leaves(cfg, kg, dtype, n_exp: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
     p = {
-        "router": dense_init(kg(), (d, E), dtype),
-        "w1": dense_init(kg(), (E, d, ff), dtype, fan_in=d),
-        "w2": dense_init(kg(), (E, ff, d), dtype, fan_in=ff),
+        "w1": dense_init(kg(), (n_exp, d, ff), dtype, fan_in=d),
+        "w2": dense_init(kg(), (n_exp, ff, d), dtype, fan_in=ff),
     }
     if cfg.gated_ffn:
-        p["w3"] = dense_init(kg(), (E, d, ff), dtype, fan_in=d)
+        p["w3"] = dense_init(kg(), (n_exp, d, ff), dtype, fan_in=d)
     return p
+
+
+def moe_params(cfg, kg, dtype) -> dict:
+    d, E = cfg.d_model, cfg.n_experts
+    G = expert_group_count(cfg)
+    p = {"router": dense_init(kg(), (d, E), dtype)}
+    if G == 1:
+        p.update(_expert_leaves(cfg, kg, dtype, E))
+    else:
+        # grouped layout: experts [j·E/G, (j+1)·E/G) live in leaf "eg{j}" —
+        # routing semantics are identical (groups concatenate back to E in
+        # moe_ffn); only the LEAF STRUCTURE changes, which is what lets the
+        # selection layer freeze/perturb one group at a time.
+        for j in range(G):
+            p[f"eg{j}"] = _expert_leaves(cfg, kg, dtype, E // G)
+    return p
+
+
+def _stacked_expert_weights(cfg, p: dict):
+    """(w1, w2, w3-or-None) with experts stacked to (E, ...) regardless of
+    whether ``p`` uses the legacy single-leaf or the grouped "eg{j}" layout."""
+    if "w1" in p:
+        return p["w1"], p["w2"], p.get("w3")
+    G = expert_group_count(cfg)
+    groups = [p[f"eg{j}"] for j in range(G)]
+    w1 = jnp.concatenate([g["w1"] for g in groups], axis=0)
+    w2 = jnp.concatenate([g["w2"] for g in groups], axis=0)
+    w3 = (jnp.concatenate([g["w3"] for g in groups], axis=0)
+          if cfg.gated_ffn else None)
+    return w1, w2, w3
 
 
 def _capacity(cfg, group_tokens: int) -> int:
@@ -71,13 +118,14 @@ def moe_ffn(cfg, p: dict, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     expert_in = jnp.einsum("gmec,gmd->egcd", dispatch.astype(cdtype), xg)
     expert_in = shard_hint(expert_in, "act_experts")
 
-    h = jnp.einsum("egcd,edf->egcf", expert_in, p["w1"])
+    w1, w2, w3 = _stacked_expert_weights(cfg, p)
+    h = jnp.einsum("egcd,edf->egcf", expert_in, w1)
     if cfg.gated_ffn:
         h = activation(cfg.activation, h) * jnp.einsum(
-            "egcd,edf->egcf", expert_in, p["w3"])
+            "egcd,edf->egcf", expert_in, w3)
     else:
         h = activation(cfg.activation, h)
-    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w2"])
+    expert_out = jnp.einsum("egcf,efd->egcd", h, w2)
     out = jnp.einsum("gmec,egcd->gmd", combine.astype(cdtype), expert_out)
 
     # load-balance auxiliary loss (Switch-style)

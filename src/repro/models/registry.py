@@ -2,11 +2,39 @@
 points per family, plus ``input_specs`` (ShapeDtypeStruct stand-ins, no
 allocation) for the multi-pod dry-run.
 
+Families (``ModelConfig.family``) and their forward implementations:
+
+  ``dense``   decoder-only transformer (GQA / MHA, optional vision frontend
+              via precomputed ``embeds``) — models/transformer.py
+  ``moe``     dense transformer whose FFN is a GShard capacity-based top-k
+              mixture of experts — models/moe.py; supports the grouped
+              ``cfg.expert_groups`` leaf layout for expert-wise ZO selection
+  ``ssm``     RWKV6 "Finch" attention-free recurrence — models/rwkv6.py;
+              dual forward modes ``cfg.scan_mode`` ∈ {"chunk",
+              "fused_recurrent"}
+  ``hybrid``  Hymba-style parallel attention + mamba-2 SSD heads —
+              models/transformer.py + models/ssm.py
+  ``encdec``  Whisper-style encoder-decoder with cross-attention —
+              models/encdec.py
+
 Step-function signatures (what dryrun.py lowers):
   train   loss_fn(params, batch)                        — inside a MeZO step
   prefill prefill_fn(params, batch)   -> (logits, cache-or-state)
   decode  decode_fn(params, batch)    -> (logits, cache-or-state)
           where batch carries {"token", "cache"/"state", "cache_pos", …}
+
+The registry also provides the per-family ZO defaults consumed by
+``launch/train --select auto`` and ``benchmarks/bench_quality.py``:
+
+>>> from repro.models.config import ModelConfig
+>>> moe_cfg = ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
+...                       n_heads=4, d_ff=96, vocab_size=256, n_experts=4,
+...                       top_k=2, expert_groups=2)
+>>> default_selection(moe_cfg)           # router frozen, 1 group per step
+'moe_experts(2)'
+>>> default_selection(moe_cfg.replace(family="dense", n_experts=0,
+...                                   expert_groups=0))
+'full'
 """
 from __future__ import annotations
 
@@ -16,43 +44,108 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import nondiff
 from repro.models import attention as attn_lib
 from repro.models import encdec, rwkv6, ssm as ssm_lib, transformer
 from repro.models.config import ModelConfig, ShapeCell
 
 _REGISTRY: dict[str, "Arch"] = {}
 
+#: Registry-selectable training objectives (``Bundle.loss_fn(objective=...)``):
+#: "ce" is token cross-entropy; "accuracy" / "f1" are the paper §3.3
+#: NON-DIFFERENTIABLE objectives (argmax-based, zero gradient a.e. — only ZO
+#: optimizers make progress on them; core/nondiff.py).
+OBJECTIVES = ("ce", "accuracy", "f1")
+
+#: Representative registry arch per family — the ``--model-family`` quickstart
+#: alias in launch/train and the per-family axis of bench_quality /
+#: test_zoo_conformance.
+FAMILY_ARCHS = {
+    "dense": "qwen2-0.5b",
+    "moe": "mixtral-8x7b",
+    "ssm": "rwkv6-3b",
+    "hybrid": "hymba-1.5b",
+    "encdec": "whisper-large-v3",
+}
+
+
+def default_selection(cfg: ModelConfig) -> str:
+    """Per-family default parameter-selection spec (`repro.select` syntax).
+
+    MoE: ``moe_experts(G)`` — the router is frozen bitwise and expert group
+    ``t % G`` is perturbed at step t (G = ``cfg.expert_groups``, 1 when the
+    legacy stacked layout is in use), so per-step ZO cost scales with
+    *active* expert parameters.  Every other family defaults to ``full``.
+    """
+    if cfg.n_experts:
+        from repro.models.moe import expert_group_count
+        return f"moe_experts({expert_group_count(cfg)})"
+    return "full"
+
 
 @dataclasses.dataclass(frozen=True)
 class Arch:
-    """A registered architecture: production config + reduced smoke config."""
+    """A registered architecture: production config + reduced smoke config.
+
+    ``cfg`` is the full-scale (paper/hf) shape; ``smoke_cfg`` is the
+    CPU-runnable reduction (2 layers, d_model 64) used by tests and
+    ``launch/train --smoke``.  Both carry the same ``family`` and therefore
+    the same forward implementation and ZO defaults."""
     arch_id: str
     cfg: ModelConfig
     smoke_cfg: ModelConfig
     notes: str = ""
 
+    def default_selection(self, smoke: bool = False) -> str:
+        """Canonical selection spec for this arch (see ``default_selection``)."""
+        return default_selection(self.smoke_cfg if smoke else self.cfg)
+
 
 def register(arch_id: str, cfg: ModelConfig, smoke_cfg: ModelConfig,
              notes: str = "") -> Arch:
+    """Register an architecture under ``arch_id`` (see repro/configs/*)."""
     arch = Arch(arch_id, cfg, smoke_cfg, notes)
     _REGISTRY[arch_id] = arch
     return arch
 
 
 def get(arch_id: str) -> Arch:
+    """Look up one registered arch by id (importing repro.configs on demand).
+
+    >>> get("rwkv6-3b").cfg.family
+    'ssm'
+    """
     if arch_id not in _REGISTRY:
         import repro.configs  # noqa: F401  (registers everything)
     return _REGISTRY[arch_id]
 
 
 def all_archs() -> dict[str, Arch]:
+    """All registered archs, keyed by arch_id (10 assigned + 4 paper archs).
+
+    >>> sorted({a.cfg.family for a in all_archs().values()})
+    ['dense', 'encdec', 'hybrid', 'moe', 'ssm']
+    """
     import repro.configs  # noqa: F401
     return dict(_REGISTRY)
 
 
+def family_arch(family: str, smoke: bool = True) -> ModelConfig:
+    """The representative config for an architecture family (see
+    ``FAMILY_ARCHS``); ``smoke=True`` returns the CPU-scale reduction."""
+    if family not in FAMILY_ARCHS:
+        raise ValueError(f"unknown family {family!r}; "
+                         f"available: {sorted(FAMILY_ARCHS)}")
+    arch = get(FAMILY_ARCHS[family])
+    return arch.smoke_cfg if smoke else arch.cfg
+
+
 # --------------------------------------------------------------------------- #
 class Bundle:
-    """Callable surface for one ModelConfig."""
+    """Callable surface for one ModelConfig: ``init`` / ``loss_fn`` /
+    ``prefill_fn`` / ``decode_fn`` / ``input_specs`` / ``make_batch``, with
+    the family dispatch hidden inside — every caller (train launcher, exec
+    plans, dry-run, benches, conformance tests) sees one uniform surface."""
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
@@ -68,23 +161,90 @@ class Bundle:
     def param_shapes(self) -> Any:
         return jax.eval_shape(self.init, jax.random.PRNGKey(0))
 
-    # ---- training loss (the function MeZO evaluates twice) -------------- #
-    def loss_fn(self) -> Callable:
+    # ---- ZO defaults ----------------------------------------------------- #
+    def default_selection(self) -> str:
+        """Per-family default ``repro.select`` spec (see module-level
+        ``default_selection``); the value behind ``--select auto``."""
+        return default_selection(self.cfg)
+
+    # ---- training objectives -------------------------------------------- #
+    def train_logits_fn(self) -> Callable:
+        """(params, batch) -> teacher-forcing logits (B, S, padded_vocab) —
+        the shared forward under every training objective."""
         cfg = self.cfg
         if cfg.family == "ssm":
+            def logits_fn(params, batch):
+                lg, _ = rwkv6.forward(cfg, params, tokens=batch["tokens"])
+                return lg
+        elif cfg.family == "encdec":
+            def logits_fn(params, batch):
+                return encdec.forward_train(cfg, params, batch["frames"],
+                                            batch["tokens"])
+        else:
+            def logits_fn(params, batch):
+                r = transformer.forward(cfg, params,
+                                        tokens=batch.get("tokens"),
+                                        embeds=batch.get("embeds"))
+                return r.logits
+        return logits_fn
+
+    # ---- training loss (the function MeZO evaluates twice) -------------- #
+    def loss_fn(self, objective: str = "ce") -> Callable:
+        """(params, batch) -> scalar minimization objective.
+
+        ``objective`` selects from ``OBJECTIVES``:
+
+        * ``"ce"`` — masked token cross-entropy (+ the MoE aux loss where the
+          family has one); the default, differentiable.
+        * ``"accuracy"`` — ``-accuracy`` of argmax predictions over
+          ``batch["labels"]`` (paper §3.3: zero gradient a.e.; only ZO
+          optimizers make progress).  Logits are sliced to the true
+          ``vocab_size`` so padded vocab columns can never win the argmax.
+        * ``"f1"`` — ``-token_f1`` between per-position argmax predictions
+          and labels (mask-respecting; the SQuAD metric at token level).
+        """
+        cfg = self.cfg
+        if objective == "ce":
+            if cfg.family == "ssm":
+                def loss(params, batch):
+                    logits, _ = rwkv6.forward(cfg, params,
+                                              tokens=batch["tokens"])
+                    return transformer.lm_loss(cfg, logits, batch["labels"],
+                                               batch.get("loss_mask"))
+                return loss
+            if cfg.family == "encdec":
+                def loss(params, batch):
+                    logits = encdec.forward_train(cfg, params, batch["frames"],
+                                                  batch["tokens"])
+                    return transformer.lm_loss(cfg, logits, batch["labels"],
+                                               batch.get("loss_mask"))
+                return loss
+            return transformer.train_loss_fn(cfg)
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"available: {OBJECTIVES}")
+        logits_fn = self.train_logits_fn()
+        V = cfg.vocab_size
+        if objective == "accuracy":
             def loss(params, batch):
-                logits, _ = rwkv6.forward(cfg, params, tokens=batch["tokens"])
-                return transformer.lm_loss(cfg, logits, batch["labels"],
-                                           batch.get("loss_mask"))
+                logits = logits_fn(params, batch)[..., :V]
+                return nondiff.negative_accuracy(logits, batch["labels"],
+                                                 batch.get("loss_mask"))
             return loss
-        if cfg.family == "encdec":
-            def loss(params, batch):
-                logits = encdec.forward_train(cfg, params, batch["frames"],
-                                              batch["tokens"])
-                return transformer.lm_loss(cfg, logits, batch["labels"],
-                                           batch.get("loss_mask"))
-            return loss
-        return transformer.train_loss_fn(cfg)
+
+        def loss(params, batch):      # objective == "f1"
+            logits = logits_fn(params, batch)[..., :V]
+            pred = jnp.argmax(logits, axis=-1)
+            gold = batch["labels"]
+            mask = batch.get("loss_mask")
+            if mask is not None:
+                # token id space is [0, V); -1 marks padded-out positions so
+                # legitimate id-0 tokens still count toward the F1 multiset
+                keep = mask > 0
+                pred = jnp.where(keep, pred, -1)
+                gold = jnp.where(keep, gold, -1)
+            return nondiff.negative_f1(pred, gold, pad_id=-1)
+        return loss
 
     # ---- serving ---------------------------------------------------------- #
     def prefill_fn(self) -> Callable:

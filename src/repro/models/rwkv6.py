@@ -114,8 +114,21 @@ def _tm_output(cfg, p: dict, x, xn, y, g):
 _CLIP = 50.0  # f32 overflow guard; never active in the valid decay regime
               # (rate ≤ e, chunk 16 → exponents ≤ 43.5)
 
+SCAN_MODES = ("chunk", "fused_recurrent")
 
-def time_mix(cfg, p: dict, x: jnp.ndarray, state: Optional[RWKVLayerState]):
+
+def _resolve_mode(cfg, mode: Optional[str]) -> str:
+    """fla-style dual-mode switch: ``"chunk"`` is the chunked-matmul WKV
+    (MXU-native), ``"fused_recurrent"`` the exact per-token recurrence.
+    ``mode=None`` falls back to ``cfg.scan_mode``; unknown modes refuse."""
+    m = mode or cfg.scan_mode
+    if m not in SCAN_MODES:
+        raise ValueError(f"unknown scan mode {m!r}; available: {SCAN_MODES}")
+    return m
+
+
+def time_mix(cfg, p: dict, x: jnp.ndarray, state: Optional[RWKVLayerState],
+             mode: Optional[str] = None):
     """WKV6 in chunked matmul form (no sequential while-loop).
 
     With lc = cumsum(log w) within a chunk, the strict-past contribution is
@@ -137,7 +150,9 @@ def time_mix(cfg, p: dict, x: jnp.ndarray, state: Optional[RWKVLayerState]):
     B, S, d = x.shape
     H, hd = cfg.n_heads, cfg.hd
     if S == 1 and state is not None:
-        return time_mix_decode(cfg, p, x, state)
+        return time_mix_decode(cfg, p, x, state)   # one-step: modes coincide
+    if _resolve_mode(cfg, mode) == "fused_recurrent":
+        return time_mix_ref(cfg, p, x, state)
     xn, r, k, v, g, logw, u, wkv0 = _tm_projections(cfg, p, x, state)
 
     C = min(cfg.scan_chunk, S)
@@ -242,8 +257,9 @@ def channel_mix(cfg, p: dict, x: jnp.ndarray, state: Optional[RWKVLayerState]):
 
 
 def rwkv_block(cfg, p: dict, x: jnp.ndarray,
-               state: Optional[RWKVLayerState] = None):
-    tm_out, (shift_tm, wkv) = time_mix(cfg, p["tm"], x, state)
+               state: Optional[RWKVLayerState] = None,
+               mode: Optional[str] = None):
+    tm_out, (shift_tm, wkv) = time_mix(cfg, p["tm"], x, state, mode=mode)
     x = x + tm_out
     cm_out, shift_cm = channel_mix(cfg, p["cm"], x, state)
     x = x + cm_out
@@ -279,10 +295,14 @@ def init_params(cfg, key: jax.Array) -> dict:
 
 
 def forward(cfg, params: dict, *, tokens: jnp.ndarray,
-            state: Optional[RWKVLayerState] = None):
+            state: Optional[RWKVLayerState] = None,
+            mode: Optional[str] = None):
     """tokens (B,S) -> (logits (B,S,V), new_state).  ``state`` is the
     stacked-over-layers recurrent state; pass it for decode (S may be 1),
-    None for training-from-scratch."""
+    None for training-from-scratch.  ``mode`` overrides ``cfg.scan_mode``
+    ("chunk" | "fused_recurrent"); both modes are parity-checked in
+    tests/test_zoo_conformance.py."""
+    mode = _resolve_mode(cfg, mode)
     x = jnp.take(params["embed"], tokens, axis=0)
     x = rmsnorm(x, params["ln_in_scale"])
     x = shard_hint(x, "act_btd")
@@ -290,7 +310,8 @@ def forward(cfg, params: dict, *, tokens: jnp.ndarray,
 
     def body(x, layer_in):
         lp, state_l = layer_in
-        x, new_state_l = rwkv_block(cfg, lp, x, state_l if use_state else None)
+        x, new_state_l = rwkv_block(cfg, lp, x, state_l if use_state else None,
+                                    mode=mode)
         return x, new_state_l
 
     xs = (params["layers"],

@@ -70,16 +70,29 @@ def _finish(cfg, p, u, y, x, z):
 # --------------------------------------------------------------------------- #
 # Chunked SSD path (training / prefill)
 # --------------------------------------------------------------------------- #
+SCAN_MODES = ("chunk", "fused_recurrent")
+
+
 def ssm_scan(cfg, p: dict, u: jnp.ndarray, state: Optional[jnp.ndarray] = None,
-             chunk: int = 0):
-    """u (B,S,d) -> (y (B,S,d), final_state (B,SH,hd,N))."""
+             chunk: int = 0, mode: Optional[str] = None):
+    """u (B,S,d) -> (y (B,S,d), final_state (B,SH,hd,N)).
+
+    ``mode`` (default ``cfg.scan_mode``) selects the fla-style dual modes:
+    "chunk" is the SSD chunked-matmul path, "fused_recurrent" the exact
+    per-token ``lax.scan`` recurrence (``ssm_scan_ref``); parity between them
+    is test-enforced (tests/test_zoo_conformance.py)."""
     B, S, d = u.shape
     SH, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
     chunk = chunk or cfg.scan_chunk
+    mode = mode or cfg.scan_mode
+    if mode not in SCAN_MODES:
+        raise ValueError(f"unknown scan mode {mode!r}; available: {SCAN_MODES}")
     if S == 1:
         if state is None:
             state = jnp.zeros((B, SH, hd, N), jnp.float32)
-        return ssm_decode_step(cfg, p, u, state)
+        return ssm_decode_step(cfg, p, u, state)   # one-step: modes coincide
+    if mode == "fused_recurrent":
+        return ssm_scan_ref(cfg, p, u, state)
     x, z, dt, bmat, cmat, a = _project(cfg, p, u)
     if state is None:
         state = jnp.zeros((B, SH, hd, N), jnp.float32)

@@ -18,18 +18,39 @@ schedule) threads through the whole stack:
   selection spec + phase offset; mismatched replay refuses
   (``SelectionMismatchError``).
 
->>> from repro import select, zo
+Spec strings are the canonical persistence form (checkpoint meta, the MZOL5
+ledger header, the ``--select`` launcher flag) and ``parse_selection``
+round-trips every built-in kind:
+
+>>> from repro import select
+>>> select.parse_selection("full").spec
+'full'
+>>> select.parse_selection("block_cyclic(4)").spec
+'block_cyclic(4)'
+>>> select.parse_selection("peft(lora)").spec
+'peft(lora)'
+>>> select.parse_selection("moe_experts(2)").spec   # MoE expert-wise cycling
+'moe_experts(2)'
+>>> select.parse_selection(select.leaves(r"\\['attn'\\]").spec).arg
+"\\\\['attn'\\\\]"
+
+Factory objects and spec strings are interchangeable at every estimator
+factory:
+
+>>> from repro import zo
 >>> opt = zo.mezo(lr=1e-6, selection=select.block_cyclic(4))
 >>> opt = zo.fzoo(lr=1e-6, selection="leaves(\\\\['attn'\\\\])")
 >>> opt = zo.mezo(lr=1e-3, selection=select.peft("lora"))   # merged-tree PEFT
+>>> opt = zo.mezo(lr=1e-6, selection=select.moe_experts(2)) # router frozen
 """
 from repro.select.base import (PEFT_MODES, SELECTION_KINDS, Selection,
                                SelectionMismatchError, block_cyclic,
                                check_replay_selection, full, leaves,
-                               parse_selection, peft, resolve_selection)
+                               moe_experts, parse_selection, peft,
+                               resolve_selection)
 
 __all__ = [
     "PEFT_MODES", "SELECTION_KINDS", "Selection", "SelectionMismatchError",
-    "block_cyclic", "check_replay_selection", "full", "leaves",
+    "block_cyclic", "check_replay_selection", "full", "leaves", "moe_experts",
     "parse_selection", "peft", "resolve_selection",
 ]

@@ -23,6 +23,9 @@ Built-in selections::
     leaves(pattern)          # regex over keystr leaf paths, static
     block_cyclic(k)          # leaf i active at phase i % k; phase = t % k
     peft("lora" | "prefix")  # the merged-tree PEFT subtree (models/peft.py)
+    moe_experts(G)           # MoE: router frozen, expert group t % G active,
+                             # every non-expert leaf active (architecture-aware
+                             # block_cyclic; needs cfg.expert_groups=G layout)
 
 Selections are plain hashable NamedTuples with a canonical string ``spec``
 (``parse_selection`` round-trips it) — the form recorded in checkpoint meta
@@ -44,8 +47,13 @@ from typing import NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 
-SELECTION_KINDS = ("full", "leaves", "block_cyclic", "peft")
+SELECTION_KINDS = ("full", "leaves", "block_cyclic", "peft", "moe_experts")
 PEFT_MODES = ("lora", "prefix")
+
+# grouped-MoE expert leaves: models/moe.py lays experts out as
+# params[...]['moe']['eg{j}'][...] when cfg.expert_groups > 1
+_EG_RE = re.compile(r"\['eg(\d+)'\]")
+_ROUTER_KEY = "['router']"
 
 
 class SelectionMismatchError(RuntimeError):
@@ -74,8 +82,8 @@ class Selection(NamedTuple):
         ``phase_offset`` is recorded separately (the ``sel_phase`` field)."""
         if self.kind == "full":
             return "full"
-        if self.kind == "block_cyclic":
-            return f"block_cyclic({self.n_phases})"
+        if self.kind in ("block_cyclic", "moe_experts"):
+            return f"{self.kind}({self.n_phases})"
         return f"{self.kind}({self.arg})"
 
     def is_full(self) -> bool:
@@ -125,6 +133,8 @@ class Selection(NamedTuple):
                 mask.append(bool(f) and (j % k) == ph)
                 j += 1 if f else 0
             mask = tuple(mask)
+        elif self.kind == "moe_experts":
+            mask = self._moe_experts_mask(flat, floating, phase)
         else:
             paths = [jax.tree_util.keystr(p) for p, _ in flat]
             if self.kind == "leaves":
@@ -143,6 +153,46 @@ class Selection(NamedTuple):
                     f"the parameter tree (paths: {paths[:4]}...); an empty "
                     "selection would silently train nothing")
         return mask
+
+    def _moe_experts_mask(self, flat, floating, phase) -> tuple:
+        """Expert-wise MoE mask: the router is ALWAYS frozen (bitwise — its
+        top-k dispatch decisions stay fixed within a step pair), expert-group
+        leaf "eg{j}" is active iff ``j % G == phase``, and every other
+        floating leaf (attention, norms, embeddings, head) is active every
+        step — so the per-step perturbed bytes scale with ACTIVE experts,
+        not total (ZO-cost ∝ active params, the MoE analogue of
+        ``block_cyclic``).  Requires the grouped parameter layout
+        (``cfg.expert_groups == G`` in models/moe.py) when G > 1."""
+        G = self.n_phases
+        ph = int(phase) % G
+        paths = [jax.tree_util.keystr(p) for p, _ in flat]
+        if not any(f and _ROUTER_KEY in s for f, s in zip(floating, paths)):
+            raise ValueError(
+                f"moe_experts({G}) over a tree with no ['router'] leaf — not "
+                "an MoE parameter tree (build the model with cfg.n_experts > "
+                "0, e.g. the mixtral-8x7b registry arch)")
+        mask, groups_seen = [], set()
+        for f, s in zip(floating, paths):
+            if not f or _ROUTER_KEY in s:
+                mask.append(False)
+                continue
+            m = _EG_RE.search(s)
+            if m is None:
+                mask.append(True)                  # non-expert leaf: always on
+            else:
+                j = int(m.group(1))
+                groups_seen.add(j)
+                mask.append(j % G == ph)
+        if G > 1:
+            covered = {j % G for j in groups_seen}
+            if covered != set(range(G)):
+                raise ValueError(
+                    f"moe_experts({G}) needs the grouped expert layout with "
+                    f"every phase owning a group, but the tree has expert "
+                    f"groups {sorted(groups_seen)} (phases covered: "
+                    f"{sorted(covered)} of {G}); build the model with "
+                    f"cfg.replace(expert_groups={G})")
+        return tuple(mask)
 
     # -- accounting (benchmarks / reporting) -------------------------------- #
     def selected_size(self, params, phase: int = 0) -> int:
@@ -192,6 +242,26 @@ def block_cyclic(k: int, phase_offset: int = 0) -> Selection:
                      phase_offset=int(phase_offset) % k)
 
 
+def moe_experts(groups: int, phase_offset: int = 0) -> Selection:
+    """Expert-wise MoE selection (ISSUE: ZO cost ∝ *active* params): step t
+    perturbs expert group ``(t + phase_offset) % groups`` plus all non-expert
+    leaves; the router is frozen bitwise every step so routing decisions are
+    identical at θ+εz and θ−εz.  ``groups > 1`` requires the grouped
+    parameter layout (``cfg.replace(expert_groups=groups)``); ``groups == 1``
+    works on the legacy stacked layout and just freezes the router.
+
+    >>> moe_experts(4).spec
+    'moe_experts(4)'
+    >>> parse_selection("moe_experts(4)") == moe_experts(4)
+    True
+    """
+    g = int(groups)
+    if g < 1:
+        raise ValueError(f"moe_experts needs groups >= 1, got {g}")
+    return Selection("moe_experts", n_phases=g,
+                     phase_offset=int(phase_offset) % g)
+
+
 def peft(mode: str) -> Selection:
     """The merged-tree PEFT selection: perturb only the ``mode`` subtree of a
     ``models.peft.peft_params(base, tree, mode)`` merged tree — LoRA / prefix
@@ -210,7 +280,17 @@ _SPEC_RE = re.compile(r"^(\w+)\((.*)\)$")
 def parse_selection(spec: str, phase_offset: int = 0) -> Selection:
     """Parse a canonical spec string (``Selection.spec`` round-trips):
     ``"full"``, ``"leaves(<regex>)"``, ``"block_cyclic(<k>)"``,
-    ``"peft(lora|prefix)"``."""
+    ``"peft(lora|prefix)"``, ``"moe_experts(<G>)"``.
+
+    >>> parse_selection("block_cyclic(4)").spec
+    'block_cyclic(4)'
+    >>> parse_selection("leaves(\\\\['attn'\\\\])").spec
+    "leaves(\\\\['attn'\\\\])"
+    >>> parse_selection("moe_experts(2)").n_phases
+    2
+    >>> parse_selection("full").is_full()
+    True
+    """
     spec = spec.strip()
     if spec == "full":
         return full()
@@ -218,7 +298,8 @@ def parse_selection(spec: str, phase_offset: int = 0) -> Selection:
     if m is None:
         raise ValueError(
             f"unparseable selection spec {spec!r}; expected one of: full, "
-            "leaves(<regex>), block_cyclic(<k>), peft(lora|prefix)")
+            "leaves(<regex>), block_cyclic(<k>), peft(lora|prefix), "
+            "moe_experts(<G>)")
     kind, arg = m.group(1), m.group(2)
     if kind == "leaves":
         return leaves(arg)
@@ -226,6 +307,8 @@ def parse_selection(spec: str, phase_offset: int = 0) -> Selection:
         return block_cyclic(int(arg), phase_offset=phase_offset)
     if kind == "peft":
         return peft(arg)
+    if kind == "moe_experts":
+        return moe_experts(int(arg), phase_offset=phase_offset)
     raise ValueError(f"unknown selection kind {kind!r}; "
                      f"available: {SELECTION_KINDS}")
 

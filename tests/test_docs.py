@@ -1,0 +1,114 @@
+"""Docs quality gates: markdown link/anchor/file-reference checking over
+README + docs/, and the registry/selection docstring examples run as
+doctests.  Stdlib only — this is the CI docs-check job."""
+import doctest
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN = re.compile(r"`([^`\n]+)`")
+# an inline-code repo path, optionally with a :line suffix
+_PATH_REF = re.compile(
+    r"^(?P<path>(?:src|tests|benchmarks|docs|examples)/[\w./\-]+"
+    r"\.(?:py|md|yml|yaml|json|toml))(?::(?P<line>\d+))?$")
+# runtime artifacts: referenced in prose, produced by benches, gitignored
+_RUNTIME_PREFIXES = ("results/",)
+
+
+def _strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks — their contents aren't doc links."""
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, drop punctuation,
+    spaces to hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip())
+    h = h.lower()
+    h = "".join(c for c in h if c.isalnum() or c in " -")
+    return h.replace(" ", "-")
+
+
+def _anchors(md_path: pathlib.Path) -> set:
+    out = set()
+    for line in _strip_code_blocks(md_path.read_text()).splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            out.add(_slugify(m.group(1)))
+    return out
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_markdown_links_resolve(doc):
+    """Every relative link in README/docs points at an existing file, and
+    every #anchor at a real heading of its target document."""
+    assert doc.exists(), doc
+    text = _strip_code_blocks(doc.read_text())
+    problems = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue                      # external: not checked offline
+        if "actions/workflows" in target:
+            continue                      # CI badge: resolves on the forge
+        path_part, _, anchor = target.partition("#")
+        base = (doc.parent / path_part).resolve() if path_part else doc
+        if not base.exists():
+            problems.append(f"{target}: missing file {path_part}")
+            continue
+        if anchor and base.suffix == ".md" and anchor not in _anchors(base):
+            problems.append(f"{target}: no heading for #{anchor} "
+                            f"(have {sorted(_anchors(base))})")
+    assert not problems, f"{doc.name}:\n" + "\n".join(problems)
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_inline_file_references_exist(doc):
+    """Inline-code repo paths (``src/...py``, ``tests/...py:123``) must point
+    at real files, and a :line suffix at a real line — stale references
+    fail the build instead of rotting."""
+    problems = []
+    for span in _CODE_SPAN.findall(doc.read_text()):
+        if span.startswith(_RUNTIME_PREFIXES):
+            continue                      # bench artifacts, gitignored
+        m = _PATH_REF.match(span)
+        if not m:
+            continue
+        p = ROOT / m.group("path")
+        if not p.exists():
+            problems.append(f"`{span}`: no such file")
+        elif m.group("line"):
+            n_lines = len(p.read_text().splitlines())
+            if int(m.group("line")) > n_lines:
+                problems.append(f"`{span}`: file has only {n_lines} lines")
+    assert not problems, f"{doc.name}:\n" + "\n".join(problems)
+
+
+def test_readme_model_zoo_covers_all_registry_families():
+    """The README support matrix must keep a row per registry family."""
+    from repro.models import all_archs
+    text = (ROOT / "README.md").read_text()
+    zoo = text[text.index("## Model zoo"):]
+    for family in sorted({a.cfg.family for a in all_archs().values()}):
+        assert re.search(rf"^\|\s*`{family}`", zoo, re.M), \
+            f"README model-zoo matrix is missing family {family!r}"
+
+
+# --------------------------------------------------------------------------- #
+# docstring examples as doctests (registry + selection spec language)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("modname", [
+    "repro.models.registry",
+    "repro.select",
+    "repro.select.base",
+])
+def test_docstring_examples(modname):
+    import importlib
+    mod = importlib.import_module(modname)
+    res = doctest.testmod(mod, verbose=False)
+    assert res.attempted > 0, f"{modname} lost its doctest examples"
+    assert res.failed == 0, f"{modname}: {res.failed} doctest failures"

@@ -1,12 +1,19 @@
-"""Non-differentiable objectives (paper §3.3): metric correctness and that
-MeZO actually optimizes them (backprop gets zero gradient)."""
+"""Non-differentiable objectives (paper §3.3): metric correctness, that
+MeZO actually optimizes them (backprop gets zero gradient), and the
+registry-selectable objective surface (``Bundle.loss_fn(objective=...)``)
+training under both estimators with a ledger round-trip."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MeZO, MeZOConfig
+from repro import zo
+from repro.core import MeZO, MeZOConfig, TrajectoryLedger
 from repro.core.nondiff import negative_accuracy, token_f1
+from repro.core.trajectory import replay
+from repro.models import OBJECTIVES, bundle
+from repro.models.config import ModelConfig
+from repro.tree_utils import tree_max_abs_diff
 
 
 def test_negative_accuracy():
@@ -67,3 +74,72 @@ def test_backprop_gets_zero_gradient_mezo_does_not():
         p, state, m = step(p, state, None)
     final_acc = -float(objective(p, None))
     assert final_acc > 0.9, final_acc                    # MeZO: optimizes it
+
+
+# --------------------------------------------------------------------------- #
+# the registry objective surface: Bundle.loss_fn(objective=...)
+# --------------------------------------------------------------------------- #
+def _tiny():
+    cfg = ModelConfig(name="nondiff-tiny", family="dense", n_layers=1,
+                      d_model=32, n_heads=2, d_ff=64, vocab_size=16)
+    b = bundle(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    batch = b.make_batch(jax.random.PRNGKey(1), 4, 8)
+    return b, params, batch
+
+
+@pytest.mark.parametrize("estimator,lr", [("spsa", 3e-2), ("fzoo", 1e-1)])
+def test_accuracy_objective_trains_via_registry(estimator, lr):
+    """The full path a user takes (``--objective accuracy``): the registry
+    loss under a real model forward, optimized by both estimators on the xla
+    backend.  Accuracy starts near chance (1/16) and at least doubles."""
+    b, params, batch = _tiny()
+    loss_fn = b.loss_fn(objective="accuracy")
+    opt = (zo.mezo(lr=lr, eps=1e-1) if estimator == "spsa"
+           else zo.fzoo(lr=lr, eps=1e-1, batch_seeds=4))
+    p, state = params, opt.init(params, seed=0)
+    step = jax.jit(opt.step_fn(loss_fn))
+    first = None
+    for _ in range(300):
+        p, state, m = step(p, state, batch)
+        if first is None:
+            first = float(m["loss"])
+    final = float(m["loss"])
+    assert final < first, (first, final)          # -accuracy decreases
+    # measured: spsa 0.016 -> 0.219, fzoo 0.031 -> 0.125 at these hps
+    assert -final >= 2.0 * -first, (first, final)
+
+
+def test_nondiff_objective_ledger_round_trips():
+    """A run on the accuracy objective is seed-replayable like any other:
+    the (seed, projected_grad) ledger reproduces the trained params."""
+    b, params, batch = _tiny()
+    loss_fn = b.loss_fn(objective="accuracy")
+    opt = zo.mezo(lr=3e-2, eps=1e-1)
+    led = TrajectoryLedger(base_seed=0, grad_dtype="float32",
+                           backend=opt.backend_name)
+    p, state = params, opt.init(params, seed=0)
+    step = jax.jit(opt.step_fn(loss_fn))
+    for i in range(5):
+        p, state, m = step(p, state, batch)
+        led.append(i, float(m["projected_grad"]), float(m["lr"]))
+    led2 = TrajectoryLedger.from_bytes(led.to_bytes())
+    rec = replay(params, led2, zo.mezo(lr=3e-2, eps=1e-1))
+    assert tree_max_abs_diff(rec, p) < 2e-6
+    rec2 = replay(params, led2, zo.mezo(lr=3e-2, eps=1e-1))
+    assert tree_max_abs_diff(rec, rec2) == 0.0
+
+
+def test_f1_objective_is_registry_selectable():
+    b, params, batch = _tiny()
+    assert "f1" in OBJECTIVES
+    loss_fn = b.loss_fn(objective="f1")
+    v = float(loss_fn(params, batch))
+    assert -1.0 <= v <= 0.0                       # -F1 ∈ [-1, 0]
+    # one ZO step moves the params (the estimator sees a signal)
+    opt = zo.mezo(lr=3e-2, eps=1e-1)
+    p, _, _ = jax.jit(opt.step_fn(loss_fn))(params, opt.init(params, seed=0),
+                                            batch)
+    assert tree_max_abs_diff(p, params) > 0.0
+    with pytest.raises(ValueError, match="objective"):
+        b.loss_fn(objective="rouge")
