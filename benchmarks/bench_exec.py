@@ -51,6 +51,18 @@ GROUPS = (1, 2, 4)
 BATCH = 8 if is_smoke() else 32
 SEQ = 32 if is_smoke() else 64
 
+# Tracked baseline: seed_parallel(4) step wall-clock as a multiple of the
+# local plan on the CPU mesh.  6.6x was the pre-fused chain (n sequential
+# rank-1 applications per step); 2.90x is where the fused ``affine_many``
+# group-update chain landed it.  The measured ratio is recorded NEXT TO this
+# trajectory in the JSON artifact every run, so a regression on the mesh
+# path (e.g. an update chain falling off the fused path) shows up in the
+# per-commit trail without an environment-sensitive hard assert.
+SP4_VS_LOCAL_BASELINE = {
+    "pre_fused_chain": 6.6,       # n sequential rank-1 applications
+    "fused_affine_many": 2.90,    # one fused multi-seed application
+}
+
 
 def _mem_stats(compiled) -> dict:
     """Executable-level memory analysis (None-safe: some backends return
@@ -134,11 +146,22 @@ def run() -> None:
         return t_plain
 
     t_local = one_plan("local_spsa", zexec.local(), 1, 0)
+    sp4_vs_local = None
     for n in GROUPS:
         t_sp = one_plan(f"seed_parallel_{n}", zexec.seed_parallel(n), n,
                         8 * n)
         records[-1]["vs_local"] = t_sp / t_local
         note(f"seed_parallel({n}): {t_sp / t_local:.2f}x local")
+        if n == 4:
+            sp4_vs_local = t_sp / t_local
+    if sp4_vs_local is not None:
+        emit("exec/sp4_overhead_vs_local", 0.0,
+             f"measured={sp4_vs_local:.2f}x;"
+             f"baseline={SP4_VS_LOCAL_BASELINE['fused_affine_many']:.2f}x")
+        note(f"sp(4) mesh overhead: {sp4_vs_local:.2f}x local (trajectory "
+             f"{SP4_VS_LOCAL_BASELINE['pre_fused_chain']:.1f}x pre-fused -> "
+             f"{SP4_VS_LOCAL_BASELINE['fused_affine_many']:.2f}x fused "
+             f"baseline)")
 
     don = [r for r in records if r["memory"] and r["memory_donated"]]
     for r in don:
@@ -161,6 +184,8 @@ def run() -> None:
                    "param_bytes": param_bytes,
                    "batch": BATCH, "seq": SEQ,
                    "smoke": is_smoke(), "records": records,
+                   "sp4_vs_local": sp4_vs_local,
+                   "sp4_vs_local_baseline": SP4_VS_LOCAL_BASELINE,
                    "dp_gradient_allreduce_bytes": int(dp_grad_bytes)},
                   f, indent=2)
     note(f"wrote {OUT_PATH}")

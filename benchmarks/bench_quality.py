@@ -64,10 +64,10 @@ def _family_cfg(fam):
 
 
 def _run_family(fam: str, steps: int, batch: int, seq: int,
-                objective: str = "ce") -> dict:
+                objective: str = "ce", selection=None) -> dict:
     cfg = _family_cfg(fam)
     b = bundle(cfg)
-    sel = b.default_selection()
+    sel = b.default_selection() if selection is None else selection
     hp = FAMILY_HP[fam]
     opt = zo.mezo(lr=hp["lr"], eps=hp["eps"],
                   selection=None if sel == "full" else sel)
@@ -129,10 +129,38 @@ def _family_quality() -> dict:
              f"loss {rec['loss_first']:.3f}->{rec['loss_final']:.3f} "
              f"({rec['reduction_pct']:.2f}% red, 99.5% at step "
              f"{rec['steps_to_995pct']})")
+    out["selection"] = _selection_quality(steps, batch, seq)
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=1)
     note(f"wrote {OUT_PATH}")
+    return out
+
+
+# Sparse-perturbation quality comparison (Wang et al., 2024 / ISSUE 9): the
+# same dense run under leaf-wise block_cyclic(k) and sub-leaf rows(block,k)
+# schedules vs the full selection.  Every variant runs the SAME step count —
+# a ZO step is 2 forwards regardless of selection, so equal steps is equal
+# forward budget; what changes is perturbed bytes/step (k× fewer) and the
+# estimator's perturbed subspace per step.
+SELECTION_VARIANTS = ("full", "block_cyclic(4)", "rows(block=16,k=4)")
+
+
+def _selection_quality(steps: int, batch: int, seq: int) -> dict:
+    out = {}
+    for spec in SELECTION_VARIANTS:
+        rec = _run_family("dense", steps, batch, seq, selection=spec)
+        out[spec] = {k: rec[k] for k in
+                     ("steps", "us_per_step", "loss_first", "loss_final",
+                      "loss_min", "reduction_pct", "steps_to_995pct",
+                      "cycle_means")}
+        emit(f"quality/select_{spec}", rec["us_per_step"],
+             f"{rec['loss_first']:.3f}->{rec['loss_final']:.3f}"
+             f"@{rec['steps_to_995pct']}")
+        note(f"selection {spec}: loss {rec['loss_first']:.3f}->"
+             f"{rec['loss_final']:.3f} ({rec['reduction_pct']:.2f}% red, "
+             f"99.5% at step {rec['steps_to_995pct']}) at equal forward "
+             f"budget ({rec['steps']} steps)")
     return out
 
 

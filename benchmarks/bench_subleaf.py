@@ -1,0 +1,151 @@
+"""Sub-leaf tile skipping (ISSUE 9): perturbed bytes/step and wallclock of
+``rows(block=R, k=K)`` vs ``full`` on a large-embedding config, both backends.
+
+The claim under test: a rows selection's cost scales with the selected
+FRACTION of every tensor, not with the leaf set —
+
+* **bytes/step**: ``Selection.selected_bytes`` (the per-step perturb
+  read-modify-write traffic) must be ≤ 0.30× full at 25 % rows (asserted);
+* **wallclock**: the pallas tile-skip launch (selected tiles only — no z
+  generation, no reads, no writes for the rest) must beat a *masked-multiply
+  strawman* — full-grid generation followed by ``where(mask)`` — strictly,
+  at 25 % selection (asserted).  The strawman is what a selection layer
+  without kernel support would do: same output, ~4× the generated z and
+  touched bytes.
+
+Block size is chosen tile-aligned (R rows × 512 cols = the kernel's 131072-
+element tile) so every unselected tile is skipped whole — the geometry the
+trace-time skip is designed for.  Results land in
+``results/bench_subleaf.json`` (asserted present by CI bench-smoke).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, is_smoke, note, time_fn
+from repro import select
+from repro.perturb import StreamRef, get_backend
+
+OUT_PATH = os.path.join("results", "bench_subleaf.json")
+
+BLOCK_ROWS = 256          # × 512-wide rows = exactly one kernel tile
+BYTES_RATIO_MAX = 0.30    # acceptance: bytes/step at 25 % rows ≤ 0.30× full
+
+
+def _params(smoke: bool) -> dict:
+    # one big embedding (the sub-leaf motivation: a single leaf holding most
+    # of the bytes, where leaf-wise selection can't help) + a small head
+    n_rows = 4096 if smoke else 16384            # 16 / 64 kernel tiles
+    key = jax.random.PRNGKey(0)
+    return {"emb": jax.random.normal(key, (n_rows, 512), jnp.float32),
+            "head": jnp.ones((512,), jnp.float32)}
+
+
+def _total_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def _perturb_fn(backend: str, sel):
+    be = get_backend(backend)
+    ref = StreamRef(jax.random.PRNGKey(7))
+    if sel is not None:
+        ref = ref.with_selection(sel, 0)
+
+    @jax.jit
+    def step(p):
+        return be.perturb(p, ref, 1e-3)
+
+    return step
+
+
+def _strawman_fn(backend: str, sel, params):
+    """Masked multiply: FULL z generation + ``where(selected, θ+εz, θ)`` —
+    the same output as the tile-skip path, none of the savings."""
+    be = get_backend(backend)
+    ref = StreamRef(jax.random.PRNGKey(7))
+    masks = []
+    for p in jax.tree_util.tree_leaves(params):
+        rb = sel.block_mask(p, 0)
+        masks.append(jnp.ones(p.shape, bool) if rb is None else
+                     jnp.asarray(np.asarray(
+                         rb.element_mask(np.arange(p.size)),
+                         dtype=bool)).reshape(p.shape))
+    masks = tuple(masks)
+
+    @jax.jit
+    def step(p):
+        full = be.perturb(p, ref, 1e-3)          # whole-grid generation
+        flat_p = jax.tree_util.tree_leaves(p)
+        flat_f = jax.tree_util.tree_leaves(full)
+        out = [jnp.where(m, f, x)
+               for m, f, x in zip(masks, flat_f, flat_p)]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(p), out)
+
+    return step
+
+
+def run() -> None:
+    smoke = is_smoke()
+    params = _params(smoke)
+    total = _total_bytes(params)
+    sel_25 = select.rows(block=BLOCK_ROWS, k=4)      # 25 % of blocks/step
+    sel_6 = select.rows(block=BLOCK_ROWS, k=16)      # 6.25 %
+    variants = {"full": None, "rows_25pct": sel_25, "rows_6_25pct": sel_6}
+
+    res = {"smoke": smoke,
+           "emb_shape": list(params["emb"].shape),
+           "total_bytes": total,
+           "bytes_per_step": {}, "bytes_ratio": {}, "wallclock_us": {}}
+
+    for name, sel in variants.items():
+        b = total if sel is None else sel.selected_bytes(params, phase=0)
+        res["bytes_per_step"][name] = b
+        res["bytes_ratio"][name] = b / total
+        note(f"{name}: {b/1e6:.2f} MB perturbed/step "
+             f"({b/total:.1%} of {total/1e6:.1f} MB)")
+
+    for backend in ("pallas-interpret", "xla"):
+        times = {}
+        for name, sel in variants.items():
+            times[name] = time_fn(_perturb_fn(backend, sel), params)
+            emit(f"subleaf/{backend}_{name}", times[name],
+                 f"{res['bytes_per_step'][name]/1e6:.2f}MB")
+        times["strawman_25pct"] = time_fn(
+            _strawman_fn(backend, sel_25, params), params)
+        emit(f"subleaf/{backend}_strawman_25pct", times["strawman_25pct"],
+             "full-gen+mask")
+        res["wallclock_us"][backend] = times
+        note(f"{backend}: full {times['full']:.0f}us, rows(25%) "
+             f"{times['rows_25pct']:.0f}us, rows(6.25%) "
+             f"{times['rows_6_25pct']:.0f}us, strawman(25%) "
+             f"{times['strawman_25pct']:.0f}us")
+
+    # acceptance: perturbed bytes ≤ 0.30× at 25 % rows
+    ratio = res["bytes_ratio"]["rows_25pct"]
+    assert ratio <= BYTES_RATIO_MAX, \
+        f"25% rows perturbs {ratio:.2%} of bytes (> {BYTES_RATIO_MAX:.0%})"
+    # acceptance: the pallas tile-skip beats the masked-multiply strawman
+    pk = res["wallclock_us"]["pallas-interpret"]
+    speedup = pk["strawman_25pct"] / pk["rows_25pct"]
+    res["tile_skip_vs_strawman_speedup_25pct"] = speedup
+    emit("subleaf/tile_skip_speedup_vs_strawman", pk["rows_25pct"],
+         f"{speedup:.2f}x")
+    assert pk["rows_25pct"] < pk["strawman_25pct"], \
+        (f"tile-skip ({pk['rows_25pct']:.0f}us) not faster than the "
+         f"masked-multiply strawman ({pk['strawman_25pct']:.0f}us)")
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    note(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    run()

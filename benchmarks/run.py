@@ -23,6 +23,7 @@ BENCHES = [
     ("storage", "benchmarks.bench_storage"),
     ("perturb", "benchmarks.bench_perturb"),
     ("select", "benchmarks.bench_select"),
+    ("subleaf", "benchmarks.bench_subleaf"),
     ("exec", "benchmarks.bench_exec"),
     ("kernel_multi", "benchmarks.bench_kernel_multi"),
     ("wallclock", "benchmarks.bench_wallclock"),
@@ -38,7 +39,8 @@ BENCHES = [
 
 # CI-per-commit subset: benches that finish in seconds at smoke scale and
 # leave results/*.json artifacts (the perf trajectory per commit).
-SMOKE_BENCHES = "storage,perturb,select,exec,kernel_multi,estimators,serve,quality"
+SMOKE_BENCHES = ("storage,perturb,select,subleaf,exec,kernel_multi,"
+                 "estimators,serve,quality")
 
 
 def main() -> None:

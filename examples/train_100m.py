@@ -12,9 +12,11 @@ import argparse
 import os
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro import exec as zexec
-from repro import zo
+from repro import select, zo
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import TrajectoryLedger
 from repro.data.pipeline import DataSpec, Pipeline
@@ -22,6 +24,38 @@ from repro.models import bundle
 from repro.models.config import ModelConfig
 from repro.train.loop import HeartbeatMonitor, train
 from repro.tree_utils import tree_size
+
+
+def _assert_frozen_rows(loss_fn, params, opt, sel, batch):
+    """One probe step before training: everything the phase-0 selection does
+    NOT cover must be bitwise-frozen (no perturbation residue, no update, no
+    decay) — the frozen-row guarantee sub-leaf ``rows(...)`` selections make.
+    Cheap (one jitted step on the initial params) and loud: a backend that
+    wrote an unselected band would abort the run here, not corrupt it."""
+    state = opt.init(params, seed=0)
+    p1, _, _ = jax.jit(opt.step_fn(loss_fn))(params, state, batch)
+    leaf_mask = sel.leaf_mask(params, 0)
+    frozen = checked = 0
+    for i, ((path, before), after) in enumerate(zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_leaves(p1))):
+        if not jnp.issubdtype(before.dtype, jnp.floating):
+            continue
+        b = np.asarray(before).reshape(-1)
+        a = np.asarray(after).reshape(-1)
+        if not leaf_mask[i]:                 # whole leaf inactive at phase 0
+            m = np.zeros(b.size, bool)
+        else:
+            rb = sel.block_mask(before, phase=0)
+            m = (np.ones(b.size, bool) if rb is None else
+                 np.asarray(rb.element_mask(np.arange(b.size))).astype(bool))
+        checked += 1
+        if (~m).any():
+            assert (a[~m] == b[~m]).all(), \
+                f"unselected rows of {jax.tree_util.keystr(path)} moved"
+            frozen += int((~m).sum())
+    print(f"frozen-row probe: {frozen} unselected elements bitwise-frozen "
+          f"across {checked} leaves at phase 0")
 
 
 def main():
@@ -39,6 +73,12 @@ def main():
                          "at the step's center and averages the directions")
     ap.add_argument("--n-groups", type=int, default=1,
                     help="seed groups per step for --exec-plan seed_parallel")
+    ap.add_argument("--select", default=None,
+                    help="parameter selection spec (repro.select), e.g. "
+                         "'block_cyclic(4)' or 'rows(block=256,k=4)' — "
+                         "rows(...) perturbs ~1/k of every tensor per step "
+                         "(sub-leaf tile skipping); recorded in the ledger "
+                         "(MZOL5) and checkpoint meta")
     args = ap.parse_args()
 
     if args.smoke:
@@ -58,7 +98,15 @@ def main():
 
     pipe = Pipeline(DataSpec("lm", batch=args.batch, seq=args.seq,
                              vocab=cfg.vocab_size, seed=0))
-    opt = zo.mezo(lr=1e-5, eps=1e-3)
+    sel = select.resolve_selection(args.select)
+    opt = zo.mezo(lr=1e-5, eps=1e-3, selection=sel)
+    if sel is not None:
+        bytes_ph0 = sel.selected_bytes(params, phase=0)
+        total = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree_util.tree_leaves(params))
+        print(f"selection {sel.spec}: {bytes_ph0/1e6:.2f} MB perturbed at "
+              f"phase 0 ({bytes_ph0/total:.1%} of {total/1e6:.1f} MB)")
+        _assert_frozen_rows(b.loss_fn(), params, opt, sel, pipe.batch(0))
     if args.exec_plan == "seed_parallel":
         # the engine lowers the same optimizer onto the sliced-batch plan;
         # checkpoints/ledger record (exec_plan, n_groups) and a resume under

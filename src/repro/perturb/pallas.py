@@ -46,6 +46,10 @@ from repro.kernels.zo_fused.kernel import (BLOCK_COLS, BLOCK_ROWS,
                                            zo_affine_2d, zo_affine_2d_batched)
 from repro.kernels.zo_fused.multi import (zo_affine_chain_2d,
                                           zo_affine_multi_2d, zo_sqnorm_2d)
+from repro.kernels.zo_fused.rows import (tile_plan, zo_affine_2d_rows,
+                                         zo_affine_chain_2d_rows,
+                                         zo_affine_multi_2d_rows,
+                                         zo_sqnorm_2d_rows)
 from repro.perturb.base import PerturbBackend, per_stream_scales
 from repro.perturb.stream import _LEAF_STRIDE, StreamRef
 from repro.tree_utils import PyTree, tree_map_with_index
@@ -64,60 +68,116 @@ def _blocked_view(x: jnp.ndarray) -> tuple:
     return jnp.pad(x.reshape(-1), (0, n_pad - n)).reshape(-1, BLOCK_COLS), n
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
+def _rows_plan(n: int, blocks) -> Optional[tuple]:
+    """Static tile plan ``(sel_tiles, masked)`` of a *partial* sub-leaf
+    ``RowBlocks``, or ``None`` for whole-leaf semantics (no plan, or every
+    block selected — ``rows(..., k=1)`` must route through the unmodified
+    full kernel so it stays bitwise ≡ ``full``)."""
+    if blocks is None or blocks.all_selected:
+        return None
+    sel, pure = tile_plan(n, blocks.block_elems, blocks.k, blocks.phase)
+    return sel, not pure
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "dist", "blocks"))
 def zo_affine(x: jnp.ndarray, seed, a, b, interpret: bool = True,
-              dist: str = "gaussian") -> jnp.ndarray:
+              dist: str = "gaussian", blocks=None) -> jnp.ndarray:
     """y = a·x + b·z(seed) for an arbitrary-shape leaf (blocked view, see
-    ``_blocked_view``)."""
+    ``_blocked_view``).  A partial ``blocks`` plan (``repro.select.RowBlocks``,
+    static) launches only the tiles covering selected row-blocks — unselected
+    rows are never read, never written, and generate no z."""
     flat2d, n = _blocked_view(x)
-    y = zo_affine_2d(flat2d, jnp.asarray(seed, jnp.int32), a, b,
-                     interpret=interpret, dist=dist)
+    plan = _rows_plan(n, blocks)
+    if plan is None:
+        y = zo_affine_2d(flat2d, jnp.asarray(seed, jnp.int32), a, b,
+                         interpret=interpret, dist=dist)
+    else:
+        sel, masked = plan
+        y = zo_affine_2d_rows(flat2d, jnp.asarray(seed, jnp.int32), a, b,
+                              sel, blocks.block_elems, blocks.k,
+                              blocks.phase, masked, interpret=interpret,
+                              dist=dist)
     return y.reshape(-1)[:n].reshape(x.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
+@functools.partial(jax.jit, static_argnames=("interpret", "dist", "blocks"))
 def zo_affine_batched(x: jnp.ndarray, seeds: jnp.ndarray, a, b,
                       interpret: bool = True,
-                      dist: str = "gaussian") -> jnp.ndarray:
+                      dist: str = "gaussian", blocks=None) -> jnp.ndarray:
     """y[j] = a·x + b·z(seeds[j]) for an arbitrary-shape leaf, one launch.
 
     Same blocked/padded view as :func:`zo_affine`; the kernel's batch grid
     axis generates one z-stream per seed against each resident x tile, so the
     result's batch slices are bitwise-equal to B separate ``zo_affine`` calls
-    while x is read once per tile instead of B times.
+    while x is read once per tile instead of B times.  A partial ``blocks``
+    plan routes through the multi-rows kernel with the shared (a, b)
+    broadcast per stream — the per-tile arithmetic is the same
+    ``_tile_affine`` on the same scalar values, so batch slices stay
+    bitwise-equal to rows singles.
     """
     flat2d, n = _blocked_view(x)
-    y = zo_affine_2d_batched(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
-                             interpret=interpret, dist=dist)
+    plan = _rows_plan(n, blocks)
+    seeds = jnp.asarray(seeds, jnp.int32)
+    if plan is None:
+        y = zo_affine_2d_batched(flat2d, seeds, a, b,
+                                 interpret=interpret, dist=dist)
+    else:
+        sel, masked = plan
+        (batch,) = seeds.shape
+        a_vec = jnp.broadcast_to(jnp.asarray(a, jnp.float32), (batch,))
+        b_vec = jnp.broadcast_to(jnp.asarray(b, jnp.float32), (batch,))
+        y = zo_affine_multi_2d_rows(flat2d, seeds, a_vec, b_vec, sel,
+                                    blocks.block_elems, blocks.k,
+                                    blocks.phase, masked,
+                                    interpret=interpret, dist=dist)
     batch = y.shape[0]
     return y.reshape(batch, -1)[:, :n].reshape((batch,) + x.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
+@functools.partial(jax.jit, static_argnames=("interpret", "dist", "blocks"))
 def zo_affine_multi(x: jnp.ndarray, seeds: jnp.ndarray, a: jnp.ndarray,
                     b: jnp.ndarray, interpret: bool = True,
-                    dist: str = "gaussian") -> jnp.ndarray:
+                    dist: str = "gaussian", blocks=None) -> jnp.ndarray:
     """y[j] = a_j·x + b_j·z(seeds[j]) for an arbitrary-shape leaf, one
     launch — :func:`zo_affine_batched` generalized to per-stream affine
     coefficients (the fused-multi fan-out kernel).  Batch slices are
-    bitwise-equal to per-stream ``zo_affine`` singles."""
+    bitwise-equal to per-stream ``zo_affine`` singles, sub-leaf plans
+    included."""
     flat2d, n = _blocked_view(x)
-    y = zo_affine_multi_2d(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
-                           interpret=interpret, dist=dist)
+    plan = _rows_plan(n, blocks)
+    if plan is None:
+        y = zo_affine_multi_2d(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
+                               interpret=interpret, dist=dist)
+    else:
+        sel, masked = plan
+        y = zo_affine_multi_2d_rows(flat2d, jnp.asarray(seeds, jnp.int32),
+                                    a, b, sel, blocks.block_elems, blocks.k,
+                                    blocks.phase, masked,
+                                    interpret=interpret, dist=dist)
     batch = y.shape[0]
     return y.reshape(batch, -1)[:, :n].reshape((batch,) + x.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "dist"))
+@functools.partial(jax.jit, static_argnames=("interpret", "dist", "blocks"))
 def zo_affine_chain(x: jnp.ndarray, seeds: jnp.ndarray, a: jnp.ndarray,
                     b: jnp.ndarray, interpret: bool = True,
-                    dist: str = "gaussian") -> jnp.ndarray:
+                    dist: str = "gaussian", blocks=None) -> jnp.ndarray:
     """Chained y = fold_j (a_j·y + b_j·z(seeds[j])) for an arbitrary-shape
     leaf in ONE launch — bitwise-equal to the sequential per-stream
-    ``zo_affine`` chain while x round-trips HBM once instead of B times."""
+    ``zo_affine`` chain while x round-trips HBM once instead of B times.
+    Under a partial ``blocks`` plan only selected tiles fold; unselected
+    rows keep their bits."""
     flat2d, n = _blocked_view(x)
-    y = zo_affine_chain_2d(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
-                           interpret=interpret, dist=dist)
+    plan = _rows_plan(n, blocks)
+    if plan is None:
+        y = zo_affine_chain_2d(flat2d, jnp.asarray(seeds, jnp.int32), a, b,
+                               interpret=interpret, dist=dist)
+    else:
+        sel, masked = plan
+        y = zo_affine_chain_2d_rows(flat2d, jnp.asarray(seeds, jnp.int32),
+                                    a, b, sel, blocks.block_elems, blocks.k,
+                                    blocks.phase, masked,
+                                    interpret=interpret, dist=dist)
     return y.reshape(-1)[:n].reshape(x.shape)
 
 
@@ -202,11 +262,25 @@ class PallasBackend(PerturbBackend):
             return vals
         return jax.lax.optimization_barrier(vals)
 
+    @staticmethod
+    def _leaf_blocks(blocks, i: int):
+        """Static sub-leaf plan of leaf ``i``, or ``None`` for whole-leaf
+        semantics (no ``rows`` selection, or every block selected — the
+        route that keeps ``rows(..., k=1)`` bitwise ≡ ``full``)."""
+        if blocks is None:
+            return None
+        rb = blocks[i]
+        if rb is None or rb.all_selected:
+            return None
+        return rb
+
     def _map(self, params: PyTree, ref: StreamRef, fn) -> PyTree:
         seed = ref.counter_seed()
         mask = ref.selection_mask(params)
+        blocks = ref.selection_blocks(params)
         return tree_map_with_index(
-            lambda i, p: fn(p, leaf_seed(seed, i), i)
+            lambda i, p: fn(p, leaf_seed(seed, i), i,
+                            self._leaf_blocks(blocks, i))
             if jnp.issubdtype(p.dtype, jnp.floating)
             and (mask is None or mask[i]) else p, params)
 
@@ -215,12 +289,16 @@ class PallasBackend(PerturbBackend):
         kernel-fused two-pass sphere rescale.  ‖z‖² is accumulated leaf by
         leaf by the ``zo_sqnorm`` kernel on the SAME per-leaf counter streams
         the affine kernels read (z is generated in VMEM and reduced, never
-        materialized); d counts the same subspace.  Every float stage is
-        pinned so the scalar rounds identically in every consuming graph
-        (perturb / fused restore / rank-1 / the fused multi passes) — the
-        live == replay bitwise contract extends to sphere."""
+        materialized); d counts the same subspace.  Under a sub-leaf plan the
+        sphere lives in the selected row-blocks: the ``zo_sqnorm_rows``
+        kernel visits only selected tiles, and d counts selected elements.
+        Every float stage is pinned so the scalar rounds identically in
+        every consuming graph (perturb / fused restore / rank-1 / the fused
+        multi passes) — the live == replay bitwise contract extends to
+        sphere."""
         seed = ref.counter_seed()
         mask = ref.selection_mask(params)
+        blocks = ref.selection_blocks(params)
         d = 0
         sq = None
         for i, p in enumerate(jax.tree_util.tree_leaves(params)):
@@ -228,9 +306,18 @@ class PallasBackend(PerturbBackend):
                 continue
             if mask is not None and not mask[i]:
                 continue
-            d += int(p.size)
-            part = zo_sqnorm_2d(int(p.size), leaf_seed(seed, i),
-                                interpret=self.interpret)
+            rb = self._leaf_blocks(blocks, i)
+            if rb is None:
+                d += int(p.size)
+                part = zo_sqnorm_2d(int(p.size), leaf_seed(seed, i),
+                                    interpret=self.interpret)
+            else:
+                sel, _ = tile_plan(int(p.size), rb.block_elems, rb.k,
+                                   rb.phase)
+                d += rb.selected_elems()
+                part = zo_sqnorm_2d_rows(int(p.size), leaf_seed(seed, i),
+                                         sel, rb.block_elems, rb.k, rb.phase,
+                                         interpret=self.interpret)
             sq = part if sq is None else self._pin_scalars(sq + part)[0]
         if sq is None:
             raise ValueError(
@@ -251,13 +338,13 @@ class PallasBackend(PerturbBackend):
                 jnp.asarray(scale, jnp.float32) *
                 self._sphere_scale(params, ref))
             return self._map(params, ref,
-                             lambda p, s, i: zo_affine(
+                             lambda p, s, i, rb: zo_affine(
                                  p, s, 1.0, b, interpret=self.interpret,
-                                 dist="gaussian"))
+                                 dist="gaussian", blocks=rb))
         return self._map(params, ref,
-                         lambda p, s, i: zo_affine(p, s, 1.0, scale,
-                                                   interpret=self.interpret,
-                                                   dist=dist))
+                         lambda p, s, i, rb: zo_affine(
+                             p, s, 1.0, scale, interpret=self.interpret,
+                             dist=dist, blocks=rb))
 
     def fused_restore_update(self, params_minus: PyTree, ref: StreamRef, eps,
                              lr_g, weight_decay=0.0,
@@ -278,9 +365,9 @@ class PallasBackend(PerturbBackend):
                 b * self._sphere_scale(params_minus, ref))
             kdist = "gaussian"
         return self._map(params_minus, ref,
-                         lambda p, s, i: zo_affine(p, s, decay, b,
-                                                   interpret=self.interpret,
-                                                   dist=kdist))
+                         lambda p, s, i, rb: zo_affine(
+                             p, s, decay, b, interpret=self.interpret,
+                             dist=kdist, blocks=rb))
 
     def apply_rank1(self, params: PyTree, ref: StreamRef, coeff,
                     decay_term=0.0, dist: str = "gaussian",
@@ -297,11 +384,12 @@ class PallasBackend(PerturbBackend):
         sph = self._sphere_scale(params, ref) if dist == "sphere" else None
         kdist = "gaussian" if dist == "sphere" else dist
 
-        def one(p, s, i):
+        def one(p, s, i, rb):
             b = -coeff_ if d_leaves is None else -coeff_ * d_leaves[i]
             if sph is not None:
                 (b,) = self._pin_scalars(b * sph)
-            return zo_affine(p, s, a, b, interpret=self.interpret, dist=kdist)
+            return zo_affine(p, s, a, b, interpret=self.interpret, dist=kdist,
+                             blocks=rb)
 
         return self._map(params, ref, one)
 
@@ -332,6 +420,7 @@ class PallasBackend(PerturbBackend):
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
         mask = refs[0].selection_mask(params)
+        blocks = refs[0].selection_blocks(params)
         seeds0 = jnp.stack([r.counter_seed() for r in refs])
         per = per_stream_scales(scale, len(refs))
         kdist = dist
@@ -350,6 +439,25 @@ class PallasBackend(PerturbBackend):
                     (mask is not None and not mask[i]):
                 return jnp.broadcast_to(p, (len(refs),) + p.shape)
             seeds = seeds0 + jnp.int32(_LEAF_STRIDE) * jnp.int32(i)
+            rb = self._leaf_blocks(blocks, i)
+            if rb is not None:
+                # partial sub-leaf plan: stack per-stream single-rows
+                # launches — the EXACT graph ``perturb`` runs per stream, so
+                # the bitwise many ≡ stacked-singles contract holds by
+                # construction.  (The multi-rows kernel is bitwise against
+                # the full multi kernel, but pairing it with the single-rows
+                # graph trips the cross-graph FMA-contraction caveat in
+                # kernel.py's ``_pin`` — ~1 ulp on rare elements — so the
+                # fan-out fusion is not used here.)  Tiles are still
+                # trace-time skipped: B × selected bytes, never B × leaf.
+                bs = ([jnp.asarray(scale, jnp.float32)] * len(refs)
+                      if per is None else
+                      [b_vec[j] for j in range(len(refs))])
+                return jnp.stack([
+                    zo_affine(p, seeds[j], 1.0, bs[j],
+                              interpret=self.interpret, dist=kdist,
+                              blocks=rb)
+                    for j in range(len(refs))])
             if per is None:
                 return zo_affine_batched(p, seeds, 1.0, scale,
                                          interpret=self.interpret, dist=kdist)
@@ -377,6 +485,7 @@ class PallasBackend(PerturbBackend):
                 f"stream; got {len(refs)} refs, {len(coeffs)} coeffs, "
                 f"{len(decay_terms)} decay terms")
         mask = refs[0].selection_mask(params)
+        blocks = refs[0].selection_blocks(params)
         seeds0 = jnp.stack([r.counter_seed() for r in refs])
         kdist = "gaussian" if dist == "sphere" else dist
         a_list, b_list = [], []
@@ -399,6 +508,7 @@ class PallasBackend(PerturbBackend):
                 return p
             seeds = seeds0 + jnp.int32(_LEAF_STRIDE) * jnp.int32(i)
             return zo_affine_chain(p, seeds, a_vec, b_vec,
-                                   interpret=self.interpret, dist=kdist)
+                                   interpret=self.interpret, dist=kdist,
+                                   blocks=self._leaf_blocks(blocks, i))
 
         return tree_map_with_index(one, params)

@@ -91,6 +91,36 @@ class StreamRef(NamedTuple):
             return None
         return self.selection.leaf_mask(params, self.phase)
 
+    def selection_blocks(self, params) -> Optional[tuple]:
+        """Static per-leaf SUB-LEAF plans (flattening order): a
+        ``repro.select.RowBlocks`` per leaf under a ``rows`` selection, or
+        ``None`` when the ref's selection has whole-leaf semantics (every
+        non-``rows`` kind, including no selection at all).
+
+        **The blocked index contract.**  Both stream projections index a leaf
+        by *flat element position*: the xla projection samples whole-leaf z
+        from ``leaf_key(i)`` and the banded path slices it, and the counter
+        projection hashes ``leaf_seed(i) ⊕ element_index`` — so row-block
+        ``b``'s z bits are a pure function of ``(leaf_seed, block_index)``
+        via its element range ``[b*block_elems, ...)`` (see
+        ``block_index_base``).  A block's bits are therefore identical
+        whether the leaf is perturbed whole or block-by-block, and stable
+        under restructuring/padding of the *surrounding tree* (the plan
+        depends only on the leaf's own shape).  Full selection — including
+        ``rows(..., k=1)``, where every block is selected — reproduces the
+        whole-leaf bits exactly, so there is no stream-id bump.
+        """
+        if self.selection is None:
+            return None
+        bm = getattr(self.selection, "block_mask", None)
+        if bm is None:
+            return None
+        flat = jax.tree_util.tree_leaves(params)
+        blocks = tuple(bm(leaf, self.phase) for leaf in flat)
+        if all(b is None for b in blocks):
+            return None
+        return blocks
+
     # -- threefry projection (xla backend) ---------------------------------- #
     def leaf_key(self, leaf_index: int) -> jax.Array:
         """Stable per-leaf PRNG key (the legacy ``leaf_key``)."""
@@ -114,6 +144,18 @@ class StreamRef(NamedTuple):
         """Per-leaf int32 counter seed (the legacy zo_fused schedule)."""
         return (self.counter_seed()
                 + jnp.int32(_LEAF_STRIDE) * jnp.int32(leaf_index))
+
+    @staticmethod
+    def block_index_base(block_index: int, block_elems: int) -> int:
+        """First counter index of row-block ``block_index`` within its leaf
+        stream — the blocked index contract in one line: the counter-hash
+        projection draws element ``e`` of a leaf from
+        ``hash(leaf_seed(i), e)``, and block ``b`` owns the contiguous index
+        range ``[b*block_elems, (b+1)*block_elems)``.  z for a row-block is
+        thus derived from ``(leaf_seed, block_index)`` alone — never from
+        which *other* blocks are selected, how the leaf is padded to kernel
+        tiles, or how the surrounding tree is restructured."""
+        return int(block_index) * int(block_elems)
 
 
 def as_stream_ref(key_or_ref) -> StreamRef:

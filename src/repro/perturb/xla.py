@@ -73,37 +73,79 @@ def sample_z_tree(params: PyTree, key: jax.Array, dist: Distribution = "gaussian
     return z
 
 
+def _leaf_blocks(blocks: Optional[tuple], i: int):
+    """Static sub-leaf plan of leaf ``i`` — ``None`` (whole-leaf semantics)
+    unless a ``rows`` selection supplied a partial plan.  An all-selected
+    plan degrades to ``None`` here so the whole-leaf fast path (and its
+    exact reduction/fusion shapes) is taken — ``rows(..., k=1)`` stays
+    bitwise ≡ ``full``."""
+    if blocks is None:
+        return None
+    rb = blocks[i]
+    if rb is None or rb.all_selected:
+        return None
+    return rb
+
+
+def _apply_banded(p: jnp.ndarray, rb, band_fn) -> jnp.ndarray:
+    """Apply an elementwise update to the selected row bands of one leaf:
+    whole-leaf z is generated once by the caller (threefry pairs element j
+    with j + n/2 across the *whole* leaf, so per-band generation would
+    change the stream — the counter-hash backend has no such coupling), and
+    ``band_fn(lo, hi)`` computes the updated flat band, stitched over p with
+    gather/scatter-free static slices + ``dynamic_update_slice``.  All ops
+    are elementwise, so each band is bitwise-equal to the same slice of the
+    whole-leaf update."""
+    out = p.reshape(-1)
+    for lo, hi in rb.ranges():
+        out = jax.lax.dynamic_update_slice(out, band_fn(lo, hi), (lo,))
+    return out.reshape(p.shape)
+
+
 def _sphere_scale(params: PyTree, key: jax.Array,
-                  mask: Optional[tuple] = None) -> jnp.ndarray:
+                  mask: Optional[tuple] = None,
+                  blocks: Optional[tuple] = None) -> jnp.ndarray:
     """sqrt(d)/||z|| for sphere sampling, computed by regenerating z leaf-wise
     (two-pass; still never stores the tree).  Under a selection ``mask`` the
     sphere lives in the selected subspace: d and ‖z‖ count selected leaves
-    only (unselected leaves consume no z at all)."""
+    only (unselected leaves consume no z at all) — and under a sub-leaf
+    ``blocks`` plan, selected row bands only."""
     leaves = jax.tree_util.tree_leaves(params)
     if mask is None:
         d = tree_size(params)
     else:
-        d = sum(int(p.size) for p, m in zip(leaves, mask) if m)
+        d = sum(int(p.size) if _leaf_blocks(blocks, i) is None
+                else _leaf_blocks(blocks, i).selected_elems()
+                for i, (p, m) in enumerate(zip(leaves, mask)) if m)
     sq = jnp.float32(0)
     for i, p in enumerate(leaves):
         if mask is not None and not mask[i]:
             continue
         z = sample_leaf_z(leaf_key(key, i), p, "gaussian")
-        sq = sq + jnp.sum(z.astype(jnp.float32) ** 2)
+        rb = _leaf_blocks(blocks, i)
+        if rb is None:
+            sq = sq + jnp.sum(z.astype(jnp.float32) ** 2)
+        else:
+            zf = z.reshape(-1)
+            for lo, hi in rb.ranges():
+                sq = sq + jnp.sum(zf[lo:hi].astype(jnp.float32) ** 2)
     return jnp.sqrt(d / sq)
 
 
 def perturb(params: PyTree, key: jax.Array, scale, dist: Distribution = "gaussian",
-            mask: Optional[tuple] = None) -> PyTree:
+            mask: Optional[tuple] = None,
+            blocks: Optional[tuple] = None) -> PyTree:
     """θ + scale · z(key)  — the paper's ``PerturbParameters(θ, scale, s)``.
 
     ``scale`` may be a traced scalar (used for the fused restore+update).
     Regenerating with the same ``key`` always yields the same z.  ``mask`` is
     a static per-leaf selection (repro.select): unselected leaves pass
-    through with zero z generation.
+    through with zero z generation.  ``blocks`` optionally adds per-leaf
+    sub-leaf row-band plans (``rows`` selections): only the selected bands
+    of a leaf are written (``_apply_banded``).
     """
     if dist == "sphere":
-        sph = _sphere_scale(params, key, mask)
+        sph = _sphere_scale(params, key, mask, blocks)
     def one(i: int, p: jnp.ndarray) -> jnp.ndarray:
         if mask is not None and not mask[i]:
             return p
@@ -111,13 +153,18 @@ def perturb(params: PyTree, key: jax.Array, scale, dist: Distribution = "gaussia
         if dist == "sphere":
             z = z * sph.astype(z.dtype)
         s = jnp.asarray(scale, p.dtype) if jnp.issubdtype(p.dtype, jnp.floating) else scale
-        return p + s * z
+        rb = _leaf_blocks(blocks, i)
+        if rb is None:
+            return p + s * z
+        flat, zf = p.reshape(-1), z.reshape(-1)
+        return _apply_banded(p, rb, lambda lo, hi: flat[lo:hi] + s * zf[lo:hi])
     return tree_map_with_index(one, params)
 
 
 def fused_restore_update(params_minus: PyTree, key: jax.Array, eps, lr_g, weight_decay=0.0,
                          dist: Distribution = "gaussian",
-                         mask: Optional[tuple] = None) -> PyTree:
+                         mask: Optional[tuple] = None,
+                         blocks: Optional[tuple] = None) -> PyTree:
     """Given θ − εz (the state after the second perturbation), produce the
     post-step parameters in ONE pass over the tree:
 
@@ -131,7 +178,7 @@ def fused_restore_update(params_minus: PyTree, key: jax.Array, eps, lr_g, weight
     decay term (a PEFT selection must not decay the frozen base).
     """
     if dist == "sphere":
-        sph = _sphere_scale(params_minus, key, mask)
+        sph = _sphere_scale(params_minus, key, mask, blocks)
     decay = 1.0 - weight_decay
     def one(i: int, p: jnp.ndarray) -> jnp.ndarray:
         if mask is not None and not mask[i]:
@@ -141,15 +188,26 @@ def fused_restore_update(params_minus: PyTree, key: jax.Array, eps, lr_g, weight
             z = z * sph.astype(z.dtype)
         eps_ = jnp.asarray(eps, p.dtype)
         lr_g_ = jnp.asarray(lr_g, p.dtype)
-        restored = p + eps_ * z
-        return jnp.asarray(decay, p.dtype) * restored - lr_g_ * z
+        decay_ = jnp.asarray(decay, p.dtype)
+        rb = _leaf_blocks(blocks, i)
+        if rb is None:
+            restored = p + eps_ * z
+            return decay_ * restored - lr_g_ * z
+        # unselected bands were never perturbed — they pass through with no
+        # restore, no decay, no update (the sub-leaf analogue of the leaf rule)
+        flat, zf = p.reshape(-1), z.reshape(-1)
+        def band(lo, hi):
+            restored = flat[lo:hi] + eps_ * zf[lo:hi]
+            return decay_ * restored - lr_g_ * zf[lo:hi]
+        return _apply_banded(p, rb, band)
     return tree_map_with_index(one, params_minus)
 
 
 def apply_rank1(params: PyTree, key: jax.Array, coeff, decay_term=0.0,
                 dist: Distribution = "gaussian",
                 d_tree: Optional[PyTree] = None,
-                mask: Optional[tuple] = None) -> PyTree:
+                mask: Optional[tuple] = None,
+                blocks: Optional[tuple] = None) -> PyTree:
     """θ ← (1 − decay_term)·θ − coeff·z(key), regenerating z leaf by leaf.
 
     ``coeff`` is the full η-scaled scalar (η·g, or η/n·g per seed);
@@ -172,7 +230,12 @@ def apply_rank1(params: PyTree, key: jax.Array, coeff, decay_term=0.0,
             z = z * jnp.asarray(d_leaves[i], p.dtype)
         coeff_ = jnp.asarray(coeff, p.dtype)
         decay = jnp.asarray(1.0 - decay_term, p.dtype)
-        return decay * p - coeff_ * z
+        rb = _leaf_blocks(blocks, i)
+        if rb is None:
+            return decay * p - coeff_ * z
+        flat, zf = p.reshape(-1), z.reshape(-1)
+        return _apply_banded(
+            p, rb, lambda lo, hi: decay * flat[lo:hi] - coeff_ * zf[lo:hi])
 
     return tree_map_with_index(one, params)
 
@@ -199,7 +262,8 @@ class XLABackend(PerturbBackend):
                 dist: str = "gaussian") -> PyTree:
         self.check_dist(dist)
         return perturb(params, ref.key, scale, dist,
-                       mask=ref.selection_mask(params))
+                       mask=ref.selection_mask(params),
+                       blocks=ref.selection_blocks(params))
 
     def fused_restore_update(self, params_minus: PyTree, ref: StreamRef, eps,
                              lr_g, weight_decay=0.0,
@@ -207,14 +271,16 @@ class XLABackend(PerturbBackend):
         self.check_dist(dist)
         return fused_restore_update(params_minus, ref.key, eps, lr_g,
                                     weight_decay, dist,
-                                    mask=ref.selection_mask(params_minus))
+                                    mask=ref.selection_mask(params_minus),
+                                    blocks=ref.selection_blocks(params_minus))
 
     def apply_rank1(self, params: PyTree, ref: StreamRef, coeff,
                     decay_term=0.0, dist: str = "gaussian",
                     d_tree: Optional[PyTree] = None) -> PyTree:
         self.check_dist(dist)
         return apply_rank1(params, ref.key, coeff, decay_term, dist,
-                           d_tree=d_tree, mask=ref.selection_mask(params))
+                           d_tree=d_tree, mask=ref.selection_mask(params),
+                           blocks=ref.selection_blocks(params))
 
     def leaf_z(self, ref: StreamRef, leaf_index: int, like: jnp.ndarray,
                dist: str = "gaussian") -> jnp.ndarray:
@@ -236,15 +302,19 @@ class XLABackend(PerturbBackend):
         if not refs:
             raise ValueError("perturb_many needs at least one StreamRef")
         mask = refs[0].selection_mask(params)
+        blocks = refs[0].selection_blocks(params)
         keys = jnp.stack([r.key for r in refs])
         per = per_stream_scales(scale, len(refs))
         if per is None:
             stacked = jax.vmap(lambda k: perturb(params, k, scale, dist,
-                                                 mask=mask))(keys)
+                                                 mask=mask,
+                                                 blocks=blocks))(keys)
         else:
             scales = jnp.stack([jnp.asarray(s, jnp.float32) for s in per])
             stacked = jax.vmap(lambda k, s: perturb(params, k, s, dist,
-                                                    mask=mask))(keys, scales)
+                                                    mask=mask,
+                                                    blocks=blocks))(keys,
+                                                                    scales)
         if mask is None:
             return stacked
         flat, treedef = jax.tree_util.tree_flatten(stacked)

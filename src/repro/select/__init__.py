@@ -31,6 +31,8 @@ round-trips every built-in kind:
 'peft(lora)'
 >>> select.parse_selection("moe_experts(2)").spec   # MoE expert-wise cycling
 'moe_experts(2)'
+>>> select.parse_selection("rows(block=256,k=4)").spec  # sub-leaf row blocks
+'rows(block=256,k=4)'
 >>> select.parse_selection(select.leaves(r"\\['attn'\\]").spec).arg
 "\\\\['attn'\\\\]"
 
@@ -43,14 +45,15 @@ factory:
 >>> opt = zo.mezo(lr=1e-3, selection=select.peft("lora"))   # merged-tree PEFT
 >>> opt = zo.mezo(lr=1e-6, selection=select.moe_experts(2)) # router frozen
 """
-from repro.select.base import (PEFT_MODES, SELECTION_KINDS, Selection,
-                               SelectionMismatchError, block_cyclic,
-                               check_replay_selection, full, leaves,
-                               moe_experts, parse_selection, peft,
-                               resolve_selection)
+from repro.select.base import (PEFT_MODES, SELECTION_KINDS, RowBlocks,
+                               Selection, SelectionMismatchError,
+                               block_cyclic, check_replay_selection, full,
+                               leaf_row_blocks, leaves, moe_experts,
+                               parse_selection, peft, resolve_selection, rows)
 
 __all__ = [
-    "PEFT_MODES", "SELECTION_KINDS", "Selection", "SelectionMismatchError",
-    "block_cyclic", "check_replay_selection", "full", "leaves", "moe_experts",
-    "parse_selection", "peft", "resolve_selection",
+    "PEFT_MODES", "SELECTION_KINDS", "RowBlocks", "Selection",
+    "SelectionMismatchError", "block_cyclic", "check_replay_selection",
+    "full", "leaf_row_blocks", "leaves", "moe_experts", "parse_selection",
+    "peft", "resolve_selection", "rows",
 ]

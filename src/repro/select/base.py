@@ -26,6 +26,22 @@ Built-in selections::
     moe_experts(G)           # MoE: router frozen, expert group t % G active,
                              # every non-expert leaf active (architecture-aware
                              # block_cyclic; needs cfg.expert_groups=G layout)
+    rows(block=R, k=K)       # SUB-LEAF: every leaf is cut into row-blocks of
+                             # R rows; row-block b is active at phase b % K.
+                             # The first selection whose perturbed bytes scale
+                             # with a *fraction of each tensor*, not with the
+                             # selected leaf set (Wang et al., 2024 sparse-ZO)
+
+``rows`` is the sub-leaf selection: where every other kind decides *which
+leaves* a step touches, ``rows`` decides *which row-blocks inside every
+leaf*.  A leaf of shape ``(M, D...)`` is viewed as ``(M, prod(D))`` and cut
+into ``ceil(M / R)`` row-blocks; step ``t`` perturbs the blocks with
+``b % K == t % K``.  Backends consume the per-leaf :meth:`Selection.block_mask`
+(a static :class:`RowBlocks` plan) and skip unselected blocks at *trace time*
+— no z generation, no HBM reads, no writes — mirroring the leaf-skip
+semantics.  The z bits of a selected block are identical whether the leaf is
+perturbed whole or block-by-block (the blocked StreamRef index contract,
+``repro.perturb.stream``), so ``rows(block=R, k=1)`` is bitwise ≡ ``full``.
 
 Selections are plain hashable NamedTuples with a canonical string ``spec``
 (``parse_selection`` round-trips it) — the form recorded in checkpoint meta
@@ -47,7 +63,8 @@ from typing import NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 
-SELECTION_KINDS = ("full", "leaves", "block_cyclic", "peft", "moe_experts")
+SELECTION_KINDS = ("full", "leaves", "block_cyclic", "peft", "moe_experts",
+                   "rows")
 PEFT_MODES = ("lora", "prefix")
 
 # grouped-MoE expert leaves: models/moe.py lays experts out as
@@ -62,6 +79,101 @@ class SelectionMismatchError(RuntimeError):
     decides which leaves each recorded scalar's rank-1 update touches, so
     continuing would silently apply the updates to a different parameter
     support — refuse instead."""
+
+
+class RowBlocks(NamedTuple):
+    """Static sub-leaf row-block plan for ONE leaf under a ``rows``
+    selection — the value of :meth:`Selection.block_mask`.
+
+    A leaf of shape ``(M, D...)`` is viewed as ``(M, prod(D))``
+    (``n_rows`` × ``row_width``; 1-D leaves get ``row_width=1``, scalars are
+    one 1×1 row) and cut into ``ceil(n_rows / block_rows)`` row-blocks.
+    Row-block ``b`` covers the contiguous flat element range
+    ``[b*block_rows*row_width, min(n_rows, (b+1)*block_rows)*row_width)`` and
+    is selected iff ``b % k == phase``.  All fields are Python ints, so a
+    ``RowBlocks`` is hashable and rides jit ``static_argnames`` — backends
+    branch on it at trace time.
+    """
+    block_rows: int        # R: rows per block
+    row_width: int         # prod(shape[1:]) — elements per row
+    n_rows: int            # shape[0] (or size, for 1-D leaves)
+    k: int                 # schedule period (selection.n_phases)
+    phase: int             # this step's phase, already reduced mod k
+
+    @property
+    def size(self) -> int:
+        """Total element count of the leaf (``n_rows * row_width``)."""
+        return self.n_rows * self.row_width
+
+    @property
+    def block_elems(self) -> int:
+        """Flat elements per (full) row-block — the unit of the blocked
+        StreamRef counter contract: block ``b`` owns counter indices
+        ``[b*block_elems, (b+1)*block_elems)`` of its leaf stream."""
+        return self.block_rows * self.row_width
+
+    @property
+    def n_blocks(self) -> int:
+        return -(-self.n_rows // self.block_rows)
+
+    @property
+    def all_selected(self) -> bool:
+        """True iff every row-block of this leaf is selected at ``phase`` —
+        the signal backends use to route to the plain whole-leaf path
+        (bitwise ≡ ``full``, zero sub-leaf overhead)."""
+        return all(b % self.k == self.phase for b in range(self.n_blocks))
+
+    def selected_blocks(self) -> tuple:
+        """Indices of the row-blocks selected at ``phase``."""
+        return tuple(b for b in range(self.n_blocks)
+                     if b % self.k == self.phase)
+
+    def block_range(self, b: int) -> tuple:
+        """Flat element range ``(lo, hi)`` of row-block ``b``."""
+        lo = b * self.block_elems
+        hi = min(self.n_rows, (b + 1) * self.block_rows) * self.row_width
+        return lo, hi
+
+    def ranges(self) -> tuple:
+        """Coalesced flat ``(lo, hi)`` element ranges of the selected blocks
+        — what the xla backend's gather-free ``dynamic_slice`` banded path
+        iterates over."""
+        out = []
+        for b in self.selected_blocks():
+            lo, hi = self.block_range(b)
+            if out and out[-1][1] == lo:
+                out[-1] = (out[-1][0], hi)
+            else:
+                out.append((lo, hi))
+        return tuple(out)
+
+    def selected_elems(self) -> int:
+        """Flat element count of the selected row-blocks."""
+        return sum(hi - lo for lo, hi in self.ranges())
+
+    def element_mask(self, flat_index):
+        """Selected-predicate over flat element indices (vectorized; works on
+        traced integer arrays) — the in-kernel mask for tiles that straddle a
+        block boundary: element ``e`` lives in block ``e // block_elems``."""
+        return (flat_index // self.block_elems) % self.k == self.phase
+
+
+def leaf_row_blocks(leaf, block_rows: int, k: int, phase: int) -> RowBlocks:
+    """Build the :class:`RowBlocks` plan of one leaf: shape ``(M, D...)`` →
+    ``n_rows=M``, ``row_width=prod(D)``; 1-D → width 1; scalar → one 1×1
+    row."""
+    shape = tuple(leaf.shape)
+    if len(shape) == 0:
+        n_rows, width = 1, 1
+    elif len(shape) == 1:
+        n_rows, width = shape[0], 1
+    else:
+        n_rows = shape[0]
+        width = 1
+        for d in shape[1:]:
+            width *= d
+    return RowBlocks(block_rows=int(block_rows), row_width=int(width),
+                     n_rows=int(n_rows), k=int(k), phase=int(phase) % int(k))
 
 
 class Selection(NamedTuple):
@@ -84,6 +196,8 @@ class Selection(NamedTuple):
             return "full"
         if self.kind in ("block_cyclic", "moe_experts"):
             return f"{self.kind}({self.n_phases})"
+        if self.kind == "rows":
+            return f"rows(block={self.arg},k={self.n_phases})"
         return f"{self.kind}({self.arg})"
 
     def is_full(self) -> bool:
@@ -135,6 +249,26 @@ class Selection(NamedTuple):
             mask = tuple(mask)
         elif self.kind == "moe_experts":
             mask = self._moe_experts_mask(flat, floating, phase)
+        elif self.kind == "rows":
+            # a leaf participates at this phase iff at least one of its
+            # row-blocks is selected — blocks 0..n_blocks-1 hit phase p iff
+            # p < n_blocks, so small leaves simply sit out the late phases
+            # (their blocks come around on earlier ones)
+            K = self.n_phases
+            ph = int(phase) % K
+            R = int(self.arg)
+            mask = tuple(
+                bool(f) and leaf_row_blocks(leaf, R, K, ph).n_blocks > ph
+                for f, (_, leaf) in zip(floating, flat))
+            if not any(mask):
+                n_max = max((leaf_row_blocks(leaf, R, K, 0).n_blocks
+                             for f, (_, leaf) in zip(floating, flat) if f),
+                            default=0)
+                raise ValueError(
+                    f"rows(block={R},k={K}) selects nothing at phase {ph}: "
+                    f"the largest floating leaf has only {n_max} row-blocks "
+                    f"of {R} rows, so phases >= {n_max} would perturb "
+                    f"nothing; use k <= {n_max} or a smaller block")
         else:
             paths = [jax.tree_util.keystr(p) for p, _ in flat]
             if self.kind == "leaves":
@@ -194,22 +328,46 @@ class Selection(NamedTuple):
                     f"cfg.replace(expert_groups={G})")
         return tuple(mask)
 
+    # -- the sub-leaf plan --------------------------------------------------- #
+    def block_mask(self, leaf, phase: int = 0) -> Optional[RowBlocks]:
+        """Static sub-leaf row-block plan of ``leaf`` at ``phase``, or
+        ``None`` for every non-``rows`` selection (whole-leaf semantics).
+        Both backends consume this: the pallas backend launches only the
+        tiles covering selected blocks (trace-time skip), the xla backend
+        applies whole-leaf z over the selected row bands via gather-free
+        ``dynamic_slice``.  The plan is a pure function of the leaf *shape*
+        — restructuring or padding the surrounding tree never changes which
+        counter indices a block consumes (the blocked StreamRef contract)."""
+        if self.kind != "rows":
+            return None
+        return leaf_row_blocks(leaf, int(self.arg), self.n_phases, phase)
+
     # -- accounting (benchmarks / reporting) -------------------------------- #
     def selected_size(self, params, phase: int = 0) -> int:
-        """Scalar count of the leaves active at ``phase``."""
+        """Scalar count of the parameters active at ``phase`` — sub-leaf
+        aware: under ``rows`` this counts only the selected row-blocks of
+        each active leaf."""
         mask = self.leaf_mask(params, phase)
         leaves = jax.tree_util.tree_leaves(params)
         if mask is None:
             return sum(x.size for x in leaves)
+        if self.kind == "rows":
+            return sum(self.block_mask(x, phase).selected_elems()
+                       for x, m in zip(leaves, mask) if m)
         return sum(x.size for x, m in zip(leaves, mask) if m)
 
     def selected_bytes(self, params, phase: int = 0) -> int:
-        """Bytes of the leaves active at ``phase`` — the per-step perturbed
-        (read-modify-write) traffic a backend pays under this selection."""
+        """Bytes of the parameters active at ``phase`` — the per-step
+        perturbed (read-modify-write) traffic a backend pays under this
+        selection.  Sub-leaf aware (see ``selected_size``)."""
         mask = self.leaf_mask(params, phase)
         leaves = jax.tree_util.tree_leaves(params)
         if mask is None:
             return sum(x.size * x.dtype.itemsize for x in leaves)
+        if self.kind == "rows":
+            return sum(self.block_mask(x, phase).selected_elems()
+                       * x.dtype.itemsize
+                       for x, m in zip(leaves, mask) if m)
         return sum(x.size * x.dtype.itemsize
                    for x, m in zip(leaves, mask) if m)
 
@@ -262,6 +420,30 @@ def moe_experts(groups: int, phase_offset: int = 0) -> Selection:
                      phase_offset=int(phase_offset) % g)
 
 
+def rows(block: int, k: int, phase_offset: int = 0) -> Selection:
+    """Sub-leaf row-block selection: every leaf is viewed as ``(M, D...)``
+    and cut into ``ceil(M / block)`` row-blocks of ``block`` rows; step t
+    perturbs the blocks with ``b % k == (t + phase_offset) % k`` — each step
+    touches ~1/k of *every tensor* (intra-tensor sparse ZO: perturbed bytes
+    ∝ selected fraction, even for a single giant embedding), and every block
+    is visited every k steps.  ``rows(block=R, k=1)`` selects everything and
+    is bitwise ≡ ``full`` on both backends (the blocked StreamRef contract).
+
+    >>> rows(block=256, k=4).spec
+    'rows(block=256,k=4)'
+    >>> parse_selection("rows(block=256,k=4)") == rows(256, 4)
+    True
+    """
+    block = int(block)
+    k = int(k)
+    if block < 1:
+        raise ValueError(f"rows needs block >= 1, got {block}")
+    if k < 1:
+        raise ValueError(f"rows needs k >= 1, got {k}")
+    return Selection("rows", arg=str(block), n_phases=k,
+                     phase_offset=int(phase_offset) % k)
+
+
 def peft(mode: str) -> Selection:
     """The merged-tree PEFT selection: perturb only the ``mode`` subtree of a
     ``models.peft.peft_params(base, tree, mode)`` merged tree — LoRA / prefix
@@ -275,15 +457,19 @@ def peft(mode: str) -> Selection:
 # Spec parsing / normalization
 # --------------------------------------------------------------------------- #
 _SPEC_RE = re.compile(r"^(\w+)\((.*)\)$")
+_ROWS_RE = re.compile(r"^block=(\d+)\s*,\s*k=(\d+)$")
 
 
 def parse_selection(spec: str, phase_offset: int = 0) -> Selection:
     """Parse a canonical spec string (``Selection.spec`` round-trips):
     ``"full"``, ``"leaves(<regex>)"``, ``"block_cyclic(<k>)"``,
-    ``"peft(lora|prefix)"``, ``"moe_experts(<G>)"``.
+    ``"peft(lora|prefix)"``, ``"moe_experts(<G>)"``,
+    ``"rows(block=<R>,k=<K>)"``.
 
     >>> parse_selection("block_cyclic(4)").spec
     'block_cyclic(4)'
+    >>> parse_selection("rows(block=128,k=4)").spec
+    'rows(block=128,k=4)'
     >>> parse_selection("leaves(\\\\['attn'\\\\])").spec
     "leaves(\\\\['attn'\\\\])"
     >>> parse_selection("moe_experts(2)").n_phases
@@ -299,7 +485,7 @@ def parse_selection(spec: str, phase_offset: int = 0) -> Selection:
         raise ValueError(
             f"unparseable selection spec {spec!r}; expected one of: full, "
             "leaves(<regex>), block_cyclic(<k>), peft(lora|prefix), "
-            "moe_experts(<G>)")
+            "moe_experts(<G>), rows(block=<R>,k=<K>)")
     kind, arg = m.group(1), m.group(2)
     if kind == "leaves":
         return leaves(arg)
@@ -309,6 +495,14 @@ def parse_selection(spec: str, phase_offset: int = 0) -> Selection:
         return peft(arg)
     if kind == "moe_experts":
         return moe_experts(int(arg), phase_offset=phase_offset)
+    if kind == "rows":
+        rm = _ROWS_RE.match(arg.strip())
+        if rm is None:
+            raise ValueError(
+                f"unparseable rows selection arguments {arg!r}; the "
+                "canonical form is rows(block=<R>,k=<K>)")
+        return rows(int(rm.group(1)), int(rm.group(2)),
+                    phase_offset=phase_offset)
     raise ValueError(f"unknown selection kind {kind!r}; "
                      f"available: {SELECTION_KINDS}")
 

@@ -305,6 +305,15 @@ def rescaled_spsa(eps: float = 1e-3, dist: Distribution = "gaussian",
     be = get_backend(backend)
     be.check_dist(dist)
     sel = resolve_selection(selection)
+    if sel is not None and sel.kind == "rows":
+        raise ValueError(
+            "rescaled_spsa builds its perturbation from per-leaf D·z "
+            "(leaf_z + whole-leaf mask math), which cannot honor sub-leaf "
+            "rows(...) selections — the perturbation would touch whole "
+            "leaves while the update writes only the selected row blocks. "
+            "Use a whole-leaf selection kind (full / block_cyclic / leaves "
+            "/ peft / moe_experts) or the spsa/fzoo estimators with "
+            "rows(...)")
 
     def init(params, key):
         if d_tree is not None:

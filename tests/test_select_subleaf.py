@@ -1,0 +1,458 @@
+"""Sub-leaf row-block selection (``rows(block=R,k=K)``) conformance.
+
+The contracts, per ISSUE 9:
+
+* ``rows(block=R, k=1)`` — every block selected — is BITWISE-identical to
+  ``full`` on both backends (params AND z bits): the blocked StreamRef index
+  contract means full selection needs no stream-id bump;
+* a selected row-block's z bits are identical whether the leaf is perturbed
+  whole or block-by-block, and stable under padding / restructuring of the
+  surrounding tree (pallas counter streams are position-stable; the xla
+  banded path slices the one whole-leaf z);
+* unselected row-bands are completely untouched per step — no perturbation,
+  no update, no weight decay (bitwise-frozen);
+* ``seed_parallel(1)`` ≡ local bitwise under a rows selection;
+* a rows run's MZOL5 ledger round-trips on {spsa, fzoo} × {xla,
+  pallas-interpret}: replay-vs-replay bitwise, live-vs-replay < 2e-6;
+* kernel level: the ``rows`` kernel variants launch only selected tiles and
+  are bitwise-equal to the full kernels on selected elements — including
+  tiles that straddle a block boundary (in-kernel modular mask) — while
+  unselected elements keep x's bits exactly; the rows sqnorm kernel matches
+  its pure-jnp oracle bitwise;
+* guardrails: empty phases fail loudly, ``rescaled_spsa`` refuses rows
+  selections, and the spec string round-trips.
+
+Known, documented tolerance: the xla backend's *partial* banded application
+is a differently-shaped graph than the whole-leaf fused multiply-add, so
+selected bands may differ from the full graph's same elements by 1 ulp (FMA
+contraction).  Only the pallas kernels hold the strict partial-selection
+bitwise contract; the xla k=1 route goes through the unmodified whole-leaf
+path and stays bitwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import exec as zexec
+from repro import select, zo
+from repro.core.trajectory import TrajectoryLedger, replay
+from repro.exec import StepProgram
+from repro.kernels.zo_fused.kernel import (BLOCK_COLS, BLOCK_ROWS,
+                                           zo_affine_2d)
+from repro.kernels.zo_fused.multi import (zo_affine_chain_2d,
+                                          zo_affine_multi_2d)
+from repro.kernels.zo_fused.rows import (TILE_ELEMS, tile_plan,
+                                         zo_affine_2d_rows,
+                                         zo_affine_chain_2d_rows,
+                                         zo_affine_multi_2d_rows,
+                                         zo_sqnorm_2d_rows, zo_sqnorm_rows_ref)
+from repro.perturb import StreamRef, get_backend
+from repro.select import RowBlocks, SelectionMismatchError, leaf_row_blocks
+from repro.tree_utils import tree_max_abs_diff
+
+BACKENDS = ["xla", "pallas-interpret"]
+
+
+def make_opt(estimator: str, backend: str, selection=None, lr=1e-3, eps=1e-3,
+             weight_decay=0.0):
+    if estimator == "spsa":
+        return zo.mezo(lr=lr, eps=eps, backend=backend, selection=selection,
+                       weight_decay=weight_decay)
+    if estimator == "fzoo":
+        return zo.fzoo(lr=lr, eps=eps, batch_seeds=3, backend=backend,
+                       selection=selection, weight_decay=weight_decay)
+    raise ValueError(estimator)
+
+
+@pytest.fixture()
+def problem():
+    t = jax.random.normal(jax.random.PRNGKey(0), (12, 4))
+
+    def loss_fn(p, b):
+        scale = 1.0 if b is None else jnp.mean(b)
+        return scale * (0.5 * jnp.sum((p["emb"] - t) ** 2)
+                        + 0.1 * jnp.sum(p["w"] ** 2))
+
+    params = {"emb": jnp.zeros((12, 4)), "w": jnp.ones((16,))}
+    batch = jnp.linspace(0.5, 1.5, 8)
+    return loss_fn, params, batch
+
+
+def run_plan(opt, plan, loss_fn, params, batch, steps=4, seed=3, ledger=None):
+    prog = StepProgram(opt, plan)
+    state = prog.init(params, seed=seed)
+    step = jax.jit(prog.step_fn(loss_fn))
+    p = params
+    for i in range(steps):
+        p, state, m = step(p, state, batch)
+        if ledger is not None:
+            g = m.get("projected_grads")
+            ledger.append(i, np.asarray(g) if g is not None
+                          else float(m["projected_grad"]), float(m["lr"]))
+    return p, prog
+
+
+def ledger_for(prog, seed=3):
+    meta = prog.meta
+    return TrajectoryLedger(base_seed=seed, grad_dtype="float32",
+                            backend=meta["perturb_backend"],
+                            batch_seeds=meta["batch_seeds"],
+                            exec_plan=meta["exec_plan"],
+                            n_groups=meta["n_groups"],
+                            selection=meta["selection"],
+                            sel_phase=meta["sel_phase"])
+
+
+def rows_elem_mask(leaf, block, k, phase):
+    """Boolean selected-element mask of one leaf (numpy, flat order)."""
+    rb = leaf_row_blocks(leaf, block, k, phase)
+    idx = np.arange(leaf.size)
+    return np.asarray(rb.element_mask(idx)).astype(bool)
+
+
+# --------------------------------------------------------------------------- #
+# rows(block=R, k=1) ≡ full, bitwise — params AND z bits, both backends
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("estimator", ["spsa", "fzoo"])
+def test_rows_k1_bitwise_full(problem, estimator, backend):
+    loss_fn, params, batch = problem
+    p_none, _ = run_plan(make_opt(estimator, backend), zexec.local(),
+                         loss_fn, params, batch)
+    p_rows, _ = run_plan(make_opt(estimator, backend,
+                                  selection=select.rows(block=4, k=1)),
+                         zexec.local(), loss_fn, params, batch)
+    assert tree_max_abs_diff(p_none, p_rows) == 0.0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dist", ["gaussian", "rademacher", "sphere"])
+def test_rows_k1_perturb_z_bits(problem, backend, dist):
+    """The z bits (θ + εz views) of a k=1 rows selection match the
+    no-selection views exactly — the blocked index contract at the backend
+    primitive level."""
+    _, params, _ = problem
+    be = get_backend(backend)
+    ref = StreamRef(jax.random.PRNGKey(5))
+    ref_rows = ref.with_selection(select.rows(block=4, k=1), 0)
+    a = be.perturb(params, ref, 1e-3, dist)
+    b = be.perturb(params, ref_rows, 1e-3, dist)
+    assert tree_max_abs_diff(a, b) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Frozen unselected row-bands (perturb, update, AND decay)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("estimator", ["spsa", "fzoo"])
+def test_rows_freezes_unselected_bands(problem, estimator, backend):
+    loss_fn, params, batch = problem
+    K = 3
+    opt = make_opt(estimator, backend, selection=select.rows(block=4, k=K),
+                   weight_decay=0.1)
+    state = opt.init(params, seed=3)
+    step = jax.jit(opt.step_fn(loss_fn))
+    p = params
+    for t in range(K):
+        p_next, state, _ = step(p, state, batch)
+        for name in ("emb", "w"):
+            sel_mask = rows_elem_mask(params[name], 4, K, t)
+            before = np.asarray(p[name]).reshape(-1)
+            after = np.asarray(p_next[name]).reshape(-1)
+            # unselected bands: bitwise-frozen despite nonzero weight decay
+            np.testing.assert_array_equal(after[~sel_mask], before[~sel_mask])
+            # selected bands moved
+            assert np.max(np.abs(after[sel_mask] - before[sel_mask])) > 0.0
+        p = p_next
+
+
+def test_rows_every_block_visited_over_k_steps(problem):
+    loss_fn, params, batch = problem
+    p, _ = run_plan(make_opt("spsa", "xla",
+                             selection=select.rows(block=4, k=2)),
+                    zexec.local(), loss_fn, params, batch, steps=2)
+    for name in ("emb", "w"):
+        moved = np.asarray(p[name] != params[name]).reshape(-1)
+        assert moved.all(), f"{name}: some rows never updated over k steps"
+
+
+# --------------------------------------------------------------------------- #
+# Block z stability: whole vs block-by-block, padding, tree restructuring
+# --------------------------------------------------------------------------- #
+def test_rows_pallas_block_bits_match_whole_leaf():
+    """pallas: a selected block's perturbed values are bitwise the same as
+    the whole-leaf perturbation's values at those elements."""
+    be = get_backend("pallas-interpret")
+    params = {"w": jax.random.normal(jax.random.PRNGKey(1), (12, 4))}
+    ref = StreamRef(jax.random.PRNGKey(7))
+    whole = be.perturb(params, ref, 1e-2)
+    part = be.perturb(params, ref.with_selection(select.rows(block=4, k=3),
+                                                 1), 1e-2)
+    m = rows_elem_mask(params["w"], 4, 3, 1)
+    w_whole = np.asarray(whole["w"]).reshape(-1)
+    w_part = np.asarray(part["w"]).reshape(-1)
+    np.testing.assert_array_equal(w_part[m], w_whole[m])
+    np.testing.assert_array_equal(w_part[~m],
+                                  np.asarray(params["w"]).reshape(-1)[~m])
+
+
+def test_rows_xla_bands_slice_the_whole_leaf_z(problem):
+    """xla: the banded path applies slices of the ONE whole-leaf z — so
+    unselected bands are bitwise-frozen and selected bands match the
+    whole-leaf graph within the documented 1-ulp FMA tolerance."""
+    _, params, _ = problem
+    be = get_backend("xla")
+    ref = StreamRef(jax.random.PRNGKey(7))
+    whole = be.perturb(params, ref, 1e-2)
+    part = be.perturb(params, ref.with_selection(select.rows(block=4, k=3),
+                                                 1), 1e-2)
+    for name in ("emb", "w"):
+        m = rows_elem_mask(params[name], 4, 3, 1)
+        w_whole = np.asarray(whole[name]).reshape(-1)
+        w_part = np.asarray(part[name]).reshape(-1)
+        np.testing.assert_allclose(w_part[m], w_whole[m], rtol=0, atol=1e-6)
+        np.testing.assert_array_equal(
+            w_part[~m], np.asarray(params[name]).reshape(-1)[~m])
+
+
+def test_rows_pallas_block_bits_stable_under_leaf_padding():
+    """Appending rows to a leaf never changes the z an earlier block
+    consumes: the counter stream indexes by flat element position."""
+    be = get_backend("pallas-interpret")
+    ref = StreamRef(jax.random.PRNGKey(3)).with_selection(
+        select.rows(block=2, k=2), 0)
+    small = {"w": jnp.ones((8, 4))}
+    big = {"w": jnp.ones((14, 4))}                 # same leaf index, more rows
+    p_small = np.asarray(be.perturb(small, ref, 1e-2)["w"]).reshape(-1)
+    p_big = np.asarray(be.perturb(big, ref, 1e-2)["w"]).reshape(-1)
+    np.testing.assert_array_equal(p_small, p_big[:p_small.size])
+
+
+def test_rows_block_bits_stable_under_tree_restructuring():
+    """Replacing a *sibling* leaf never changes another leaf's block z: the
+    plan and the counter stream are pure functions of the leaf's own shape
+    and index."""
+    be = get_backend("pallas-interpret")
+    ref = StreamRef(jax.random.PRNGKey(3)).with_selection(
+        select.rows(block=2, k=2), 0)
+    t1 = {"a": jnp.ones((8, 4)), "b": jnp.ones((4,))}
+    t2 = {"a": jnp.ones((8, 4)), "b": jnp.zeros((10, 3))}
+    p1 = be.perturb(t1, ref, 1e-2)
+    p2 = be.perturb(t2, ref, 1e-2)
+    assert tree_max_abs_diff({"a": p1["a"]}, {"a": p2["a"]}) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# perturb_many / affine_many contracts under a partial rows plan
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rows_perturb_many_matches_stacked_singles(backend):
+    be = get_backend(backend)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (12, 4))}
+    sel = select.rows(block=4, k=3)
+    base = jax.random.PRNGKey(7)
+    refs = [StreamRef(jax.random.fold_in(base, j)).with_selection(sel, 1)
+            for j in range(3)]
+    for scale in (1e-2, (1e-2, -1e-2, 5e-3)):
+        stacked = be.perturb_many(params, refs, scale, "gaussian")
+        scales = [scale] * 3 if not isinstance(scale, tuple) else list(scale)
+        singles = [be.perturb(params, r, s) for r, s in zip(refs, scales)]
+        want = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *singles)
+        assert tree_max_abs_diff(stacked, want) == 0.0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rows_affine_many_matches_sequential_fold(backend):
+    be = get_backend(backend)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (12, 4))}
+    sel = select.rows(block=4, k=3)
+    base = jax.random.PRNGKey(9)
+    refs = [StreamRef(jax.random.fold_in(base, j)).with_selection(sel, 1)
+            for j in range(3)]
+    coeffs = [1e-3, -5e-4, 2e-4]
+    decays = [1e-4, 0.0, 0.0]
+    fused = be.affine_many(params, refs, coeffs, decays, "gaussian")
+    seq = params
+    for r, c, d in zip(refs, coeffs, decays):
+        seq = be.apply_rank1(seq, r, c, d, "gaussian")
+    assert tree_max_abs_diff(fused, seq) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# sp(1) ≡ local, bitwise
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rows_sp1_bitwise_local(problem, backend):
+    loss_fn, params, batch = problem
+    sel = select.rows(block=4, k=2)
+    p_local, _ = run_plan(make_opt("spsa", backend, selection=sel),
+                          zexec.local(), loss_fn, params, batch)
+    p_sp1, _ = run_plan(make_opt("spsa", backend, selection=sel),
+                        zexec.seed_parallel(1), loss_fn, params, batch)
+    assert tree_max_abs_diff(p_local, p_sp1) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# MZOL5 ledger round-trip: {spsa, fzoo} × {xla, pallas-interpret}
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("estimator", ["spsa", "fzoo"])
+def test_rows_ledger_roundtrip(problem, estimator, backend):
+    loss_fn, params, batch = problem
+    sel = select.rows(block=4, k=2)
+    opt = make_opt(estimator, backend, selection=sel)
+    prog = StepProgram(opt, zexec.local())
+    led = ledger_for(prog)
+    p_live, _ = run_plan(opt, zexec.local(), loss_fn, params, batch,
+                         ledger=led)
+    raw = led.to_bytes()
+    assert raw.startswith(b"MZOL5")          # rows rides the MZOL5 header
+    led2 = TrajectoryLedger.from_bytes(raw)
+    assert (led2.selection, led2.sel_phase) == ("rows(block=4,k=2)", 0)
+    mk = lambda: make_opt(estimator, backend, selection=sel)
+    rec = replay(params, led2, mk())
+    assert tree_max_abs_diff(rec, p_live) < 2e-6
+    # replay is deterministic: replay-vs-replay bitwise
+    assert tree_max_abs_diff(rec, replay(params, led2, mk())) == 0.0
+    # replay under a different selection refuses
+    with pytest.raises(SelectionMismatchError, match="rows"):
+        replay(params, led2, make_opt(estimator, backend))
+
+
+# --------------------------------------------------------------------------- #
+# Kernel level: selected tiles ≡ full kernel, unselected rows keep x bits
+# --------------------------------------------------------------------------- #
+def _kernel_case(n_tiles=2, seed_val=11):
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (n_tiles * BLOCK_ROWS, BLOCK_COLS), jnp.float32)
+    seed = jnp.int32(seed_val)
+    return x, seed
+
+
+def _sel_mask_2d(x, block_elems, k, phase):
+    idx = np.arange(x.size)
+    return (((idx // block_elems) % k) == phase).reshape(x.shape)
+
+
+@pytest.mark.parametrize("block_rows,k,phase", [
+    (BLOCK_ROWS, 2, 0),        # block == tile: pure tiles, no in-kernel mask
+    (96, 2, 1),                # straddling blocks: in-kernel modular mask
+    (96, 3, 0),
+])
+def test_rows_kernel_single_bitwise_vs_full(block_rows, k, phase):
+    x, seed = _kernel_case()
+    be_elems = block_rows * BLOCK_COLS
+    sel, pure = tile_plan(x.size, be_elems, k, phase)
+    y_full = np.asarray(zo_affine_2d(x, seed, 0.9, 1e-2, interpret=True))
+    y_rows = np.asarray(zo_affine_2d_rows(
+        x, seed, jnp.float32(0.9), jnp.float32(1e-2), sel, be_elems, k,
+        phase, masked=not pure, interpret=True))
+    m = _sel_mask_2d(x, be_elems, k, phase)
+    np.testing.assert_array_equal(y_rows[m], y_full[m])
+    np.testing.assert_array_equal(y_rows[~m], np.asarray(x)[~m])
+
+
+def test_rows_kernel_multi_and_chain_bitwise_vs_full():
+    x, seed = _kernel_case()
+    seeds = jnp.asarray([11, 12, 13], jnp.int32)
+    a = jnp.asarray([1.0, 0.9, 1.0], jnp.float32)
+    b = jnp.asarray([1e-2, -1e-2, 5e-3], jnp.float32)
+    be_elems = 96 * BLOCK_COLS
+    k, phase = 2, 0
+    sel, pure = tile_plan(x.size, be_elems, k, phase)
+    m = _sel_mask_2d(x, be_elems, k, phase)
+
+    y_full = np.asarray(zo_affine_multi_2d(x, seeds, a, b, interpret=True))
+    y_rows = np.asarray(zo_affine_multi_2d_rows(
+        x, seeds, a, b, sel, be_elems, k, phase, masked=not pure,
+        interpret=True))
+    for j in range(3):
+        np.testing.assert_array_equal(y_rows[j][m], y_full[j][m])
+        np.testing.assert_array_equal(y_rows[j][~m], np.asarray(x)[~m])
+
+    c_full = np.asarray(zo_affine_chain_2d(x, seeds, a, b, interpret=True))
+    c_rows = np.asarray(zo_affine_chain_2d_rows(
+        x, seeds, a, b, sel, be_elems, k, phase, masked=not pure,
+        interpret=True))
+    np.testing.assert_array_equal(c_rows[m], c_full[m])
+    np.testing.assert_array_equal(c_rows[~m], np.asarray(x)[~m])
+
+
+def test_rows_sqnorm_kernel_matches_oracle():
+    n = 2 * TILE_ELEMS - 777                     # ragged: padding masked out
+    be_elems = 96 * BLOCK_COLS
+    k, phase = 2, 1
+    sel, _ = tile_plan(n, be_elems, k, phase)
+    got = float(zo_sqnorm_2d_rows(n, 11, sel, be_elems, k, phase,
+                                  interpret=True))
+    want = float(zo_sqnorm_rows_ref(n, 11, sel, be_elems, k, phase))
+    assert got == want                           # bitwise (same pinned sums)
+    # sanity: roughly E[z²]·selected_elems for the gaussian stream
+    rb = RowBlocks(96, BLOCK_COLS, -(-n // BLOCK_COLS), k, phase)
+    n_sel = sum(min(hi, n) - lo for lo, hi in
+                ((b * be_elems, (b + 1) * be_elems)
+                 for b in range(-(-n // be_elems)) if b % k == phase)
+                if lo < n)
+    assert abs(got / n_sel - 1.0) < 0.05
+
+
+def test_tile_plan_static_properties():
+    # pure when blocks == tiles; masked when straddling
+    sel, pure = tile_plan(4 * TILE_ELEMS, TILE_ELEMS, 2, 1)
+    assert sel == (1, 3) and pure
+    sel, pure = tile_plan(4 * TILE_ELEMS, 96 * BLOCK_COLS, 2, 0)
+    assert not pure and len(sel) == 4            # every tile has a selected blk
+    # k=1 selects every tile, purely
+    sel, pure = tile_plan(3 * TILE_ELEMS - 5, TILE_ELEMS, 1, 0)
+    assert sel == (0, 1, 2) and pure
+    with pytest.raises(ValueError, match="selects no tiles"):
+        tile_plan(TILE_ELEMS, 2 * TILE_ELEMS, 2, 1)
+
+
+# --------------------------------------------------------------------------- #
+# Spec round-trip, accounting, guardrails
+# --------------------------------------------------------------------------- #
+def test_rows_spec_roundtrip_and_accounting(problem):
+    _, params, _ = problem                       # emb: 48 f32, w: 16 f32
+    sel = select.rows(block=4, k=2)
+    assert sel.spec == "rows(block=4,k=2)"
+    assert select.parse_selection(sel.spec) == sel
+    with pytest.raises(ValueError, match="unparseable rows"):
+        select.parse_selection("rows(4,2)")
+    with pytest.raises(ValueError, match="block >= 1"):
+        select.rows(block=0, k=2)
+    # emb (12,4): blocks of 16 elems → phase 0 selects blocks 0, 2 (32 elems);
+    # w (16,): blocks of 4 elems → blocks 0, 2 (8 elems)
+    assert sel.selected_size(params, phase=0) == 40
+    assert sel.selected_bytes(params, phase=0) == 160
+    # non-rows selections carry no sub-leaf plan
+    assert select.block_cyclic(2).block_mask(params["emb"]) is None
+    rb = sel.block_mask(params["emb"], phase=1)
+    assert isinstance(rb, RowBlocks) and rb.selected_blocks() == (1,)
+
+
+def test_rows_empty_phase_fails_loudly(problem):
+    loss_fn, params, _ = problem
+    # largest leaf (emb, 12 rows) has 3 blocks of 4 rows → k=5 leaves
+    # phases 3, 4 with nothing to perturb
+    opt = make_opt("spsa", "xla", selection=select.rows(block=4, k=5))
+    state = opt.init(params, seed=0)
+    with pytest.raises(ValueError, match="rows"):
+        jax.jit(opt.step_fn(loss_fn))(params, state, None)
+
+
+def test_rescaled_spsa_refuses_rows():
+    with pytest.raises(ValueError, match="rows"):
+        zo.estimators.rescaled_spsa(selection=select.rows(block=4, k=2))
+
+
+def test_rows_small_leaf_sits_out_late_phases():
+    """A scalar leaf (one block) participates only at phase 0; the selection
+    layer excludes it from later phases instead of failing."""
+    sel = select.rows(block=4, k=2)
+    params = {"s": jnp.float32(1.0), "w": jnp.ones((16, 4))}
+    m0 = sel.leaf_mask(params, 0)
+    m1 = sel.leaf_mask(params, 1)
+    assert m0 == (True, True)
+    assert m1 == (False, True)

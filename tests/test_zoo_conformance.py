@@ -1,9 +1,9 @@
 """Architecture-axis conformance: every registry family under the ZO stack.
 
-The matrix: (family ∈ {dense, moe, ssm, encdec}) × (estimator ∈ {spsa, fzoo})
-× (backend ∈ {xla, pallas-interpret}) × (plan ∈ {local, seed_parallel,
-replay}), asserting on real model forwards what test_exec proves on the toy
-problem:
+The matrix: (family ∈ {dense, moe, ssm, encdec, hybrid}) × (estimator ∈
+{spsa, fzoo}) × (backend ∈ {xla, pallas-interpret}) × (plan ∈ {local,
+seed_parallel, replay}), asserting on real model forwards what test_exec
+proves on the toy problem:
 
 * ``seed_parallel(1)`` ≡ ``local`` BITWISE on every family;
 * a ledger written live replays to the live params within fp accumulation
@@ -39,7 +39,7 @@ import repro.models.rwkv6 as R
 import repro.models.ssm as S
 from repro.tree_utils import tree_max_abs_diff
 
-FAMILIES = ("dense", "moe", "ssm", "encdec")
+FAMILIES = ("dense", "moe", "ssm", "encdec", "hybrid")
 BACKENDS = ("xla", "pallas-interpret")
 STEPS, SEED, BATCH, SEQ = 2, 3, 2, 8
 MOE_GROUPS = 2
