@@ -12,6 +12,11 @@ Three measurements over N synthetic LoRA tenants sharing one frozen base:
   * Hit rate / evictions under a byte budget sized to hold only half the
     tenants, driven by a skewed request mix (the DeltaCache working-set
     story).
+  * SHARED-TEMPLATE prefix economy: waves of template+suffix prompts
+    (serve/tenants/synth.template_requests) through the paged-KV engine —
+    prefill tokens computed vs submitted (ASSERTED < 1x and <= 0.5x) and
+    warm-prefix vs cold TTFT (ASSERTED >= 2x) — the radix-prefix-cache
+    story.
   * Materialization µs vs ledger length, raw replay vs compacted delta+tail.
 
 Emits ``name,us_per_call,derived`` CSV rows and a JSON record to
@@ -30,7 +35,8 @@ from repro.models import bundle
 from repro.serve.engine import ServeEngine
 from repro.serve.tenants import (compact, composition_for_ledger,
                                  lora_runtime, make_lora_tenants, materialize,
-                                 serve_load, synthetic_requests, tenant_name)
+                                 serve_load, synthetic_requests,
+                                 template_requests, tenant_name)
 from repro.serve.tenants.synth import lora_params0
 
 OUT_PATH = os.path.join("results", "bench_serve.json")
@@ -100,6 +106,83 @@ def run():
     emit("serve/hit_rate", 0.0,
          f"{st['hit_rate']:.2f} (evictions={st['evictions']}, "
          f"budget={budget}B)")
+
+    # -- shared-template prefix economy (paged KV + radix cache) ------------ #
+    # Realistic prompt-heavy traffic: every request = one of K fixed task
+    # templates + a short fresh suffix (serve/tenants/synth.template_requests).
+    # Waves of exactly `slots` base-model requests so TTFT is pure prefill
+    # latency (no queue wait).  Cold = fresh engine, empty radix; warm = the
+    # engine that already served the templates.  Both prefill bucket shapes
+    # are pre-compiled on a throwaway engine (the chunk-prefill jit cache is
+    # process-global), so the spread measures computation, not compilation.
+    TPL_SLOTS, TPL_LEN, TPL_MAXLEN = 4, 160, 256
+    TPL_WAVES = 3
+
+    def tpl_wave(seed):
+        return template_requests(TPL_SLOTS, cfg.vocab_size, [None],
+                                 n_templates=2, template_len=TPL_LEN,
+                                 seed=seed, max_new_tokens=NEW_TOKENS,
+                                 template_seed=7, rid0=seed * 100)
+
+    def tpl_engine():
+        return ServeEngine(cfg, base, slots=TPL_SLOTS, max_len=TPL_MAXLEN)
+
+    warmup = tpl_engine()
+    serve_load(warmup, rt, tpl_wave(90))         # compiles cold bucket
+    serve_load(warmup, rt, tpl_wave(91))         # compiles warm bucket
+    cold_tpl = []
+    for i in range(TPL_WAVES):
+        rows_c = serve_load(tpl_engine(), rt, tpl_wave(200 + i))
+        cold_tpl += [r["ttft_s"] * 1e6 for r in rows_c]
+    eng_tpl = tpl_engine()
+    serve_load(eng_tpl, rt, tpl_wave(300))       # populate the radix cache
+    st0 = eng_tpl.prefix_stats()
+    warm_tpl = []
+    for i in range(1, TPL_WAVES + 1):
+        rows_w = serve_load(eng_tpl, rt, tpl_wave(300 + i))
+        warm_tpl += [r["ttft_s"] * 1e6 for r in rows_w]
+    st1 = eng_tpl.prefix_stats()
+    sub = st1["prefill_tokens_submitted"] - st0["prefill_tokens_submitted"]
+    comp_tok = (st1["prefill_tokens_computed"]
+                - st0["prefill_tokens_computed"])
+    if not comp_tok < sub:
+        raise AssertionError(
+            f"shared-template workload computed {comp_tok} of {sub} "
+            "submitted prefill tokens — the radix prefix cache reused "
+            "NOTHING")
+    if comp_tok > 0.5 * sub:
+        raise AssertionError(
+            f"shared-template workload computed {comp_tok}/{sub} prefill "
+            "tokens (> 0.5x submitted) — prefix reuse regressed")
+    cold_tpl.sort()
+    warm_tpl.sort()
+    cold_p50, warm_p50 = _pctl(cold_tpl, 0.5), _pctl(warm_tpl, 0.5)
+    if warm_p50 * 2 > cold_p50:
+        raise AssertionError(
+            f"warm-prefix TTFT p50 {warm_p50:.0f}us is not >=2x better than "
+            f"cold {cold_p50:.0f}us")
+    results["prefix"] = {
+        "template_len": TPL_LEN, "block": eng_tpl.block,
+        "cold_ttft_us": {"p50": cold_p50, "p99": _pctl(cold_tpl, 0.99)},
+        "warm_ttft_us": {"p50": warm_p50, "p99": _pctl(warm_tpl, 0.99)},
+        "warm_speedup": cold_p50 / max(warm_p50, 1e-9),
+        "prefill_tokens_submitted": sub,
+        "prefill_tokens_computed": comp_tok,
+        "computed_over_submitted": comp_tok / max(sub, 1),
+        "prefix_hit_rate": st1["prefix_hit_rate"],
+        "pool_blocks": st1["pool_blocks"],
+        "radix_nodes": st1["radix_nodes"],
+    }
+    emit("serve/prefix_cold_ttft_p50", cold_p50,
+         f"template={TPL_LEN}tok")
+    emit("serve/prefix_warm_ttft_p50", warm_p50,
+         f"x{cold_p50 / max(warm_p50, 1e-9):.1f}_vs_cold")
+    emit("serve/prefix_reuse", 0.0,
+         f"computed={comp_tok}/{sub};hit_rate={st1['prefix_hit_rate']:.2f}")
+    note(f"shared-template workload: {comp_tok}/{sub} prefill tokens "
+         f"computed ({comp_tok / max(sub, 1):.0%}), warm-prefix TTFT p50 "
+         f"{warm_p50 / 1e3:.1f} ms vs cold {cold_p50 / 1e3:.1f} ms "
+         f"({cold_p50 / max(warm_p50, 1e-9):.1f}x)")
 
     # -- materialization cost vs ledger length, raw vs compacted ------------ #
     led = store.ledger(tenant_name(0))

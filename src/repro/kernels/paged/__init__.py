@@ -1,0 +1,3 @@
+from repro.kernels.paged.gather import paged_gather, paged_gather_ref
+
+__all__ = ["paged_gather", "paged_gather_ref"]

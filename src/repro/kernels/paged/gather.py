@@ -1,0 +1,73 @@
+"""``paged_gather`` — block-table KV assembly for the paged serving engine.
+
+The paged KV pool (`repro.serve.paged`) stores every sequence's KV in
+fixed-size token blocks scattered over one pool tensor ``(L, NT, D)``
+(``NT = n_blocks * block`` token rows, ``D = KV·hd`` folded).  Decode needs
+each slot's logical view — the blocks named by its block table, in order —
+assembled into a dense ``(T, D)`` run.  This kernel is that gather:
+
+    out[l, i*block : (i+1)*block, :] = x[l, table[i]*block : …, :]
+
+following the ``rows.py`` tile-skip idiom: the *indices* ride in as a small
+``(n, 1)`` int32 input blocked ``(1, 1)`` per grid step, the payload rows are
+copied block-at-a-time, and the arithmetic is a pure copy — so the kernel is
+bitwise-equal to the XLA gather by construction (``paged_gather_ref``,
+test-enforced).  Unlike ``rows.py`` the table is *runtime* data (block tables
+change every admission), so the source ref stays whole-array and the row
+window is a dynamic slice on the token axis.
+
+Interpret-mode fallback mirrors the other kernels: off-TPU the call runs
+under ``interpret=True`` (CPU CI exercises the real kernel semantics).  On a
+real TPU the whole-pool VMEM residency bounds pool size (~16 MB/core); the
+compiled-Mosaic characterization harness owns that path — a scalar-prefetch
+(``PrefetchScalarGridSpec``) variant that streams blocks HBM→VMEM is the
+recorded follow-up there.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(tab_ref, x_ref, o_ref, *, block: int, cols: int):
+    layer = pl.program_id(0)
+    t = tab_ref[0, 0]
+    o_ref[0] = jax.lax.dynamic_slice(
+        x_ref[layer], (t * block, 0), (block, cols))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def paged_gather(x: jnp.ndarray, table: jnp.ndarray, block: int,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Gather block rows of ``x (L, NT, D)`` by ``table (n,)`` block ids.
+
+    Returns ``(L, n*block, D)`` where entry ``i`` is the ``block`` token rows
+    of pool block ``table[i]``, per layer.  ``table`` entries must lie in
+    ``[0, NT // block)``; the caller pads unused entries with a trash block.
+    """
+    L, NT, D = x.shape
+    n = int(table.shape[0])
+    tab = table.reshape(n, 1).astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, block=block, cols=D),
+        grid=(L, n),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda l, i: (i, 0)),
+            pl.BlockSpec((L, NT, D), lambda l, i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, D), lambda l, i: (l, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, n * block, D), x.dtype),
+        interpret=interpret,
+    )(tab, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def paged_gather_ref(x: jnp.ndarray, table: jnp.ndarray,
+                     block: int) -> jnp.ndarray:
+    """XLA oracle: one advanced-indexing take over expanded token rows."""
+    rows = (table[:, None] * block
+            + jnp.arange(block, dtype=jnp.int32)[None, :]).reshape(-1)
+    return x[:, rows]

@@ -44,6 +44,16 @@ def main():
                          "replayable tail before serving (0 = no compaction)")
     ap.add_argument("--tenant-steps", type=int, default=10,
                     help="fine-tune steps per synthetic tenant")
+    ap.add_argument("--block", type=int, default=16,
+                    help="paged KV block size in tokens (dense/moe engines)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: 2x slot demand)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix prefix cache (paged pool stays)")
+    ap.add_argument("--templates", type=int, default=0,
+                    help="tenant mode: draw prompts from N shared task "
+                         "templates per tenant (Zipf) instead of fully "
+                         "random prompts — exercises the prefix cache")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,11 +74,18 @@ def main():
               f"backend={led.backend})")
 
     engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                         seed=args.seed)
+                         seed=args.seed, block=args.block,
+                         pool_blocks=args.pool_blocks,
+                         prefix_cache=not args.no_prefix_cache)
+    if engine.paged:
+        print(f"[serve] paged KV: block={args.block} tokens, "
+              f"pool={engine.pool.n_blocks} blocks, prefix cache "
+              f"{'off' if args.no_prefix_cache else 'on'}")
 
     if args.tenants > 0:
         from repro.serve.tenants import (lora_runtime, make_lora_tenants,
-                                         serve_load, synthetic_requests)
+                                         serve_load, synthetic_requests,
+                                         template_requests)
         t0 = time.time()
         store = make_lora_tenants(cfg, params, args.tenants,
                                   steps=args.tenant_steps,
@@ -83,9 +100,16 @@ def main():
             print(f"[serve] compacted every ledger to delta + "
                   f"{args.compact_every}-record tail "
                   f"(last: {comp.nbytes} bytes)")
-        tagged = synthetic_requests(args.requests, cfg.vocab_size,
-                                    store.tenants(), seed=args.seed,
-                                    max_new_tokens=args.new_tokens)
+        if args.templates > 0:
+            tagged = template_requests(
+                args.requests, cfg.vocab_size, store.tenants(),
+                n_templates=args.templates,
+                template_len=min(48, args.max_len // 2), seed=args.seed,
+                max_new_tokens=args.new_tokens)
+        else:
+            tagged = synthetic_requests(args.requests, cfg.vocab_size,
+                                        store.tenants(), seed=args.seed,
+                                        max_new_tokens=args.new_tokens)
         t0 = time.time()
         rows = serve_load(engine, runtime, tagged)
         dt = time.time() - t0
@@ -100,6 +124,13 @@ def main():
               f"{st['records_replayed']} ledger records replayed")
         print(f"[serve] TTFT p50 {ttfts[len(ttfts) // 2] * 1e3:.1f} ms / "
               f"p99 {ttfts[int(len(ttfts) * 0.99)] * 1e3:.1f} ms")
+        ps = engine.prefix_stats()
+        print(f"[serve] prefill: {ps['prefill_tokens_computed']}/"
+              f"{ps['prefill_tokens_submitted']} tokens computed "
+              f"({ps['token_reuse_rate']:.0%} reused), prefix hit rate "
+              f"{ps['prefix_hit_rate']:.2f}, "
+              f"{ps['prefill_batches']} prefill batches, "
+              f"{ps['evicted_blocks']} blocks evicted")
         return
 
     key = jax.random.PRNGKey(args.seed)
@@ -122,6 +153,11 @@ def main():
     tokens = sum(len(r.out_ids) for r in reqs)
     print(f"[serve] {len(reqs)} requests / {tokens} tokens in {steps} decode "
           f"steps, {dt:.2f}s ({tokens/dt:.1f} tok/s on this host)")
+    if engine.paged:
+        ps = engine.prefix_stats()
+        print(f"[serve] prefill: {ps['prefill_tokens_computed']}/"
+              f"{ps['prefill_tokens_submitted']} tokens computed, prefix "
+              f"hit rate {ps['prefix_hit_rate']:.2f}")
     for r in reqs[:4]:
         print(f"  req {r.rid}: {r.prompt_ids} -> {r.out_ids}")
 

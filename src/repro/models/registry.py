@@ -281,6 +281,57 @@ class Bundle:
 
         return prefill
 
+    def chunk_prefill_fn(self) -> Callable:
+        """Suffix prefill against a pre-populated per-request cache — the
+        paged serving engine's batched-prefill primitive.
+
+        ``(params, batch) -> (logits (B, S, V), cache)`` where batch carries
+
+        * ``"tokens"``    (B, S)  right-padded suffix tokens;
+        * ``"cache"``     stacked (L, B, cap, KV, hd) with per-request
+                          ``"pos"`` (L, B, cap): rows [0, plen_b) hold request
+                          b's already-computed prefix KV (pos = arange), the
+                          rest are -1;
+        * ``"cache_pos"`` (B,)    per-request prefix lengths.
+
+        Each request runs at its own absolute positions ``plen_b +
+        arange(S)`` and DUS-writes its suffix KV at ``[plen_b, plen_b+S)`` —
+        the scalar-``cache_pos`` branch of ``self_attention``, vmapped over
+        requests (cache axis 1, matching the serving slot axis).  Rows past
+        the real suffix hold junk KV at future positions; the causal mask
+        excludes them from every real query, and the engine never copies them
+        out.  Only cache families with absolute-position rows support this
+        (no SWA ring, no recurrent state): dense/moe with sliding_window=0.
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe") or cfg.sliding_window != 0:
+            raise NotImplementedError(
+                f"chunk_prefill_fn: family={cfg.family!r} with "
+                f"sliding_window={cfg.sliding_window} has no "
+                "absolute-position KV rows to resume from; the serving "
+                "engine's legacy whole-prompt prefill handles it")
+
+        def one(params, tokens, ck, cv, cpos, plen):
+            S = tokens.shape[0]
+            positions = plen + jnp.arange(S, dtype=jnp.int32)
+            cache = {"k": ck[:, None], "v": cv[:, None], "pos": cpos}
+            r = transformer.forward(cfg, params, tokens=tokens[None],
+                                    positions=positions, cache=cache,
+                                    cache_pos=plen)
+            return r.logits[0], (r.cache["k"][:, 0], r.cache["v"][:, 0],
+                                 r.cache["pos"])
+
+        def chunk_prefill(params, batch):
+            c = batch["cache"]
+            logits, (ck, cv, cpos) = jax.vmap(
+                one, in_axes=(None, 0, 1, 1, 1, 0),
+                out_axes=(0, (1, 1, 1)))(
+                params, batch["tokens"], c["k"], c["v"], c["pos"],
+                batch["cache_pos"])
+            return logits, {"k": ck, "v": cv, "pos": cpos}
+
+        return chunk_prefill
+
     def decode_fn(self) -> Callable:
         cfg = self.cfg
 

@@ -5,13 +5,30 @@ produces (a model whose checkpoints are tiny seed-chains — see
 checkpoint/manager.py):
 
   * fixed number of SLOTS (the decode batch); each slot holds one request's
-    cache row and generation state;
+    generation state;
   * ``submit`` queues requests; ``step`` runs one decode for every live slot
     (one jitted serve_step, all slots in lockstep);
-  * prefill runs per-request (padded to the slot width) and writes that
-    slot's cache row;
   * greedy or temperature sampling; EOS or max-token termination frees the
     slot for the next queued request.
+
+KV layout is PAGED for cache families with absolute-position rows
+(dense/moe, sliding_window=0): KV lives in fixed-size token blocks owned by
+a refcounted ``KVBlockPool`` (serve/paged.py), each slot holds a block
+table, and a per-adapter-scoped ``RadixCache`` lets a request whose prompt
+extends an already-served prefix prefill only the suffix.  Prefill is
+CHUNKED and BATCHED: one admission wave's uncached suffixes are packed into
+length-bucketed groups (pad widths derived from the prompt limit, powers of
+two — no hard-coded width) and each group runs as ONE jitted
+``chunk_prefill`` call resuming from the gathered prefix KV.  Decode
+assembles each slot's logical cache row from its block table (XLA gather by
+default; the ``kernels/paged`` pallas kernel under REPRO_BACKEND=pallas),
+feeds the UNCHANGED registry decode, and scatters the newly written row back
+into the pool.  The contract is token-identity: output ids with the prefix
+cache on equal output ids with it off (test_serve_paged.py).
+
+SWA/ring caches and recurrent families keep the legacy per-slot dense path
+(their cache rows are not absolute-position addressed), with the same
+bucket-derived prefill widths.
 
 Family dispatch (cache / recurrent state / cross-attention) reuses
 models.registry's prefill/decode fns.
@@ -30,11 +47,15 @@ decode step batches heterogeneous adapters:
     (cache/state axis 1) into the step result.
 
 Requests with no adapter and engines with no registered adapters take the
-original single-model path unchanged.
+original single-model path unchanged.  Prefix-cache scoping follows adapter
+identity: each adapter name roots its own radix subtree, so KV computed
+under one tenant's delta is never served as another's (or the base's).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 import time
 from collections import deque
 from typing import Optional
@@ -45,6 +66,8 @@ import numpy as np
 
 from repro.models import bundle as make_bundle
 from repro.models.config import ModelConfig
+from repro.serve.paged import (KVBlockPool, RadixCache, bucket_for,
+                               pow2ceil, prefill_buckets)
 
 
 @dataclasses.dataclass
@@ -59,9 +82,24 @@ class Request:
     done: bool = False
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _chunk_prefill(cfg, params, tokens, ck, cv, cpos, plens):
+    """Module-level jit so the compile cache is keyed on (cfg, shapes) and
+    shared by every engine in the process — a second engine (or a second
+    traffic wave) over the same config re-uses the bucket's executable
+    instead of re-compiling per engine instance."""
+    fn = make_bundle(cfg).chunk_prefill_fn()
+    return fn(params, {"tokens": tokens,
+                       "cache": {"k": ck, "v": cv, "pos": cpos},
+                       "cache_pos": plens})
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, slots: int = 4,
-                 max_len: int = 256, eos_id: Optional[int] = None, seed: int = 0):
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 seed: int = 0, block: int = 16,
+                 pool_blocks: Optional[int] = None, prefix_cache: bool = True,
+                 paged: Optional[bool] = None, gather_impl: str = "auto"):
         assert cfg.family in ("dense", "moe", "hybrid", "ssm"), cfg.family
         self.cfg = cfg
         self.params = params
@@ -71,10 +109,32 @@ class ServeEngine:
         self.bundle = make_bundle(cfg)
         self.key = jax.random.PRNGKey(seed)
 
+        paged_ok = cfg.family in ("dense", "moe") and cfg.sliding_window == 0
+        self.paged = paged_ok if paged is None else bool(paged)
+        if self.paged and not paged_ok:
+            raise ValueError(
+                f"paged KV requires absolute-position cache rows; family="
+                f"{cfg.family!r} sliding_window={cfg.sliding_window} keeps "
+                "the legacy dense-slab path (pass paged=None/False)")
+
         from repro.models import attention as attn_lib
         from repro.models import ssm as ssm_lib
         from repro.models import rwkv6 as rwkv_lib
-        if cfg.family != "ssm":
+        self.pool = self.radix = None
+        if self.paged:
+            self.cache = None                  # assembled per decode step
+            self.block = block
+            self._nblk_slot = -(-max_len // block)
+            if pool_blocks is None:
+                pool_blocks = 1 + 2 * slots * self._nblk_slot
+            self.pool = KVBlockPool(cfg, pool_blocks, block, cfg.param_dtype)
+            self.radix = RadixCache(self.pool) if prefix_cache else None
+            self.tables: list[list] = [[] for _ in range(slots)]
+            impl = gather_impl
+            if impl == "auto":
+                impl = os.environ.get("REPRO_BACKEND", "xla")
+            self._gather_pallas = impl == "pallas"
+        elif cfg.family != "ssm":
             self.cache = attn_lib.init_cache(cfg, slots, max_len,
                                              cfg.param_dtype, per_slot=True)
         else:
@@ -99,9 +159,15 @@ class ServeEngine:
         self._stack = None               # (vidx, [stacked leaf arrays])
 
         self._decode = jax.jit(self.bundle.decode_fn())
-        self._prefill_len = 64                         # padded prefill width
+        # prefill pad widths: powers of two derived from the prompt limit
+        # (replaces the old hard-coded 64-wide pad)
+        self._buckets = prefill_buckets(self._prompt_limit())
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("plen",))
+        self.stats = {"requests": 0, "prefill_tokens_submitted": 0,
+                      "prefill_tokens_computed": 0, "prefix_hits": 0,
+                      "prefix_tokens_reused": 0, "prefill_batches": 0,
+                      "evicted_blocks": 0}
 
     # ------------------------------------------------------------------ #
     # Adapters
@@ -111,9 +177,13 @@ class ServeEngine:
         delta is pure leaf replacement, so the per-adapter 'full tree' is a
         view sharing every unchanged buffer with the base — registering many
         adapters costs only their delta buffers.  Re-registering the same
-        delta object is a no-op (the cache-hit path)."""
+        delta object is a no-op (the cache-hit path); re-registering a
+        DIFFERENT delta under an existing name invalidates that name's radix
+        scope (its cached prefix KV was computed under the old weights)."""
         if self.adapters.get(name) is delta:
             return
+        if self.radix is not None and name in self.adapters:
+            self.radix.drop_scope(name)
         self._adapter_params[name] = delta.apply(self.params)  # shape check
         self.adapters[name] = delta
         self._stack_sig = None          # stacked leaves may be stale
@@ -140,25 +210,25 @@ class ServeEngine:
         return r.logits, r.cache, r.ssm_state
 
     def _prompt_limit(self) -> int:
-        """Longest admissible prompt: the slot cache row must hold the whole
-        prefix (SWA caches are ``sliding_window`` wide) and one decode
-        position must remain below ``max_len``."""
+        """Longest admissible prompt: the slot's KV capacity must hold the
+        whole prefix (SWA caches are ``sliding_window`` wide; paged tables
+        hold ceil(max_len/block) blocks) and one decode position must remain
+        below ``max_len``."""
         limit = self.max_len - 1
-        if self.cache is not None:
+        if not self.paged and self.cache is not None:
             limit = min(limit, int(self.cache["k"].shape[2]))
         return limit
 
     def submit(self, req: Request) -> None:
         limit = self._prompt_limit()
         if len(req.prompt_ids) > limit:
-            # admitting would write a truncated prefix into the slot's cache
-            # row and decode against silently-corrupt context — refuse here
+            # admitting would write a truncated prefix into the slot's KV
+            # and decode against silently-corrupt context — refuse here
             raise ValueError(
                 f"request {req.rid}: prompt of {len(req.prompt_ids)} tokens "
                 f"exceeds this engine's limit of {limit} (max_len="
-                f"{self.max_len}, cache rows hold "
-                f"{int(self.cache['k'].shape[2]) if self.cache is not None else self.max_len} "
-                "positions); raise max_len or truncate the prompt upstream")
+                f"{self.max_len}); raise max_len or truncate the prompt "
+                "upstream")
         if req.adapter is not None and req.adapter not in self.adapters:
             raise KeyError(
                 f"request {req.rid}: adapter {req.adapter!r} is not "
@@ -167,25 +237,41 @@ class ServeEngine:
         req.times.setdefault("queued", time.perf_counter())
         self.queue.append(req)
 
+    def _activate(self, slot: int, req: Request) -> None:
+        self.active[slot] = req
+        if self.slot_adapter[slot] != req.adapter:
+            self.slot_adapter[slot] = req.adapter
+            self._stack_sig = None
+        self.pos[slot] = len(req.prompt_ids)
+        req.times.setdefault("prefill", time.perf_counter())
+
+    def _release_slot(self, slot: int) -> None:
+        self.active[slot] = None
+        if self.paged:
+            for b in self.tables[slot]:
+                self.pool.unref(b)
+            self.tables[slot] = []
+
     def _admit(self) -> None:
+        if self.paged:
+            self._admit_paged()
+            return
         for slot in range(self.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            npr = len(req.prompt_ids)
             if self.cfg.family in ("ssm", "hybrid"):
                 # recurrent state integrates every token it sees: prefill
                 # EXACT length (padding after the prompt would corrupt the
                 # carried state); jit buckets by prompt length.
-                plen = len(req.prompt_ids)
+                plen = npr
             else:
-                plen = self._prefill_len
-                while plen < len(req.prompt_ids):
-                    plen *= 2
+                plen = bucket_for(npr, self._buckets)
             toks = np.zeros((1, plen), np.int32)
-            toks[0, :len(req.prompt_ids)] = req.prompt_ids
+            toks[0, :npr] = req.prompt_ids
             logits, kv, state = self._prefill(self._params_for(req.adapter),
                                               jnp.asarray(toks), plen=plen)
-            npr = len(req.prompt_ids)
             # write this request's prefix into the engine-wide slot caches
             if self.cache is not None and kv is not None:
                 span = min(npr, self.cache["k"].shape[2])
@@ -204,12 +290,200 @@ class ServeEngine:
             last = logits[0, npr - 1, :self.cfg.vocab_size]
             tok = self._sample(last, req.temperature)
             req.out_ids.append(int(tok))
-            self.active[slot] = req
-            if self.slot_adapter[slot] != req.adapter:
-                self.slot_adapter[slot] = req.adapter
-                self._stack_sig = None
-            self.pos[slot] = npr
-            req.times.setdefault("prefill", time.perf_counter())
+            self.stats["requests"] += 1
+            self.stats["prefill_tokens_submitted"] += npr
+            self.stats["prefill_tokens_computed"] += npr
+            self.stats["prefill_batches"] += 1
+            self._activate(slot, req)
+
+    # ------------------------------------------------------------------ #
+    # Paged admission: radix match -> bucketed batched suffix prefill
+    # ------------------------------------------------------------------ #
+    def _alloc_blocks(self, n: int) -> list:
+        if n == 0:
+            return []
+        if self.radix is not None and n > self.pool.n_free:
+            self.stats["evicted_blocks"] += self.radix.evict(
+                n - self.pool.n_free)
+        return self.pool.alloc(n)
+
+    def _gather_blocks(self, tabs: np.ndarray):
+        """Assemble (L, B, nblk·block, KV, hd) K and V from per-row block
+        tables ``tabs (B, nblk)`` (trash-padded).  XLA advanced-indexing
+        gather by default; the pallas kernel under REPRO_BACKEND=pallas."""
+        L, NT, KV, hd = self.pool.k.shape
+        B, nblk = tabs.shape
+        flat = jnp.asarray(tabs.reshape(-1), jnp.int32)
+        xk = self.pool.k.reshape(L, NT, KV * hd)
+        xv = self.pool.v.reshape(L, NT, KV * hd)
+        if self._gather_pallas:
+            from repro.kernels.paged import paged_gather
+            interpret = jax.default_backend() != "tpu"
+            gk = paged_gather(xk, flat, self.block, interpret=interpret)
+            gv = paged_gather(xv, flat, self.block, interpret=interpret)
+        else:
+            from repro.kernels.paged import paged_gather_ref
+            gk = paged_gather_ref(xk, flat, self.block)
+            gv = paged_gather_ref(xv, flat, self.block)
+        shape = (L, B, nblk * self.block, KV, hd)
+        return gk.reshape(shape), gv.reshape(shape)
+
+    def _admit_paged(self) -> None:
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        pending = []
+        while free and self.queue:
+            pending.append((free.pop(0), self.queue.popleft()))
+        if not pending:
+            return
+        blk = self.block
+        plans = []
+        for slot, req in pending:
+            if self.radix is not None:
+                cached, nc = self.radix.match(req.adapter, req.prompt_ids)
+            else:
+                cached, nc = [], 0
+            npr = len(req.prompt_ids)
+            new_blocks = self._alloc_blocks(-(-npr // blk) - nc // blk)
+            for b in cached:
+                self.pool.ref(b)          # slot's own pin on shared prefix
+            st = self.stats
+            st["requests"] += 1
+            st["prefill_tokens_submitted"] += npr
+            st["prefill_tokens_computed"] += npr - nc
+            if nc:
+                st["prefix_hits"] += 1
+                st["prefix_tokens_reused"] += nc
+            plans.append((slot, req, nc, cached, new_blocks))
+        groups: dict = {}
+        for plan in plans:
+            _, req, nc, _, _ = plan
+            pcap = blk * pow2ceil(nc // blk) if nc else 0
+            scap = bucket_for(len(req.prompt_ids) - nc, self._buckets)
+            groups.setdefault((req.adapter, pcap, scap), []).append(plan)
+        for (adapter, pcap, scap), grp in groups.items():
+            self._prefill_group(adapter, pcap, scap, grp)
+
+    def _prefill_group(self, adapter, pcap: int, scap: int, grp: list) -> None:
+        """One jitted chunk-prefill for every queued request sharing
+        (adapter, prefix-pad, suffix-bucket): gather cached prefix KV from
+        the pool, run the batched suffix forward, scatter the new suffix KV
+        into each request's fresh blocks, thread the full chunks into the
+        radix cache, and activate the slots."""
+        cfg = self.cfg
+        blk = self.block
+        L, _, KV, hd = self.pool.k.shape
+        B = len(grp)
+        dtype = cfg.param_dtype
+        toks = np.zeros((B, scap), np.int32)
+        plens = np.zeros((B,), np.int32)
+        for i, (_, req, nc, _, _) in enumerate(grp):
+            suf = req.prompt_ids[nc:]
+            toks[i, :len(suf)] = suf
+            plens[i] = nc
+        if pcap:
+            tabs = np.zeros((B, pcap // blk), np.int32)
+            ppos = np.full((B, pcap), -1, np.int32)
+            for i, (_, _, nc, cached, _) in enumerate(grp):
+                tabs[i, :len(cached)] = cached
+                ppos[i, :nc] = np.arange(nc, dtype=np.int32)
+            pk, pv = self._gather_blocks(tabs)
+            ppos_j = jnp.asarray(ppos)
+        else:
+            pk = jnp.zeros((L, B, 0, KV, hd), dtype)
+            pv = jnp.zeros((L, B, 0, KV, hd), dtype)
+            ppos_j = jnp.zeros((B, 0), jnp.int32)
+        ck = jnp.concatenate([pk, jnp.zeros((L, B, scap, KV, hd), dtype)],
+                             axis=2)
+        cv = jnp.concatenate([pv, jnp.zeros((L, B, scap, KV, hd), dtype)],
+                             axis=2)
+        cpos = jnp.concatenate(
+            [jnp.broadcast_to(ppos_j[None], (L, B, pcap)),
+             jnp.full((L, B, scap), -1, jnp.int32)], axis=2)
+        logits, cache = _chunk_prefill(cfg, self._params_for(adapter),
+                                       jnp.asarray(toks), ck, cv, cpos,
+                                       jnp.asarray(plens))
+        self.stats["prefill_batches"] += 1
+        # last real prompt logit per request, one bucketed gather + transfer
+        s_last = np.array([len(req.prompt_ids) - nc - 1
+                           for _, req, nc, _, _ in grp], np.int32)
+        last = np.asarray(jnp.take_along_axis(
+            logits, jnp.asarray(s_last)[:, None, None], axis=1
+        )[:, 0, :cfg.vocab_size])
+        # suffix KV landed at cache rows [plen, plen+scap) — row index IS the
+        # absolute position.  Extract the whole bucketed window per request
+        # (one gather, shape keyed on (pcap, scap) only) and scatter real
+        # rows into each request's fresh blocks; pad rows go to the trash.
+        sidx = (jnp.asarray(plens)[:, None]
+                + jnp.arange(scap, dtype=jnp.int32)[None])
+        sel = sidx[None, :, :, None, None]
+        ksuf = jnp.take_along_axis(cache["k"], sel, axis=2)
+        vsuf = jnp.take_along_axis(cache["v"], sel, axis=2)
+        L_, B_ = ksuf.shape[:2]
+        rows = np.zeros((B_ * scap,), np.int32)         # default: trash row 0
+        for i, (slot, req, nc, cached, new_blocks) in enumerate(grp):
+            npr = len(req.prompt_ids)
+            req.out_ids.append(int(self._sample(jnp.asarray(last[i]),
+                                                req.temperature)))
+            for j in range(npr - nc):
+                p = nc + j
+                rows[i * scap + j] = (new_blocks[(p - nc) // blk] * blk
+                                      + p % blk)
+            self.tables[slot] = list(cached) + list(new_blocks)
+            if self.radix is not None:
+                chunk_blocks = (list(cached)
+                                + list(new_blocks[:npr // blk - nc // blk]))
+                if chunk_blocks:
+                    self.radix.insert(req.adapter, req.prompt_ids,
+                                      chunk_blocks)
+            self._activate(slot, req)
+        self.pool.write(rows,
+                        ksuf.reshape(L_, B_ * scap, *ksuf.shape[3:]),
+                        vsuf.reshape(L_, B_ * scap, *vsuf.shape[3:]))
+
+    # ------------------------------------------------------------------ #
+    # Paged decode: block-table gather -> registry decode -> row writeback
+    # ------------------------------------------------------------------ #
+    def _ensure_decode_blocks(self, live: list) -> None:
+        blk = self.block
+        for s in live:
+            bi = int(self.pos[s]) // blk
+            while len(self.tables[s]) <= bi:
+                self.tables[s].extend(self._alloc_blocks(1))
+
+    def _assemble_decode_cache(self) -> dict:
+        """Dense (L, slots, T, KV, hd) view of every slot's block table,
+        T = ceil(max_len/block)·block — STATIC, so the decode executable
+        compiles once.  Inactive slots gather the trash block with pos=-1
+        everywhere; their masked junk writes are never copied back."""
+        blk = self.block
+        T = self._nblk_slot * blk
+        tabs = np.zeros((self.slots, self._nblk_slot), np.int32)
+        valid = np.zeros((self.slots, 1), np.int32)
+        for s in range(self.slots):
+            tabs[s, :len(self.tables[s])] = self.tables[s]
+            if self.active[s] is not None:
+                valid[s, 0] = int(self.pos[s])
+        gk, gv = self._gather_blocks(tabs)
+        ar = np.arange(T, dtype=np.int32)[None]
+        pos_rows = np.where(ar < valid, ar, -1)
+        L = self.pool.k.shape[0]
+        cpos = jnp.broadcast_to(jnp.asarray(pos_rows)[None],
+                                (L, self.slots, T))
+        return {"k": gk, "v": gv, "pos": cpos}
+
+    def _writeback_decode(self, live: list) -> None:
+        """Scatter each live slot's freshly written decode row (cache row
+        pos[s] — absolute position) back into its tail pool block."""
+        blk = self.block
+        idx = jnp.asarray(live)
+        pj = jnp.asarray(self.pos[np.asarray(live)])
+        krow = self.cache["k"][:, idx, pj]             # (L, n, KV, hd)
+        vrow = self.cache["v"][:, idx, pj]
+        rows = np.array(
+            [self.tables[s][int(self.pos[s]) // blk] * blk
+             + int(self.pos[s]) % blk for s in live], np.int32)
+        self.pool.write(rows, krow, vrow)
+        self.cache = None
 
     def _sample(self, logits: jnp.ndarray, temperature: float):
         if temperature <= 0:
@@ -316,6 +590,9 @@ class ServeEngine:
         live = [s for s, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
+        if self.paged:
+            self._ensure_decode_blocks(live)
+            self.cache = self._assemble_decode_cache()
         toks = np.zeros((self.slots, 1), np.int32)
         for s in live:
             toks[s, 0] = self.active[s].out_ids[-1]
@@ -345,6 +622,8 @@ class ServeEngine:
                                     self.cache)
         else:
             logits = self._grouped_decode(toks, live)
+        if self.paged:
+            self._writeback_decode(live)
         now = time.perf_counter()
         for s in live:
             req = self.active[s]
@@ -358,8 +637,24 @@ class ServeEngine:
                     or self.pos[s] >= self.max_len - 1):
                 req.done = True
                 req.times["done"] = time.perf_counter()
-                self.active[s] = None
+                self._release_slot(s)
         return len(live)
+
+    def prefix_stats(self) -> dict:
+        """Prefill-economy counters: tokens submitted vs actually computed,
+        request-level prefix hits, blocks evicted.  ``token_reuse_rate`` is
+        the fraction of submitted prompt tokens served from the radix cache."""
+        st = dict(self.stats)
+        st["prefix_hit_rate"] = (st["prefix_hits"] / st["requests"]
+                                 if st["requests"] else 0.0)
+        st["token_reuse_rate"] = (
+            st["prefix_tokens_reused"] / st["prefill_tokens_submitted"]
+            if st["prefill_tokens_submitted"] else 0.0)
+        if self.pool is not None:
+            st["pool_blocks"] = self.pool.n_blocks
+            st["pool_free_blocks"] = self.pool.n_free
+            st["radix_nodes"] = self.radix.n_nodes if self.radix else 0
+        return st
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

@@ -1,0 +1,288 @@
+"""Paged KV-block pool + radix prefix cache for the serving engine.
+
+The engine's original KV layout was a dense per-slot slab — every slot owns
+``(L, max_len, KV, hd)`` rows whether its request uses 5 tokens or 250, and
+every request recomputes its full prompt even when thousands of requests
+share the same task template.  This module replaces that with the vLLM-style
+paged layout, sized for what ZO serving actually sees (few-hundred-token
+classification prompts dominated by shared templates — PAPER §3):
+
+``KVBlockPool``
+    One pool tensor per K and V, ``(L, n_blocks·block, KV, hd)``: KV lives in
+    fixed-size token *blocks* (16/32 tokens).  Blocks are refcounted; a block
+    is shared freely between a decoding slot and the prefix cache (and
+    between slots) because prefix KV is immutable once written — decode
+    writes always land in a block owned by exactly one slot (the tail block
+    the slot allocated for itself).  Block 0 is the *trash block*: it is
+    permanently pinned and absorbs the masked junk writes of inactive decode
+    rows, so block tables can always be padded to a static width.
+
+``RadixCache``
+    A trie over ``block``-sized token chunks whose nodes each pin one pool
+    block (the trie holds its own ref).  Lookup walks the prompt chunk by
+    chunk and returns the longest cached prefix — ALWAYS strictly shorter
+    than the prompt, so prefill still produces at least one real suffix
+    position to sample the first token from.  Scoping rule: every adapter
+    identity gets its own root (``scope`` = adapter name, ``None`` = base),
+    because adapter deltas change attention projections — a prefix computed
+    under tenant A's LoRA is NOT the base model's prefix for those tokens,
+    and must never be served as one.  Eviction is LRU over *unpinned leaves*:
+    a node can be dropped only if it has no children and no one but the trie
+    holds its block (``refs == 1``) — interior nodes and blocks live in some
+    slot's table are never touched.
+
+Bucket helpers (``pow2ceil`` / ``prefill_buckets``) replace the old
+hard-coded ``_prefill_len = 64``: pad widths are powers of two derived from
+the engine's actual prompt limit, so a 65-token prompt compiles the 128
+bucket instead of silently interacting with a fixed 64.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PoolExhaustedError(RuntimeError):
+    """The pool has fewer free blocks than an allocation needs — after radix
+    eviction has already been tried.  Raise loudly rather than silently
+    dropping KV: the caller must raise ``pool_blocks`` or lower ``slots``."""
+
+
+def pow2ceil(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def prefill_buckets(limit: int, lo: int = 16) -> tuple:
+    """Static pad widths for prefill, derived from the engine's prompt
+    ``limit`` (not a magic constant): powers of two from ``lo`` up to
+    ``pow2ceil(limit)``.  Every admissible prompt maps to the first bucket
+    that holds it, so the jit cache is bounded at log2(limit) entries."""
+    top = pow2ceil(max(limit, lo))
+    return tuple(itertools.takewhile(
+        lambda b: b <= top, (lo * 2 ** i for i in range(64))))
+
+
+def bucket_for(n: int, buckets: tuple) -> int:
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"length {n} exceeds largest prefill bucket "
+                     f"{buckets[-1]} (buckets={buckets})")
+
+
+# --------------------------------------------------------------------------- #
+class KVBlockPool:
+    """Refcounted pool of fixed-size KV token blocks.
+
+    ``k``/``v`` are ``(L, n_blocks·block, KV, hd)``; block ``b`` owns token
+    rows ``[b·block, (b+1)·block)``.  Refcounts are host-side ints: 0 = free,
+    and a block may be referenced simultaneously by the radix trie and any
+    number of slot tables.  Block 0 (``trash``) is pinned forever and used to
+    pad block tables to static shapes.
+    """
+
+    def __init__(self, cfg, n_blocks: int, block: int, dtype):
+        assert n_blocks >= 2, "pool needs the trash block plus one real block"
+        L, KV, hd = cfg.n_layers, cfg.kv_heads, cfg.hd
+        self.block = block
+        self.n_blocks = n_blocks
+        self.k = jnp.zeros((L, n_blocks * block, KV, hd), dtype)
+        self.v = jnp.zeros((L, n_blocks * block, KV, hd), dtype)
+        self.refs = [0] * n_blocks
+        self.refs[0] = 1                          # trash: pinned forever
+        self.trash = 0
+        self._free = list(range(n_blocks - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list:
+        """Take ``n`` blocks (each with refcount 1).  Raises
+        ``PoolExhaustedError`` if the free list is short — callers evict
+        through the radix cache first and re-try."""
+        if n > len(self._free):
+            raise PoolExhaustedError(
+                f"need {n} KV blocks, only {len(self._free)} of "
+                f"{self.n_blocks} free (block={self.block} tokens); raise "
+                "pool_blocks or let the prefix cache evict")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self.refs[b] = 1
+        return out
+
+    def ref(self, b: int) -> None:
+        assert self.refs[b] > 0, f"ref on free block {b}"
+        self.refs[b] += 1
+
+    def unref(self, b: int) -> None:
+        assert self.refs[b] > 0, f"unref on free block {b}"
+        self.refs[b] -= 1
+        if self.refs[b] == 0:
+            self._free.append(b)
+
+    def write(self, rows: np.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Scatter token rows: ``k``/``v`` are ``(L, n, KV, hd)`` landing at
+        pool token-row indices ``rows (n,)`` (row = block_id·block + offset).
+
+        The row count is padded to a power of two with TRASH-block rows
+        (junk by contract) so the jitted scatter compiles O(log) executables
+        instead of one per distinct suffix-length sum."""
+        n = int(rows.shape[0])
+        m = pow2ceil(max(n, 1))
+        if m != n:
+            rows = np.concatenate(
+                [np.asarray(rows, np.int32),
+                 np.zeros((m - n,), np.int32)])        # trash rows
+            pad = ((0, 0), (0, m - n)) + ((0, 0),) * (k.ndim - 2)
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+        idx = jnp.asarray(rows, jnp.int32)
+        self.k = _scatter_rows(self.k, idx, k)
+        self.v = _scatter_rows(self.v, idx, v)
+
+
+@jax.jit
+def _scatter_rows(dst, idx, src):
+    """``dst (L, NT, ...)[:, idx] = src`` — jitted so repeated pool writes of
+    a bucketed shape reuse one executable.  Duplicate indices (trash-row
+    padding) may land in any order; the trash block holds junk by contract."""
+    return dst.at[:, idx].set(src, unique_indices=False)
+
+
+# --------------------------------------------------------------------------- #
+class _Node:
+    __slots__ = ("chunk", "block", "children", "parent", "last_use")
+
+    def __init__(self, chunk, block, parent):
+        self.chunk = chunk          # tuple of ``block``-many token ids
+        self.block = block          # pool block id this node pins
+        self.children = {}          # chunk tuple -> _Node
+        self.parent = parent        # _Node | scope root dict sentinel (None)
+        self.last_use = 0
+
+
+class RadixCache:
+    """Prefix trie over block-sized token chunks, scoped per adapter.
+
+    Each node pins exactly one pool block (the trie's own ref).  ``match``
+    returns (cached block ids, cached token count) for the longest cached
+    prefix that still leaves >= 1 prompt token uncached; ``insert`` records a
+    freshly prefilled prompt's full chunks; ``evict`` releases LRU unpinned
+    leaves.  All bookkeeping is host-side — the KV bytes themselves never
+    move on a hit.
+    """
+
+    def __init__(self, pool: KVBlockPool):
+        self.pool = pool
+        self._roots: dict = {}               # scope -> {chunk: _Node}
+        self._clock = 0
+        self.n_nodes = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def match(self, scope, tokens) -> tuple:
+        """Longest cached prefix of ``tokens`` under ``scope``; strictly
+        shorter than the prompt so at least one suffix token remains to
+        prefill (the first sampled token needs a real logit row)."""
+        blk = self.pool.block
+        cur = self._roots.get(scope)
+        blocks: list = []
+        end = 0
+        t = self._tick()
+        while cur is not None and end + blk < len(tokens):
+            child = cur.get(tuple(tokens[end:end + blk]))
+            if child is None:
+                break
+            child.last_use = t
+            blocks.append(child.block)
+            end += blk
+            cur = child.children
+        return blocks, end
+
+    def insert(self, scope, tokens, chunk_blocks: list) -> None:
+        """Record a prefilled prompt: ``chunk_blocks[i]`` is the pool block
+        holding tokens ``[i·blk, (i+1)·blk)`` (matched prefix blocks first,
+        then the slot's fresh blocks).  Existing nodes are kept (a same-wave
+        duplicate keeps its private copy, unshared); new nodes take one trie
+        ref on their block."""
+        blk = self.pool.block
+        cur = self._roots.setdefault(scope, {})
+        parent = None
+        t = self._tick()
+        for i, b in enumerate(chunk_blocks):
+            chunk = tuple(tokens[i * blk:(i + 1) * blk])
+            node = cur.get(chunk)
+            if node is None:
+                node = _Node(chunk, b, parent)
+                cur[chunk] = node
+                self.pool.ref(b)
+                self.n_nodes += 1
+            node.last_use = t
+            parent = node
+            cur = node.children
+
+    # -- eviction ---------------------------------------------------------- #
+    def _leaves(self):
+        out = []
+        stack = [n for root in self._roots.values() for n in root.values()]
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                out.append(n)
+        return out
+
+    def evict(self, n_blocks: int) -> int:
+        """Release up to ``n_blocks`` pool blocks, LRU leaves first.  A leaf
+        is evictable only when the trie holds the ONLY ref on its block
+        (``refs == 1``): blocks pinned by a live slot's table — or interior
+        nodes, which always have children — are never released.  Removing a
+        leaf may expose its parent as the next candidate."""
+        freed = 0
+        while freed < n_blocks:
+            cands = [n for n in self._leaves() if self.pool.refs[n.block] == 1]
+            if not cands:
+                break
+            victim = min(cands, key=lambda n: n.last_use)
+            holder = (victim.parent.children if victim.parent is not None
+                      else self._first_root_holding(victim))
+            del holder[victim.chunk]
+            self.pool.unref(victim.block)
+            self.n_nodes -= 1
+            freed += 1
+        return freed
+
+    def _first_root_holding(self, node: "_Node") -> dict:
+        for root in self._roots.values():
+            if root.get(node.chunk) is node:
+                return root
+        raise KeyError("radix node detached from every scope root")
+
+    def drop_scope(self, scope) -> int:
+        """Invalidate every cached prefix of one adapter identity (called
+        when an adapter re-registers with different weights — its old KV is
+        wrong, not merely stale).  Blocks still pinned by live slots survive
+        in the pool until those slots release them."""
+        root = self._roots.pop(scope, None)
+        if root is None:
+            return 0
+        dropped = 0
+        stack = list(root.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self.pool.unref(n.block)
+            self.n_nodes -= 1
+            dropped += 1
+        return dropped

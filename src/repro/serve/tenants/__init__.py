@@ -23,11 +23,12 @@ from repro.serve.tenants.store import (AdapterDelta, AdapterStore,
                                        LedgerHashMismatchError)
 from repro.serve.tenants.synth import (lora_runtime, make_lora_tenants,
                                        serve_load, synthetic_requests,
-                                       tenant_name)
+                                       template_requests, tenant_name)
 
 __all__ = [
     "AdapterDelta", "AdapterStore", "CompactedAdapter", "DeltaCache",
     "LedgerHashMismatchError", "TenantRuntime", "compact",
     "composition_for_ledger", "lora_runtime", "make_lora_tenants",
-    "materialize", "serve_load", "synthetic_requests", "tenant_name",
+    "materialize", "serve_load", "synthetic_requests", "template_requests",
+    "tenant_name",
 ]

@@ -120,6 +120,47 @@ def synthetic_requests(n_requests: int, vocab_size: int, tenants: list,
     return out
 
 
+def template_requests(n_requests: int, vocab_size: int, tenants: list,
+                      n_templates: int = 4, template_len: int = 48,
+                      suffix_len: tuple = (2, 8), seed: int = 0,
+                      max_new_tokens: int = 8, skew: float = 1.2,
+                      rid0: int = 0, template_seed=None) -> list:
+    """``[(tenant, Request), ...]`` with the SHARED-TEMPLATE shape real
+    prompt-heavy ZO workloads have (paper §3: classification/MC prompts =
+    one task template + a short per-example suffix).
+
+    Each tenant owns ``n_templates`` fixed ``template_len``-token templates;
+    every request draws a template Zipf-style (``skew`` > 0 concentrates
+    traffic on low template indices — the regime where a radix prefix cache
+    pays) and appends a fresh random suffix of ``suffix_len=(lo, hi)``
+    tokens.  Template tokens are deterministic in (template_seed, tenant
+    index, template) — ``template_seed`` defaults to ``seed``; pass it
+    explicitly to draw successive WAVES with fresh suffixes over the SAME
+    templates, which is what bench_serve uses to measure
+    prefill-tokens-computed vs submitted and warm-prefix TTFT."""
+    rng = np.random.default_rng(seed)
+    if template_seed is None:
+        template_seed = seed
+    templates: dict = {}
+    for ti, t in enumerate(tenants):
+        trng = np.random.default_rng((template_seed, ti))
+        templates[t] = [
+            [int(x) for x in trng.integers(1, vocab_size - 1, template_len)]
+            for _ in range(n_templates)]
+    ranks = np.arange(1, n_templates + 1, dtype=np.float64)
+    pz = ranks ** -(1.0 + skew)
+    pz /= pz.sum()
+    out = []
+    for i in range(n_requests):
+        t = tenants[int(rng.integers(0, len(tenants)))]
+        k = int(rng.choice(n_templates, p=pz))
+        slen = int(rng.integers(suffix_len[0], suffix_len[1] + 1))
+        suffix = [int(x) for x in rng.integers(1, vocab_size - 1, slen)]
+        out.append((t, Request(rid0 + i, templates[t][k] + suffix,
+                               max_new_tokens=max_new_tokens)))
+    return out
+
+
 def serve_load(engine: ServeEngine, runtime: TenantRuntime,
                tagged_requests: list) -> list:
     """Drive ``engine`` through ``(tenant, Request)`` pairs: materialize (or

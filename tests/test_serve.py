@@ -53,6 +53,22 @@ def test_slots_recycle_more_requests_than_slots():
     assert all(len(r.out_ids) == 3 for r in reqs)
 
 
+@pytest.mark.parametrize("plen", [64, 65])
+def test_prompt_at_old_prefill_width_boundary(plen):
+    """Regression for the hard-coded 64-wide prefill pad: prompts of exactly
+    64 and 65 tokens must both decode correctly (65 crosses into the next
+    derived bucket instead of silently colliding with a fixed width)."""
+    cfg = all_archs()["qwen2-0.5b"].smoke_cfg
+    b = bundle(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, slots=1, max_len=128)
+    prompt = [(3 * i) % 200 + 2 for i in range(plen)]
+    r = Request(0, prompt, max_new_tokens=4)
+    engine.submit(r)
+    engine.run()
+    assert r.out_ids == greedy_reference(cfg, params, prompt, 4)
+
+
 def test_temperature_sampling_runs():
     cfg = all_archs()["qwen2-0.5b"].smoke_cfg
     b = bundle(cfg)
